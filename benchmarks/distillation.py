@@ -1,0 +1,100 @@
+"""§4.2 / Figure 5 reproduction: dataset distillation as bilevel optimization.
+
+Inner: multinomial logistic regression trained on k distilled prototypes θ;
+outer: loss of x*(θ) on the real training set.  Implicit hypergradient via
+the stationarity condition (ridge-regularized inner, ε = 1e-3, as in the
+paper) vs differentiation of unrolled inner GD.
+
+Claims validated: (a) implicit path is ≥2× faster per outer step than
+unrolling-to-convergence (paper reports 4× end-to-end on MNIST-scale);
+(b) outer loss decreases (distillation works); (c) both give the same
+hypergradient direction.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import bilevel
+
+jax.config.update("jax_enable_x64", True)
+
+
+def make_mnist_like(key, m=256, p=64, k=10):
+    """Synthetic class-structured data (MNIST is offline-unavailable)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    protos = jax.random.normal(k1, (k, p))
+    y = jax.random.randint(k2, (m,), 0, k)
+    X = protos[y] + 0.5 * jax.random.normal(k3, (m, p))
+    return X, y, protos
+
+
+def run(emit_fn=emit):
+    key = jax.random.PRNGKey(0)
+    p, k = 64, 10
+    Xtr, ytr, _ = make_mnist_like(key, p=p, k=k)
+    eps = 1e-3
+    distilled_labels = jnp.arange(k)
+
+    def inner_obj(x, theta):
+        # x: (p, k) classifier; theta: (k, p) distilled images
+        scores = theta @ x
+        loss = -jnp.mean(jax.nn.log_softmax(scores)[
+            jnp.arange(k), distilled_labels])
+        return loss + eps * jnp.sum(x ** 2)
+
+    def inner_solver(init_x, theta):
+        # Newton-ish: LBFGS on the strongly-convex inner problem
+        from repro.core import solvers
+        return solvers.lbfgs(inner_obj, jnp.zeros((p, k)), theta,
+                             maxiter=150, stepsize=0.5, tol=1e-10)
+
+    def outer_loss(x_star, theta):
+        scores = Xtr @ x_star
+        return -jnp.mean(jax.nn.log_softmax(scores)[jnp.arange(len(ytr)),
+                                                    ytr])
+
+    theta0 = 0.01 * jax.random.normal(jax.random.fold_in(key, 3), (k, p))
+
+    # implicit hypergradient ------------------------------------------------
+    implicit = bilevel.make_implicit_inner(
+        inner_solver, inner_objective=inner_obj, solve="cg", tol=1e-8)
+
+    def outer_implicit(theta):
+        return outer_loss(implicit(None, theta), theta)
+
+    g_imp = jax.jit(jax.grad(outer_implicit))
+    t_imp = time_fn(g_imp, theta0, iters=3)
+
+    # unrolled baseline -------------------------------------------------
+    def outer_unrolled(theta, steps=400):
+        def body(x, _):
+            return x - 0.5 * jax.grad(inner_obj)(x, theta), None
+        x, _ = jax.lax.scan(body, jnp.zeros((p, k)), None, length=steps)
+        return outer_loss(x, theta)
+
+    g_unr = jax.jit(jax.grad(outer_unrolled))
+    t_unr = time_fn(g_unr, theta0, iters=3)
+
+    cos = float(jnp.vdot(g_imp(theta0), g_unr(theta0)) /
+                (jnp.linalg.norm(g_imp(theta0))
+                 * jnp.linalg.norm(g_unr(theta0))))
+
+    # short outer optimization: distillation reduces the outer loss
+    sol = bilevel.solve_bilevel(
+        outer_loss, inner_solver, theta0, None,
+        inner_objective=inner_obj, outer_steps=20, outer_lr=1.0,
+        momentum=0.9, solve="cg")
+    improved = bool(sol.outer_values[-1] < sol.outer_values[0] * 0.8)
+
+    emit_fn("fig5_distill_implicit_step", t_imp,
+            f"speedup_vs_unroll={t_unr / t_imp:.2f}x;grad_cos={cos:.4f};"
+            f"outer_improves={improved}")
+    emit_fn("fig5_distill_unrolled_step", t_unr, "")
+    return sol
+
+
+if __name__ == "__main__":
+    run()

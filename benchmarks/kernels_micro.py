@@ -1,0 +1,41 @@
+"""Pallas kernel micro-benchmarks (interpret mode — correctness-scale only;
+real perf numbers come from the §Roofline dry-run model, not CPU timing)."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+
+
+def run(emit_fn=emit):
+    key = jax.random.PRNGKey(0)
+
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import attention_ref
+    B, S, H, D = 1, 256, 4, 64
+    q = jax.random.normal(key, (B, S, H, D), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, H, D),
+                          jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, H, D),
+                          jnp.float32)
+    t = time_fn(lambda: flash_attention(q, k, v, interpret=True), iters=2)
+    t_ref = time_fn(jax.jit(attention_ref), q, k, v, iters=3)
+    emit_fn("kernel_flash_attention_interp", t, f"jnp_ref={t_ref*1e6:.1f}us")
+
+    from repro.kernels.rwkv_wkv.ops import wkv
+    N = 64
+    r = jax.random.normal(key, (1, 128, 2, N)) * 0.5
+    kk = jax.random.normal(jax.random.fold_in(key, 3), (1, 128, 2, N)) * 0.5
+    vv = jax.random.normal(jax.random.fold_in(key, 4), (1, 128, 2, N)) * 0.5
+    w = jnp.full((1, 128, 2, N), 0.9)
+    u = jnp.zeros((2, N))
+    t = time_fn(lambda: wkv(r, kk, vv, w, u, interpret=True)[0], iters=2)
+    emit_fn("kernel_rwkv_wkv_interp", t, "")
+
+    from repro.kernels.simplex_proj.ops import projection_simplex_batched
+    Y = jax.random.normal(key, (64, 128))
+    t = time_fn(lambda: projection_simplex_batched(Y, 1.0, True), iters=2)
+    emit_fn("kernel_simplex_proj_interp", t, "")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""§Roofline report: aggregate the dry-run JSONs into the per-(arch × shape)
+roofline table (compute/memory/collective terms, dominant bottleneck,
+useful-compute ratio, roofline-model MFU)."""
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+RESULTS = os.environ.get("DRYRUN_DIR", "results/dryrun")
+
+
+def load(mesh="16x16", tag=""):
+    rows = []
+    suffix = f"_{tag}.json" if tag else ".json"
+    for path in sorted(glob.glob(os.path.join(RESULTS, f"*_{mesh}{suffix}"))):
+        with open(path) as f:
+            r = json.load(f)
+        if tag == "" and r.get("tag"):
+            continue
+        rows.append(r)
+    return rows
+
+
+def run(emit_fn=emit):
+    rows = load()
+    if not rows:
+        emit_fn("roofline_report", 0.0, "no dryrun results found")
+        return []
+    for r in rows:
+        name = f"roofline_{r['arch']}_{r['shape']}"
+        if r["status"] != "ok":
+            emit_fn(name, 0.0, r["status"])
+            continue
+        t = r["roofline"]
+        emit_fn(name, t["step_time_s"] * 1e6 / 1e6,
+                f"dom={t['dominant']};mfu={t['mfu']:.4f};"
+                f"useful={t['useful_ratio']:.3f};"
+                f"compute={t['compute_s']:.3f}s;mem={t['memory_s']:.3f}s;"
+                f"coll={t['collective_s']:.3f}s")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Benchmark driver — one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  fig3   Jacobian precision (ridge; Thm 1 bound + unroll comparison)
+  fig4   multiclass-SVM hyperopt: implicit vs unrolled, 3 solvers x 2 FPs
+  fig5   dataset distillation: implicit vs unrolled bilevel
+  table2 task-driven dictionary learning vs baselines
+  fig6   molecular-dynamics position sensitivity (implicit JVP)
+  kernels micro-benchmarks of the Pallas ops (interpret mode on CPU)
+  roofline per-(arch x shape) terms from the dry-run artifacts
+"""
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of benchmark names")
+    args = ap.parse_args()
+
+    from benchmarks import (dictionary_learning, distillation,
+                            jacobian_precision, kernels_micro,
+                            molecular_dynamics, roofline_report,
+                            svm_hyperopt)
+    all_benches = {
+        "fig3": jacobian_precision.run,
+        "fig4": svm_hyperopt.run,
+        "fig5": distillation.run,
+        "table2": dictionary_learning.run,
+        "fig6": molecular_dynamics.run,
+        "kernels": kernels_micro.run,
+        "roofline": roofline_report.run,
+    }
+    names = args.only.split(",") if args.only else list(all_benches)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in names:
+        try:
+            all_benches[name]()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+            print(f"{name},nan,ERROR")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,75 @@
+"""Bilevel data reweighting of LM training — the paper's technique as a
+first-class framework feature.
+
+Outer: learn per-domain mixture weights θ (simplex) over two synthetic data
+domains, one clean and one corrupted, to minimize validation loss.
+Inner: ridge-regularized logistic LM-head fit on the θ-weighted data.
+The hypergradient flows through the inner optimum via ``custom_root`` on the
+stationarity condition — no unrolling, one CG solve per outer step.
+
+Expected outcome: the learned weights downweight the corrupted domain.
+
+Run: PYTHONPATH=src python examples/bilevel_datareweight.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import bilevel, projections
+
+jax.config.update("jax_enable_x64", True)
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    p, k = 32, 8                      # feature dim, classes
+    n_per = 128
+    kw, k1, k2, k3 = jax.random.split(key, 4)
+    w_true = jax.random.normal(kw, (p, k))
+
+    def make_domain(kk, corrupt):
+        X = jax.random.normal(kk, (n_per, p))
+        logits = X @ w_true
+        y = jnp.argmax(logits, -1)
+        if corrupt:   # random labels: harmful domain
+            y = jax.random.randint(jax.random.fold_in(kk, 9), (n_per,),
+                                   0, k)
+        return X, y
+
+    Xa, ya = make_domain(k1, corrupt=False)
+    Xb, yb = make_domain(k2, corrupt=True)
+    Xval, yval = make_domain(k3, corrupt=False)
+
+    def xent(w, X, y):
+        return -jnp.mean(jax.nn.log_softmax(X @ w)[jnp.arange(len(y)), y])
+
+    def inner_obj(w, lam):
+        # λ ∈ R²: softmax-normalized domain weights
+        mix = jax.nn.softmax(lam)
+        return (mix[0] * xent(w, Xa, ya) + mix[1] * xent(w, Xb, yb)
+                + 5e-3 * jnp.sum(w ** 2))
+
+    def inner_solver(init_w, lam):
+        from repro.core import solvers
+        return solvers.lbfgs(inner_obj, jnp.zeros((p, k)), lam,
+                             maxiter=200, stepsize=0.5, tol=1e-10)
+
+    def outer_loss(w, lam):
+        return xent(w, Xval, yval)
+
+    sol = bilevel.solve_bilevel(
+        outer_loss, inner_solver, jnp.zeros(2), None,
+        inner_objective=inner_obj, outer_steps=30, outer_lr=0.5,
+        momentum=0.9, solve="cg")
+
+    mix = jax.nn.softmax(sol.theta)
+    print(f"val loss: {sol.outer_values[0]:.4f} -> "
+          f"{sol.outer_values[-1]:.4f}")
+    print(f"learned domain weights: clean={mix[0]:.3f} "
+          f"corrupted={mix[1]:.3f}")
+    assert mix[0] > 0.7, "expected the clean domain to dominate"
+    assert sol.outer_values[-1] < sol.outer_values[0]
+    print("OK — corrupted domain downweighted via implicit hypergradients")
+
+
+if __name__ == "__main__":
+    main()

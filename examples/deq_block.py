@@ -1,0 +1,64 @@
+"""Deep-equilibrium (DEQ) transformer block with implicit-diff backward.
+
+The block's forward pass solves z* = cell(z*, x; w) with Anderson
+acceleration; the backward pass uses the paper's machinery
+(``custom_fixed_point``) so memory is O(1) in solver depth.  We verify the
+gradient against full unrolled backprop and show the memory argument.
+
+Run: PYTHONPATH=src python examples/deq_block.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import deq_fixed_point
+
+jax.config.update("jax_enable_x64", True)
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    d, d_ff = 32, 64
+    k1, k2, k3 = jax.random.split(key, 3)
+    w = {
+        "w1": 0.9 / jnp.sqrt(d) * jax.random.normal(k1, (d, d_ff)),
+        "w2": 0.9 / jnp.sqrt(d_ff) * jax.random.normal(k2, (d_ff, d)),
+    }
+    x = jax.random.normal(k3, (d,))
+
+    def cell(z, x, w):
+        """A weight-tied residual MLP block: z ← norm(x + MLP(z))."""
+        h = jnp.tanh(z @ w["w1"]) @ w["w2"]
+        out = x + 0.5 * h
+        return out / (1.0 + 0.1 * jnp.linalg.norm(out))
+
+    def loss_deq(w):
+        z = deq_fixed_point(cell, jnp.zeros(d), x, w, fwd_iters=100,
+                            fwd_tol=1e-12, bwd_solve="normal_cg",
+                            bwd_iters=200)
+        return jnp.sum(z ** 2)
+
+    def loss_unrolled(w, depth=100):
+        z = jnp.zeros(d)
+        for _ in range(depth):
+            z = cell(z, x, w)
+        return jnp.sum(z ** 2)
+
+    g_deq = jax.grad(loss_deq)(w)
+    g_unr = jax.grad(loss_unrolled)(w)
+    err = max(float(jnp.max(jnp.abs(g_deq[k] - g_unr[k]))) for k in w)
+    print(f"grad err (implicit vs 100-layer unrolled): {err:.2e}")
+    assert err < 1e-4
+
+    # the memory argument: unrolled backprop stores O(depth) activations;
+    # the DEQ backward stores ONE residual point + CG workspace.
+    depth = 100
+    act_bytes_unrolled = depth * (d + d_ff) * 8
+    act_bytes_deq = (d + d_ff) * 8 * 3
+    print(f"activation memory: unrolled ≈ {act_bytes_unrolled/1e3:.1f}KB, "
+          f"implicit ≈ {act_bytes_deq/1e3:.1f}KB "
+          f"({act_bytes_unrolled/act_bytes_deq:.0f}x)")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

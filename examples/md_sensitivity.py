@@ -1,0 +1,39 @@
+"""Molecular-dynamics sensitivity (paper §4.4, Figure 6) as a library user
+would write it: FIRE minimization + forward-mode implicit differentiation of
+particle positions with respect to particle diameter.
+
+Run: PYTHONPATH=src python examples/md_sensitivity.py
+"""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.molecular_dynamics import fire_minimize, pair_energy
+from repro.core import root_jvp
+
+jax.config.update("jax_enable_x64", True)
+
+
+def main():
+    theta = 0.6
+    x0 = jax.random.uniform(jax.random.PRNGKey(0), (32, 2))
+    x_star = fire_minimize(x0, theta)
+
+    def F(x, diameter):  # normalized forces (root at the minimum)
+        return -jax.grad(lambda x: pair_energy(x, diameter))(x)
+
+    dx = root_jvp(F, x_star, (theta,), (1.0,), solve="bicgstab",
+                  tol=1e-8, ridge=1e-8)
+    resid = float(jnp.linalg.norm(F(x_star, theta)))
+    print(f"force residual at minimum: {resid:.2e}")
+    print(f"position sensitivity ∂x*/∂θ: shape {dx.shape}, "
+          f"L1 norm {float(jnp.sum(jnp.abs(dx))):.3f}")
+    print("first 4 particles:")
+    for i in range(4):
+        print(f"  particle {i}: pos=({float(x_star[i,0]):.3f}, "
+              f"{float(x_star[i,1]):.3f})  d pos/d θ=({float(dx[i,0]):+.4f},"
+              f" {float(dx[i,1]):+.4f})")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""End-to-end driver: train a ~100M-parameter dense LM for a few hundred
+steps with the full production stack (sharding-ready step, AdamW + cosine,
+checkpointing, deterministic restart-safe data, straggler monitor).
+
+On this CPU container the default is a scaled-down width so the run
+completes in minutes; pass --full-100m on real hardware.
+
+Run: PYTHONPATH=src python examples/train_lm.py [--steps 300] [--full-100m]
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.checkpoint import CheckpointManager
+from repro.data import DataConfig, SyntheticLMStream
+from repro.optim import adamw, schedules
+from repro.runtime import (StragglerMonitor, TrainStepConfig,
+                           make_train_state, make_train_step,
+                           run_train_loop)
+
+
+def make_cfg(full: bool) -> ArchConfig:
+    if full:   # ~100M params
+        return ArchConfig(name="lm-100m", family="dense", num_layers=12,
+                          d_model=768, num_heads=12, num_kv_heads=4,
+                          d_ff=2048, vocab_size=32000)
+    return ArchConfig(name="lm-tiny", family="dense", num_layers=4,
+                      d_model=256, num_heads=4, num_kv_heads=2,
+                      d_ff=768, vocab_size=2048)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--full-100m", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+
+    cfg = make_cfg(args.full_100m)
+    optimizer = adamw(schedules.linear_warmup_cosine(
+        3e-3, warmup=20, total=args.steps), weight_decay=0.01)
+    step_fn = jax.jit(make_train_step(
+        cfg, optimizer, TrainStepConfig(microbatches=2, remat=False)))
+    state = make_train_state(cfg, optimizer, jax.random.PRNGKey(0))
+    n = sum(int(np.prod(l.shape))
+            for l in jax.tree_util.tree_leaves(state.params))
+    print(f"[train_lm] {cfg.name}: {n/1e6:.1f}M params, "
+          f"{args.steps} steps, batch {args.batch}x{args.seq}")
+
+    stream = SyntheticLMStream(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq,
+        global_batch=args.batch))
+
+    def data_iter():
+        s = 0
+        while True:
+            yield s, stream.batch_at(s)
+            s += 1
+
+    mgr = CheckpointManager(args.ckpt_dir, keep=2)
+    mon = StragglerMonitor()
+    t0 = time.perf_counter()
+    state, hist = run_train_loop(step_fn, state, data_iter(),
+                                 num_steps=args.steps,
+                                 checkpoint_manager=mgr,
+                                 checkpoint_every=100, monitor=mon,
+                                 log_every=20)
+    dt = time.perf_counter() - t0
+    for h in hist:
+        print(f"  step {int(h['step']):4d}  loss {h['loss']:.4f}")
+    first, last = hist[0]["loss"], hist[-1]["loss"]
+    print(f"[train_lm] loss {first:.3f} -> {last:.3f} in {dt:.1f}s "
+          f"({args.steps * args.batch * args.seq / dt:.0f} tok/s)")
+    assert last < first, "training failed to reduce loss"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.analysis import hlo, roofline

@@ -1,0 +1,84 @@
+"""Roofline model for TPU v5e (assignment hardware constants).
+
+Three terms per (arch × shape × mesh), all in seconds:
+
+    compute    = HLO_FLOPs   / (chips × 197e12 FLOP/s bf16)
+    memory     = HLO_bytes   / (chips × 819e9  B/s HBM)
+    collective = coll_bytes  / (chips × 50e9   B/s per ICI link)
+
+plus MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) and the useful-compute
+ratio MODEL_FLOPS / HLO_FLOPs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    model_flops: float
+    useful_ratio: float
+    chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Optimistic overlap model: max of the three engines."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilization at the roofline-predicted step time."""
+        t = self.step_time_s
+        if t == 0:
+            return 0.0
+        return self.model_flops / (t * self.chips * PEAK_FLOPS)
+
+    def to_dict(self) -> Dict:
+        return {**dataclasses.asdict(self),
+                "dominant": self.dominant,
+                "step_time_s": self.step_time_s,
+                "mfu": self.mfu}
+
+
+def analyze(cost: Dict, coll_bytes: float, chips: int,
+            model_flops: float) -> RooflineTerms:
+    """``cost``: compiled.cost_analysis() dict (flops / bytes accessed)."""
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    # cost_analysis is per-module over all devices' program: on SPMD-
+    # partitioned modules XLA reports the PER-DEVICE program cost.
+    return RooflineTerms(
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=byts / HBM_BW,
+        collective_s=coll_bytes / ICI_BW,
+        hlo_flops=flops,
+        hlo_bytes=byts,
+        collective_bytes=coll_bytes,
+        model_flops=model_flops,
+        useful_ratio=(model_flops / (flops * chips)) if flops else 0.0,
+        chips=chips)
+
+
+def model_flops_train(n_active_params: float, tokens: float) -> float:
+    return 6.0 * n_active_params * tokens
+
+
+def model_flops_decode(n_active_params: float, tokens: float) -> float:
+    return 2.0 * n_active_params * tokens

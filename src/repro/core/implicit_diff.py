@@ -1,0 +1,193 @@
+"""Automatic implicit differentiation (the paper's core contribution).
+
+Given a user-supplied optimality-condition mapping ``F(x, *theta)`` whose root
+is the solver output ``x*(theta)``, the implicit function theorem gives
+
+    -∂₁F(x*, θ) · ∂x*(θ) = ∂₂F(x*, θ)        i.e.   A J = B.
+
+We never materialize A, B or J: JVPs/VJPs of F (obtained by autodiff) feed a
+matrix-free linear solver.
+
+Public API (mirrors the paper):
+
+  * ``root_vjp`` / ``root_jvp``      — low-level products with ∂x*(θ)
+  * ``@custom_root(F)``              — decorator attaching implicit derivatives
+                                       to an arbitrary solver function
+  * ``@custom_fixed_point(T)``       — same, for fixed points x* = T(x*, θ)
+
+Conventions: the decorated solver has signature ``solver(init, *theta)`` and
+returns ``x*``.  ``F`` has signature ``F(x, *theta)`` returning a pytree of the
+same structure as ``x``.  ``theta`` may be any number of pytree arguments;
+derivatives flow to all of them.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import linear_solve as ls
+
+
+# ---------------------------------------------------------------------------
+# Low-level products with the implicit Jacobian
+# ---------------------------------------------------------------------------
+
+def root_vjp(F: Callable, x_star, theta_args: tuple, cotangent,
+             solve="normal_cg", tol: float = 1e-6, maxiter: int = 1000,
+             ridge: float = 0.0):
+    """VJP through the implicitly-defined root: returns vᵀ ∂x*(θ) per θ arg.
+
+    Solve Aᵀ u = v  (A = -∂₁F),  then  vᵀJ = uᵀB  (B = ∂₂F).
+    One linear solve serves all theta arguments (paper §2.1).
+    """
+    solve = ls.get_solver(solve)
+
+    def f_of_x(x):
+        return F(x, *theta_args)
+
+    # vjp wrt x gives u ↦ uᵀ ∂₁F;  A = -∂₁F so Aᵀ u = -(∂₁F)ᵀ u.
+    _, vjp_x = jax.vjp(f_of_x, x_star)
+
+    def At_matvec(u):
+        (out,) = vjp_x(u)
+        return jax.tree_util.tree_map(jnp.negative, out)
+
+    u = solve(At_matvec, cotangent, tol=tol, maxiter=maxiter, ridge=ridge)
+
+    # uᵀ B = uᵀ ∂₂F : one more VJP, wrt the theta args.
+    def f_of_theta(*targs):
+        return F(x_star, *targs)
+
+    _, vjp_theta = jax.vjp(f_of_theta, *theta_args)
+    return vjp_theta(u)
+
+
+def root_jvp(F: Callable, x_star, theta_args: tuple, tangents: tuple,
+             solve="normal_cg", tol: float = 1e-6, maxiter: int = 1000,
+             ridge: float = 0.0):
+    """JVP through the implicitly-defined root: J · v.
+
+    Solve A (Jv) = B v  with  Bv = ∂₂F · v  computed by one JVP of F in θ.
+    """
+    solve = ls.get_solver(solve)
+
+    def f_of_theta(*targs):
+        return F(x_star, *targs)
+
+    _, Bv = jax.jvp(f_of_theta, theta_args, tangents)
+
+    def f_of_x(x):
+        return F(x, *theta_args)
+
+    def A_matvec(v):
+        _, jv = jax.jvp(f_of_x, (x_star,), (v,))
+        return jax.tree_util.tree_map(jnp.negative, jv)
+
+    return solve(A_matvec, Bv, tol=tol, maxiter=maxiter, ridge=ridge)
+
+
+# ---------------------------------------------------------------------------
+# Decorators
+# ---------------------------------------------------------------------------
+
+def custom_root(F: Callable, solve="normal_cg", tol: float = 1e-6,
+                maxiter: int = 1000, ridge: float = 0.0,
+                has_aux: bool = False):
+    """Decorator: attach implicit differentiation to ``solver(init, *theta)``.
+
+    The returned function is differentiable (reverse mode) in every ``theta``
+    argument; the ``init`` argument is treated as non-differentiable.
+
+    ``has_aux=True`` means the solver returns ``(x_star, aux)``; only
+    ``x_star`` participates in the implicit system, ``aux`` gets zero grads.
+
+    Example (paper Fig. 1)::
+
+        F = jax.grad(f)  # stationarity condition
+
+        @custom_root(F)
+        def ridge_solver(init_x, theta): ...
+    """
+    def wrapper(solver: Callable) -> Callable:
+
+        @functools.wraps(solver)
+        def solver_fwd_like(init, *theta):
+            return solver(init, *theta)
+
+        # ``init`` is a regular (possibly array) argument: it gets a zero
+        # cotangent, since x*(θ) does not depend on the initialization.
+        fun = jax.custom_vjp(solver_fwd_like)
+
+        def fwd(init, *theta):
+            out = solver(init, *theta)
+            x_star = out[0] if has_aux else out
+            return out, (init, x_star, theta)
+
+        def bwd(res, cotangent):
+            init, x_star, theta = res
+            ct = cotangent[0] if has_aux else cotangent
+            grads = root_vjp(F, x_star, theta, ct, solve=solve, tol=tol,
+                             maxiter=maxiter, ridge=ridge)
+            zero_init = jax.tree_util.tree_map(jnp.zeros_like, init)
+            return (zero_init,) + tuple(grads)
+
+        fun.defvjp(fwd, bwd)
+        return fun
+
+    return wrapper
+
+
+def custom_fixed_point(T: Callable, solve="normal_cg", tol: float = 1e-6,
+                       maxiter: int = 1000, ridge: float = 0.0,
+                       has_aux: bool = False):
+    """Decorator for solvers of fixed points x* = T(x*, θ).
+
+    Reduces to ``custom_root`` with the residual F(x, θ) = T(x, θ) − x (eq. 3).
+    """
+    def F(x, *theta):
+        tx = T(x, *theta)
+        return jax.tree_util.tree_map(lambda a, b: a - b, tx, x)
+
+    return custom_root(F, solve=solve, tol=tol, maxiter=maxiter,
+                       ridge=ridge, has_aux=has_aux)
+
+
+# ---------------------------------------------------------------------------
+# Forward-mode wrapper: a solver with custom JVP (for jax.jacfwd / jvp use).
+# jax.custom_vjp functions do not support forward mode, so we expose a
+# separate wrapper for JVP-dominant workloads (e.g. few parameters, many
+# outputs — the molecular dynamics sensitivity experiment).
+# ---------------------------------------------------------------------------
+
+def custom_root_jvp(F: Callable, solve="normal_cg", tol: float = 1e-6,
+                    maxiter: int = 1000, ridge: float = 0.0):
+    """Like ``custom_root`` but registers a JVP rule (forward mode only)."""
+    def wrapper(solver: Callable) -> Callable:
+
+        @jax.custom_jvp
+        def fun(init, *theta):
+            return solver(init, *theta)
+
+        @fun.defjvp
+        def jvp(primals, tangents):
+            init, *theta = primals
+            _, *theta_dot = tangents
+            x_star = solver(init, *theta)
+            dx = root_jvp(F, x_star, tuple(theta), tuple(theta_dot),
+                          solve=solve, tol=tol, maxiter=maxiter, ridge=ridge)
+            return x_star, dx
+
+        return fun
+
+    return wrapper
+
+
+def custom_fixed_point_jvp(T: Callable, **kw):
+    def F(x, *theta):
+        tx = T(x, *theta)
+        return jax.tree_util.tree_map(lambda a, b: a - b, tx, x)
+    return custom_root_jvp(F, **kw)

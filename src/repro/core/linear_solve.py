@@ -1,0 +1,309 @@
+"""Matrix-free linear system solvers.
+
+All solvers take ``matvec: pytree -> pytree`` and a pytree right-hand side and
+return a pytree solution.  They are implemented with ``lax.while_loop`` so they
+can live inside jit/scan/custom_vjp bodies, and they only touch the operator
+through matrix-vector products — exactly the contract the paper's implicit
+differentiation needs (access to F only through JVPs/VJPs).
+
+Solvers:
+  * ``solve_cg``        — conjugate gradient (A symmetric PSD)
+  * ``solve_normal_cg`` — CG on the normal equations AᵀA x = Aᵀ b (general A,
+                          needs ``rmatvec`` or builds it via linear transpose)
+  * ``solve_bicgstab``  — BiCGSTAB (general square A)
+  * ``solve_gmres``     — restarted GMRES (general square A)
+  * ``solve_lu``        — dense direct solve (materializes A; small systems)
+  * ``solve_neumann``   — truncated Neumann series for I - M with ||M|| < 1
+                          (the "Jacobian-free"/unrolled-free approximation)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.flatten_util  # registers jax.flatten_util.ravel_pytree
+import jax.numpy as jnp
+from jax import lax
+
+
+# ---------------------------------------------------------------------------
+# pytree helpers
+# ---------------------------------------------------------------------------
+
+def _tree_dot(a, b):
+    leaves_a = jax.tree_util.tree_leaves(a)
+    leaves_b = jax.tree_util.tree_leaves(b)
+    return sum(jnp.vdot(x, y) for x, y in zip(leaves_a, leaves_b))
+
+
+def _tree_add(a, b, alpha=1.0):
+    return jax.tree_util.tree_map(lambda x, y: x + alpha * y, a, b)
+
+
+def _tree_sub(a, b):
+    return jax.tree_util.tree_map(lambda x, y: x - y, a, b)
+
+
+def _tree_scale(a, alpha):
+    return jax.tree_util.tree_map(lambda x: alpha * x, a)
+
+
+def _tree_zeros_like(a):
+    return jax.tree_util.tree_map(jnp.zeros_like, a)
+
+
+def _tree_l2(a):
+    return jnp.sqrt(jnp.maximum(_tree_dot(a, a).real, 0.0))
+
+
+def make_rmatvec(matvec: Callable, example_x):
+    """Build x ↦ Aᵀx from x ↦ Ax via jax.linear_transpose (paper §2.1)."""
+    transpose = jax.linear_transpose(matvec, example_x)
+
+    def rmatvec(y):
+        (out,) = transpose(y)
+        return out
+
+    return rmatvec
+
+
+def materialize_matrix(matvec: Callable, example_x) -> jnp.ndarray:
+    """Densify a matvec operating on flat vectors (diagnostics / direct solve)."""
+    flat, unravel = jax.flatten_util.ravel_pytree(example_x)
+    d = flat.shape[0]
+
+    def col(i):
+        e = jnp.zeros(d, flat.dtype).at[i].set(1.0)
+        out, _ = jax.flatten_util.ravel_pytree(matvec(unravel(e)))
+        return out
+
+    return jax.vmap(col)(jnp.arange(d)).T
+
+
+# ---------------------------------------------------------------------------
+# Conjugate gradient
+# ---------------------------------------------------------------------------
+
+def solve_cg(matvec: Callable, b, *, init=None, tol: float = 1e-6,
+             maxiter: int = 1000, ridge: float = 0.0):
+    """Conjugate gradient for symmetric positive-(semi)definite operators.
+
+    ``ridge`` adds λI damping, the common non-invertibility heuristic.
+    """
+    if ridge:
+        inner = matvec
+        matvec = lambda v: _tree_add(inner(v), v, ridge)
+    x0 = _tree_zeros_like(b) if init is None else init
+    r0 = _tree_sub(b, matvec(x0))
+    p0 = r0
+    rs0 = _tree_dot(r0, r0)
+    b_norm = _tree_l2(b)
+    atol2 = jnp.maximum(tol * b_norm, 1e-30) ** 2
+
+    def cond(state):
+        _, _, _, rs, k = state
+        return jnp.logical_and(k < maxiter, rs.real > atol2)
+
+    def body(state):
+        x, r, p, rs, k = state
+        ap = matvec(p)
+        denom = _tree_dot(p, ap)
+        alpha = rs / jnp.where(denom == 0, 1.0, denom)
+        alpha = jnp.where(denom == 0, 0.0, alpha)
+        x = _tree_add(x, p, alpha)
+        r = _tree_add(r, ap, -alpha)
+        rs_new = _tree_dot(r, r)
+        beta = rs_new / jnp.where(rs == 0, 1.0, rs)
+        p = _tree_add(r, p, beta)
+        return x, r, p, rs_new, k + 1
+
+    x, _, _, _, _ = lax.while_loop(cond, body, (x0, r0, p0, rs0, 0))
+    return x
+
+
+def solve_normal_cg(matvec: Callable, b, *, init=None, rmatvec=None,
+                    tol: float = 1e-6, maxiter: int = 1000,
+                    ridge: float = 0.0):
+    """Solve A x = b via CG on AᵀA x = Aᵀ b.  Works for any square A."""
+    example = _tree_zeros_like(b) if init is None else init
+    if rmatvec is None:
+        rmatvec = make_rmatvec(matvec, example)
+
+    def normal_mv(v):
+        return rmatvec(matvec(v))
+
+    return solve_cg(normal_mv, rmatvec(b), init=init, tol=tol,
+                    maxiter=maxiter, ridge=ridge)
+
+
+# ---------------------------------------------------------------------------
+# BiCGSTAB
+# ---------------------------------------------------------------------------
+
+def solve_bicgstab(matvec: Callable, b, *, init=None, tol: float = 1e-6,
+                   maxiter: int = 1000, ridge: float = 0.0):
+    """BiCGSTAB (van der Vorst, 1992) for general square operators."""
+    if ridge:
+        inner = matvec
+        matvec = lambda v: _tree_add(inner(v), v, ridge)
+    x0 = _tree_zeros_like(b) if init is None else init
+    r0 = _tree_sub(b, matvec(x0))
+    rhat = r0
+    b_norm = _tree_l2(b)
+    atol = jnp.maximum(tol * b_norm, 1e-30)
+
+    init_state = dict(x=x0, r=r0, p=r0, v=_tree_zeros_like(b),
+                      rho=_tree_dot(rhat, r0), alpha=jnp.asarray(1.0, b_norm.dtype),
+                      omega=jnp.asarray(1.0, b_norm.dtype), k=0,
+                      breakdown=jnp.asarray(False))
+
+    def cond(s):
+        return jnp.logical_and(
+            s["k"] < maxiter,
+            jnp.logical_and(_tree_l2(s["r"]) > atol,
+                            jnp.logical_not(s["breakdown"])))
+
+    def body(s):
+        x, r, p, rho = s["x"], s["r"], s["p"], s["rho"]
+        v = matvec(p)
+        denom = _tree_dot(rhat, v)
+        breakdown = denom == 0
+        alpha = rho / jnp.where(breakdown, 1.0, denom)
+        h = _tree_add(x, p, alpha)
+        sres = _tree_add(r, v, -alpha)
+        t = matvec(sres)
+        tt = _tree_dot(t, t)
+        omega = _tree_dot(t, sres) / jnp.where(tt == 0, 1.0, tt)
+        omega = jnp.where(tt == 0, 0.0, omega)
+        x_new = _tree_add(h, sres, omega)
+        r_new = _tree_add(sres, t, -omega)
+        rho_new = _tree_dot(rhat, r_new)
+        beta = (rho_new / jnp.where(rho == 0, 1.0, rho)) * \
+               (alpha / jnp.where(omega == 0, 1.0, omega))
+        p_new = _tree_add(r_new,
+                          _tree_add(p, v, -omega), beta)
+        return dict(x=x_new, r=r_new, p=p_new, v=v, rho=rho_new,
+                    alpha=alpha, omega=omega, k=s["k"] + 1,
+                    breakdown=jnp.logical_or(breakdown, rho == 0))
+
+    out = lax.while_loop(cond, body, init_state)
+    return out["x"]
+
+
+# ---------------------------------------------------------------------------
+# GMRES (restarted, flat-vector core)
+# ---------------------------------------------------------------------------
+
+def solve_gmres(matvec: Callable, b, *, init=None, tol: float = 1e-6,
+                restart: int = 20, maxiter: int = 50, ridge: float = 0.0):
+    """Restarted GMRES.  Flattens the pytree to run Arnoldi on a matrix basis."""
+    if ridge:
+        inner = matvec
+        matvec = lambda v: _tree_add(inner(v), v, ridge)
+
+    b_flat, unravel = jax.flatten_util.ravel_pytree(b)
+    d = b_flat.shape[0]
+    m = min(restart, d)
+
+    def mv_flat(v):
+        out, _ = jax.flatten_util.ravel_pytree(matvec(unravel(v)))
+        return out
+
+    b_norm = jnp.linalg.norm(b_flat)
+    atol = jnp.maximum(tol * b_norm, 1e-30)
+    x0 = jnp.zeros_like(b_flat) if init is None else \
+        jax.flatten_util.ravel_pytree(init)[0]
+
+    def arnoldi_cycle(x):
+        r = b_flat - mv_flat(x)
+        beta = jnp.linalg.norm(r)
+        safe_beta = jnp.where(beta == 0, 1.0, beta)
+        V = jnp.zeros((m + 1, d), b_flat.dtype).at[0].set(r / safe_beta)
+        H = jnp.zeros((m + 1, m), b_flat.dtype)
+
+        def step(carry, j):
+            V, H = carry
+            w = mv_flat(V[j])
+            # modified Gram-Schmidt against all basis vectors (masked)
+            def ortho(i, w_h):
+                w, H = w_h
+                hij = jnp.where(i <= j, jnp.vdot(V[i], w), 0.0)
+                w = w - hij * V[i]
+                H = H.at[i, j].set(jnp.where(i <= j, hij, H[i, j]))
+                return w, H
+            w, H = lax.fori_loop(0, m, ortho, (w, H))
+            hn = jnp.linalg.norm(w)
+            H = H.at[j + 1, j].set(hn)
+            V = V.at[j + 1].set(w / jnp.where(hn == 0, 1.0, hn))
+            return (V, H), None
+
+        (V, H), _ = lax.scan(step, (V, H), jnp.arange(m))
+        # least squares: min ||beta e1 - H y||
+        e1 = jnp.zeros(m + 1, b_flat.dtype).at[0].set(beta)
+        y, *_ = jnp.linalg.lstsq(H, e1, rcond=None)
+        return x + V[:m].T @ y
+
+    def cond(state):
+        x, k = state
+        r = jnp.linalg.norm(b_flat - mv_flat(x))
+        return jnp.logical_and(k < maxiter, r > atol)
+
+    def body(state):
+        x, k = state
+        return arnoldi_cycle(x), k + 1
+
+    x, _ = lax.while_loop(cond, body, (x0, 0))
+    return unravel(x)
+
+
+# ---------------------------------------------------------------------------
+# Direct and Neumann
+# ---------------------------------------------------------------------------
+
+def solve_lu(matvec: Callable, b, *, init=None, **_):
+    """Materialize A and solve densely.  For small/d≤few-thousand systems."""
+    del init
+    b_flat, unravel = jax.flatten_util.ravel_pytree(b)
+    A = materialize_matrix(matvec, b)
+    return unravel(jnp.linalg.solve(A, b_flat))
+
+
+def solve_neumann(matvec: Callable, b, *, init=None, maxiter: int = 10, **_):
+    """Approximate (I - M)⁻¹ b ≈ Σ_{k<K} Mᵏ b where matvec(v) = v - M v.
+
+    I.e. interprets ``matvec`` as A = I - M and truncates the Neumann series.
+    Matches "Jacobian-free backprop" / phantom-gradient style approximations.
+    """
+    del init
+
+    def mfun(v):  # M v = v - A v
+        return _tree_sub(v, matvec(v))
+
+    def body(carry, _):
+        acc, term = carry
+        term = mfun(term)
+        return (_tree_add(acc, term), term), None
+
+    (acc, _), _ = lax.scan(body, (b, b), None, length=maxiter)
+    return acc
+
+
+SOLVERS = {
+    "cg": solve_cg,
+    "normal_cg": solve_normal_cg,
+    "bicgstab": solve_bicgstab,
+    "gmres": solve_gmres,
+    "lu": solve_lu,
+    "neumann": solve_neumann,
+}
+
+
+def get_solver(name_or_fn):
+    if callable(name_or_fn):
+        return name_or_fn
+    try:
+        return SOLVERS[name_or_fn]
+    except KeyError:
+        raise ValueError(f"unknown linear solver {name_or_fn!r}; "
+                         f"available: {sorted(SOLVERS)}") from None

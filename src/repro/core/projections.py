@@ -1,0 +1,268 @@
+"""Differentiable projections onto convex sets (paper Appendix C.1).
+
+Euclidean projections ``projection_*`` and Bregman/KL projections
+``projection_*_kl``.  All are written with jnp primitives so that JVPs/VJPs
+come from autodiff; where the paper gives a closed-form Jacobian (simplex) we
+rely on the autodiff of the closed-form solution, which matches it a.e.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+# ---------------------------------------------------------------------------
+# Orthants, boxes, balls
+# ---------------------------------------------------------------------------
+
+def projection_non_negative(y, theta=None):
+    """C = R^d_+ : proj(y) = max(y, 0) (ReLU)."""
+    del theta
+    return jnp.maximum(y, 0.0)
+
+
+def projection_non_negative_kl(y, theta=None):
+    """KL projection onto the non-negative orthant: exp(y)."""
+    del theta
+    return jnp.exp(y)
+
+
+def projection_box(y, theta):
+    """C(θ) = [θ₁, θ₂]^d (scalars or per-coordinate arrays)."""
+    lo, hi = theta
+    return jnp.clip(y, lo, hi)
+
+
+def projection_hypercube(y, theta=None):
+    return projection_box(y, (0.0, 1.0) if theta is None else theta)
+
+
+def projection_l2_ball(y, theta=1.0):
+    """C(θ) = {x : ||x||₂ ≤ θ}."""
+    norm = jnp.linalg.norm(y)
+    scale = jnp.where(norm <= theta, 1.0, theta / jnp.maximum(norm, 1e-30))
+    return scale * y
+
+
+def projection_linf_ball(y, theta=1.0):
+    return jnp.clip(y, -theta, theta)
+
+
+def projection_l1_ball(y, theta=1.0):
+    """Projection onto the ℓ1 ball via simplex projection of |y| [33]."""
+    a = jnp.abs(y)
+    inside = jnp.sum(a) <= theta
+    p = projection_simplex(a, theta)
+    return jnp.where(inside, y, jnp.sign(y) * p)
+
+
+# ---------------------------------------------------------------------------
+# Simplex
+# ---------------------------------------------------------------------------
+
+def projection_simplex(y, scale=1.0):
+    """Euclidean projection onto the simplex {x ≥ 0, Σx = scale}.
+
+    O(d log d) sort-based algorithm [49, 33].  Differentiable a.e.; autodiff
+    of this composition yields the closed-form Jacobian diag(s) − s sᵀ/|s|₁.
+    """
+    d = y.shape[-1]
+    # -- primal threshold via sort (under stop_gradient: sort's autodiff rule
+    #    is irrelevant, and the derivative is recovered implicitly below) --
+    y_sg = lax.stop_gradient(y)
+    u = -jnp.sort(-y_sg, axis=-1)       # descending
+    cssv = jnp.cumsum(u, axis=-1) - scale
+    ind = jnp.arange(1, d + 1, dtype=y.dtype)
+    cond = u - cssv / ind > 0           # True exactly on the first rho entries
+    rho = jnp.sum(cond.astype(y.dtype), axis=-1)
+    # cssv[rho-1] = sum of the rho largest entries − scale = Σ u·cond − scale
+    tau0 = (jnp.sum(u * cond, axis=-1) - scale) / jnp.maximum(rho, 1.0)
+    # -- differentiable correction: τ is the (1-D) root of
+    #    φ(τ) = Σ max(yᵢ − τ, 0) − scale, with φ'(τ) = −|support|.  A single
+    #    Newton step from the exact τ₀ is an identity on primals but carries
+    #    the implicit-function-theorem gradient ∂τ/∂yᵢ = sᵢ/|s| (paper App. C).
+    supp = (y_sg - tau0[..., None]) > 0
+    nsupp = jnp.maximum(jnp.sum(supp.astype(y.dtype), axis=-1), 1.0)
+    phi = jnp.sum(jnp.maximum(y - tau0[..., None], 0.0), axis=-1) - scale
+    tau = tau0 + phi / nsupp
+    return jnp.maximum(y - tau[..., None], 0.0)
+
+
+def projection_simplex_kl(y, scale=1.0):
+    """KL (Bregman) projection onto the simplex = softmax (closed form)."""
+    return scale * jax.nn.softmax(y, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Affine sets, hyperplanes, halfspaces
+# ---------------------------------------------------------------------------
+
+def projection_hyperplane(y, theta):
+    """C(θ) = {x : aᵀx = b}, θ = (a, b)."""
+    a, b = theta
+    return y - (jnp.vdot(a, y) - b) / jnp.vdot(a, a) * a
+
+
+def projection_halfspace(y, theta):
+    """C(θ) = {x : aᵀx ≤ b}, θ = (a, b)."""
+    a, b = theta
+    return y - jnp.maximum(jnp.vdot(a, y) - b, 0.0) / jnp.vdot(a, a) * a
+
+
+def projection_affine_set(y, theta):
+    """C(θ) = {x : Ax = b}, θ = (A, b); A assumed full row rank."""
+    A, b = theta
+    gram = A @ A.T
+    resid = A @ y - b
+    return y - A.T @ jnp.linalg.solve(gram, resid)
+
+
+# ---------------------------------------------------------------------------
+# Box section (singly-constrained bounded QP) — solved by bisection on the
+# dual variable; differentiable via the 1-D root formula ∇x*(θ) = Bᵀ/A.
+# ---------------------------------------------------------------------------
+
+def projection_box_section(y, theta, maxiter: int = 80):
+    """Project onto {z : α ≤ z ≤ β, wᵀz = c}, θ = (alpha, beta, w, c).
+
+    Dual-primal map L(x, θ)_i = clip(w_i x + y_i, α_i, β_i) with scalar dual x
+    root of F(x, θ) = wᵀ L(x, θ) − c, found by bisection (Appendix C).
+    """
+    alpha, beta, w, c = theta
+
+    def L(x):
+        return jnp.clip(w * x + y, alpha, beta)
+
+    def phi(x):
+        return jnp.vdot(w, L(x)) - c
+
+    # bracket the root
+    wmax = jnp.max(jnp.abs(w)) + 1e-12
+    span = (jnp.max(jnp.abs(y)) + jnp.max(jnp.abs(beta)) +
+            jnp.max(jnp.abs(alpha)) + jnp.abs(c)) / wmax + 1.0
+    lo, hi = -span, span
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        val = phi(mid)
+        # phi is nondecreasing in x when w has mixed signs? Use sign test on
+        # monotone transform: phi is nondecreasing in x (each clip term is
+        # monotone in w_i x with slope w_i², ≥ 0).
+        go_right = val < 0
+        lo = jnp.where(go_right, mid, lo)
+        hi = jnp.where(go_right, hi, mid)
+        return lo, hi
+
+    lo, hi = lax.fori_loop(0, maxiter, body, (lo, hi))
+    x = 0.5 * (lo + hi)
+    # straight-through the bisection: re-express via the differentiable L and
+    # the 1-D implicit formula handled by stop_gradient + correction.
+    x = _implicit_scalar_root(phi, x)
+    return jnp.clip(w * x + y, alpha, beta)
+
+
+def _implicit_scalar_root(phi, x_hat):
+    """Return x̂ with gradients as if x were the exact root of phi (1-D IFT)."""
+    x0 = lax.stop_gradient(x_hat)
+    g = jax.grad(lambda x: phi(x))(x0)
+    g = jnp.where(jnp.abs(g) < 1e-12, 1e-12, g)
+    # x* ≈ x0 - phi(x0)/phi'(x0): Newton correction whose gradient implements
+    # the implicit function theorem for the parameters captured in phi.
+    return x0 - (phi(x0) - lax.stop_gradient(phi(x0))) / g
+
+
+# ---------------------------------------------------------------------------
+# Order simplex / isotonic regression (PAV) — Appendix C
+# ---------------------------------------------------------------------------
+
+def _isotonic_pav(y):
+    """Pool-adjacent-violators for isotonic regression (non-increasing).
+
+    O(d²) lax implementation (d is small in the paper's uses); returns the
+    projection of y onto {x₁ ≥ x₂ ≥ ... ≥ x_d}.
+    """
+    d = y.shape[-1]
+
+    def body(x, _):
+        # one sweep of neighbor pooling: where x violates, average pools.
+        viol = x[:-1] < x[1:]
+        any_v = jnp.any(viol)
+
+        def fix(x):
+            # pool each adjacent violating pair (Jacobi-style sweep)
+            avg = 0.5 * (x[:-1] + x[1:])
+            left = jnp.where(viol, avg, x[:-1])
+            right = jnp.where(viol, avg, x[1:])
+            x = x.at[:-1].set(left)
+            x = x.at[1:].set(jnp.where(viol, right, x[1:]))
+            return x
+
+        return jnp.where(any_v, fix(x), x), None
+
+    x, _ = lax.scan(body, y, None, length=4 * d)
+    return x
+
+
+def projection_order_simplex(y, theta=(1.0, 0.0)):
+    """Project onto {θ₁ ≥ x₁ ≥ ... ≥ x_d ≥ θ₂} = clip(isotonic(y))."""
+    hi, lo = theta
+    return jnp.clip(_isotonic_pav(y), lo, hi)
+
+
+# ---------------------------------------------------------------------------
+# Transportation polytope (Sinkhorn, KL geometry) — Appendix C
+# ---------------------------------------------------------------------------
+
+def projection_transport_kl(y, theta, num_iters: int = 100):
+    """KL projection of exp(y) onto U(a, b) = {X1 = a, Xᵀ1 = b, X ≥ 0}.
+
+    Sinkhorn iterations in log space; θ = (a, b) marginals.  Differentiable
+    by unrolling (few iters) or wrap with custom_fixed_point for implicit.
+    """
+    a, b = theta
+    log_a, log_b = jnp.log(a), jnp.log(b)
+    f = jnp.zeros_like(a)
+    g = jnp.zeros_like(b)
+
+    def body(carry, _):
+        f, g = carry
+        f = log_a - jax.nn.logsumexp(y + g[None, :], axis=1)
+        g = log_b - jax.nn.logsumexp(y + f[:, None], axis=0)
+        return (f, g), None
+
+    (f, g), _ = lax.scan(body, (f, g), None, length=num_iters)
+    return jnp.exp(y + f[:, None] + g[None, :])
+
+
+def projection_birkhoff_kl(y, num_iters: int = 100):
+    d = y.shape[-1]
+    u = jnp.full((d,), 1.0 / d)
+    return projection_transport_kl(y, (u, u), num_iters)
+
+
+# ---------------------------------------------------------------------------
+# Polyhedra via KKT (generic) are handled by repro.core.optimality.kkt;
+# cones for the conic residual map (18):
+# ---------------------------------------------------------------------------
+
+def projection_zero_cone(y):
+    return jnp.zeros_like(y)
+
+
+def projection_free_cone(y):
+    return y
+
+
+def projection_second_order_cone(y):
+    """Project (t, x) onto {(t, x): ||x|| ≤ t}."""
+    t, x = y[0], y[1:]
+    nx = jnp.linalg.norm(x)
+    in_cone = nx <= t
+    in_polar = nx <= -t
+    alpha = (t + nx) / 2.0
+    scale = alpha / jnp.maximum(nx, 1e-30)
+    proj = jnp.concatenate([jnp.array([alpha]), scale * x])
+    out = jnp.where(in_cone, y, jnp.where(in_polar, jnp.zeros_like(y), proj))
+    return out

@@ -1,0 +1,62 @@
+"""Proximity operators (paper Appendix C.2).
+
+All are closed-form jnp compositions → differentiable a.e. by autodiff.
+Signature convention: ``prox(y, hyperparams, scaling=1.0)`` computes
+
+    argmin_x  (1/2)||x − y||² + scaling · g(x, hyperparams).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def prox_none(y, hyperparams=None, scaling=1.0):
+    del hyperparams, scaling
+    return y
+
+
+def prox_lasso(y, lam=1.0, scaling=1.0):
+    """Soft thresholding: prox of scaling·λ‖x‖₁ (λ may be per-coordinate)."""
+    thr = scaling * lam
+    return jnp.sign(y) * jnp.maximum(jnp.abs(y) - thr, 0.0)
+
+
+def prox_non_negative_lasso(y, lam=1.0, scaling=1.0):
+    return jnp.maximum(y - scaling * lam, 0.0)
+
+
+def prox_elastic_net(y, hyperparams=(1.0, 1.0), scaling=1.0):
+    """prox of scaling·(λ‖x‖₁ + (γ/2)‖x‖²)."""
+    lam, gamma = hyperparams
+    st = prox_lasso(y, lam, scaling)
+    return st / (1.0 + scaling * gamma)
+
+
+def prox_ridge(y, gamma=1.0, scaling=1.0):
+    return y / (1.0 + scaling * gamma)
+
+
+def prox_group_lasso(y, lam=1.0, scaling=1.0):
+    """Block soft thresholding on the last axis (one group per row)."""
+    thr = scaling * lam
+    norm = jnp.linalg.norm(y, axis=-1, keepdims=True)
+    scale = jnp.maximum(1.0 - thr / jnp.maximum(norm, 1e-30), 0.0)
+    return scale * y
+
+
+def prox_log_barrier(y, mu=1.0, scaling=1.0):
+    """prox of −scaling·μ Σ log(xᵢ): positive root of x² − xy − sμ = 0."""
+    s = scaling * mu
+    return 0.5 * (y + jnp.sqrt(y * y + 4.0 * s))
+
+
+PROX_OPERATORS = {
+    "none": prox_none,
+    "lasso": prox_lasso,
+    "nn_lasso": prox_non_negative_lasso,
+    "elastic_net": prox_elastic_net,
+    "ridge": prox_ridge,
+    "group_lasso": prox_group_lasso,
+    "log_barrier": prox_log_barrier,
+}

@@ -1,0 +1,3 @@
+from repro.distributed.sharding import (ShardingRules, params_specs,
+                                        batch_spec, decode_state_specs,
+                                        kv_cache_spec, named)

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+flash_attention/ — blockwise online-softmax attention (train/prefill)
+rwkv_wkv/        — RWKV-6 WKV chunked recurrence (the SSM hot loop)
+simplex_proj/    — batched simplex projection (the paper's hot operator in
+                   the multiclass-SVM experiment), sort-free bisection form
+
+Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper with the public API) and ref.py (pure-jnp oracle); tests sweep
+shapes/dtypes in interpret=True mode against the oracle.
+"""

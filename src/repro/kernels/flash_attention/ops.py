@@ -1,0 +1,29 @@
+"""Public flash-attention op: (B, S, H, D) API with GQA group folding."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False):
+    """q: (B, S, H, D); k/v: (B, S, Hkv, D) with H % Hkv == 0.
+    Returns (B, S, H, D)."""
+    B, Sq, H, D = q.shape
+    Hkv = k.shape[2]
+    group = H // Hkv
+    if group > 1:   # GQA: repeat kv heads (kernel sees equal head counts)
+        k = jnp.repeat(k, group, axis=2)
+        v = jnp.repeat(v, group, axis=2)
+    qt = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kt = k.transpose(0, 2, 1, 3).reshape(B * H, -1, D)
+    vt = v.transpose(0, 2, 1, 3).reshape(B * H, -1, D)
+    out = flash_attention_bhsd(qt, kt, vt, causal=causal, block_q=block_q,
+                               block_k=block_k, interpret=interpret)
+    return out.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)

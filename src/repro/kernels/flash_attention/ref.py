@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for flash attention."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal: bool = True) -> jnp.ndarray:
+    """q,k,v: (B, S, H, D) same head count (GQA folded outside).
+    Returns (B, S, H, D).  f32 softmax, output in q.dtype."""
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(D)
+    if causal:
+        mask = jnp.arange(Sk)[None, :] <= jnp.arange(Sq)[:, None] \
+            + (Sk - Sq)
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

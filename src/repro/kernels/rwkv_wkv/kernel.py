@@ -1,0 +1,80 @@
+"""RWKV-6 WKV recurrence as a Pallas TPU kernel.
+
+TPU adaptation of the CUDA wkv6 kernel (which uses one thread block per
+(batch, head) with shared-memory tiles): here one GRID STEP per (batch·head,
+time-chunk), executed sequentially along the time axis, with the (N×N) state
+matrix resident in VMEM scratch across chunks — the TPU analogue of keeping
+state in registers/smem.  Within a chunk the recurrence is a fori_loop of
+rank-1 updates; N = 64 matches the VPU lane width so the row operations are
+fully vectorized.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, o_ref, sT_ref,
+                state_scr, *, chunk: int):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_scr[...] = s0_ref[0].astype(jnp.float32)
+
+    u = u_ref[0].astype(jnp.float32)            # (N,)
+
+    def step(t, state):
+        rt = r_ref[0, t].astype(jnp.float32)    # (N,)
+        kt = k_ref[0, t].astype(jnp.float32)
+        vt = v_ref[0, t].astype(jnp.float32)
+        wt = w_ref[0, t].astype(jnp.float32)
+        kv = kt[:, None] * vt[None, :]          # (N, N) rank-1
+        out = jnp.sum((state + u[:, None] * kv) * rt[:, None], axis=0)
+        o_ref[0, t] = out.astype(o_ref.dtype)
+        return wt[:, None] * state + kv
+
+    state = jax.lax.fori_loop(0, chunk, step, state_scr[...])
+    state_scr[...] = state
+
+    @pl.when(ic == pl.num_programs(1) - 1)
+    def _final():
+        sT_ref[0] = state_scr[...]
+
+
+def wkv_bh(r, k, v, w, u, s0, *, chunk: int = 64, interpret: bool = False):
+    """r,k,v,w: (BH, T, N); u: (BH, N); s0: (BH, N, N) f32.
+    Returns (out (BH, T, N), final_state (BH, N, N))."""
+    BH, T, N = r.shape
+    chunk = min(chunk, T)
+    assert T % chunk == 0, (T, chunk)
+    grid = (BH, T // chunk)
+
+    kernel = functools.partial(_wkv_kernel, chunk=chunk)
+    out, sT = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, N), lambda b, ic: (b, ic, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, ic: (b, ic, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, ic: (b, ic, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, ic: (b, ic, 0)),
+            pl.BlockSpec((1, N), lambda b, ic: (b, 0)),
+            pl.BlockSpec((1, N, N), lambda b, ic: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, N), lambda b, ic: (b, ic, 0)),
+            pl.BlockSpec((1, N, N), lambda b, ic: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, T, N), r.dtype),
+            jax.ShapeDtypeStruct((BH, N, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, N), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, s0)
+    return out, sT

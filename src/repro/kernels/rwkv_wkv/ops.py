@@ -1,0 +1,30 @@
+"""Public WKV op: (B, T, H, N) API matching the model's reference scan."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv_wkv.kernel import wkv_bh
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv(r, k, v, w, u, state0=None, chunk: int = 64,
+        interpret: bool = False):
+    """r,k,v,w: (B, T, H, N); u: (H, N); state0: (B, H, N, N) f32 or None.
+    Returns (out (B,T,H,N), final state (B,H,N,N)) — same contract as
+    repro.models.rwkv.wkv_scan_ref."""
+    B, T, H, N = r.shape
+    if state0 is None:
+        state0 = jnp.zeros((B, H, N, N), jnp.float32)
+
+    def fold(x):
+        return x.transpose(0, 2, 1, 3).reshape(B * H, T, N)
+
+    u_b = jnp.broadcast_to(u[None], (B, H, N)).reshape(B * H, N)
+    s0 = state0.reshape(B * H, N, N)
+    out, sT = wkv_bh(fold(r), fold(k), fold(v), fold(w), u_b, s0,
+                     chunk=chunk, interpret=interpret)
+    out = out.reshape(B, H, T, N).transpose(0, 2, 1, 3)
+    return out, sT.reshape(B, H, N, N)

@@ -1,0 +1,3 @@
+"""Pure-jnp oracle for the RWKV-6 WKV recurrence (re-export of the model's
+reference scan so kernel tests and the model share one source of truth)."""
+from repro.models.rwkv import wkv_scan_ref  # noqa: F401

@@ -1,0 +1,61 @@
+"""Batched simplex projection as a Pallas TPU kernel.
+
+The paper's multiclass-SVM experiment projects every row of an (m × k) dual
+matrix onto the simplex each iteration — the hot operator of §4.1.  The
+classic O(d log d) algorithm sorts each row, but sorting maps poorly onto the
+TPU vector unit.  TPU adaptation: the threshold τ solves the 1-D monotone
+equation
+
+    φ(τ) = Σᵢ max(yᵢ − τ, 0) − scale = 0,
+
+so we find it by **vectorized bisection** (~f32-mantissa-many iterations ⇒
+exact to machine precision), entirely with VPU max/sum ops on a VMEM-resident
+block of rows.  No sort, no gather — every iteration is a fused
+compare/select/reduce over the (rows_block × d) tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _simplex_kernel(y_ref, o_ref, *, scale: float, iters: int):
+    y = y_ref[...].astype(jnp.float32)                  # (rows, d)
+    d = y.shape[-1]
+    hi = jnp.max(y, axis=-1)                            # τ ∈ [max−scale/d? , max]
+    lo = hi - 1.0 * scale                               # φ(lo) ≥ 0 ≥ φ(hi)
+    lo = jnp.minimum(lo, jnp.min(y, axis=-1) - scale / d)
+
+    def body(i, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        phi = jnp.sum(jnp.maximum(y - mid[:, None], 0.0), axis=-1) - scale
+        go_right = phi > 0                              # τ too small
+        lo = jnp.where(go_right, mid, lo)
+        hi = jnp.where(go_right, hi, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    tau = 0.5 * (lo + hi)
+    o_ref[...] = jnp.maximum(y - tau[:, None], 0.0).astype(o_ref.dtype)
+
+
+def projection_simplex_rows(y, scale: float = 1.0, rows_block: int = 8,
+                            iters: int = 50, interpret: bool = False):
+    """y: (R, d) — project every row onto the scale-simplex."""
+    R, d = y.shape
+    rows_block = min(rows_block, R)
+    assert R % rows_block == 0, (R, rows_block)
+    kernel = functools.partial(_simplex_kernel, scale=scale, iters=iters)
+    return pl.pallas_call(
+        kernel,
+        grid=(R // rows_block,),
+        in_specs=[pl.BlockSpec((rows_block, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rows_block, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, d), y.dtype),
+        interpret=interpret,
+    )(y)

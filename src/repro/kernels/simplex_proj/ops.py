@@ -1,0 +1,41 @@
+"""Public batched-simplex-projection op with custom (implicit) JVP.
+
+The bisection kernel is exact but autodiff-opaque (fori_loop over selects);
+we attach the closed-form Jacobian from the paper (App. C):
+
+    ∂proj(y) = diag(s) − s sᵀ / |s|₁,   s = 1[proj(y) > 0]
+
+via jax.custom_jvp — the same implicit-differentiation move the paper makes,
+applied at the kernel boundary.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.simplex_proj.kernel import projection_simplex_rows
+
+
+@functools.partial(jax.custom_jvp, nondiff_argnums=(1, 2))
+def projection_simplex_batched(y, scale: float = 1.0,
+                               interpret: bool = False):
+    """y: (..., d) → row-wise simplex projection (Pallas bisection kernel)."""
+    shape = y.shape
+    flat = y.reshape(-1, shape[-1])
+    R = flat.shape[0]
+    rows_block = 8 if R % 8 == 0 else (4 if R % 4 == 0 else 1)
+    out = projection_simplex_rows(flat, scale=scale, rows_block=rows_block,
+                                  interpret=interpret)
+    return out.reshape(shape)
+
+
+@projection_simplex_batched.defjvp
+def _jvp(scale, interpret, primals, tangents):
+    (y,), (dy,) = primals, tangents
+    x = projection_simplex_batched(y, scale, interpret)
+    s = (x > 0).astype(dy.dtype)
+    inner = jnp.sum(s * dy, axis=-1, keepdims=True) / \
+        jnp.maximum(jnp.sum(s, axis=-1, keepdims=True), 1.0)
+    return x, s * (dy - inner)

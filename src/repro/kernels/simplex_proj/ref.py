@@ -1,0 +1,2 @@
+"""Oracle: the sort-based simplex projection from the core library."""
+from repro.core.projections import projection_simplex as projection_simplex_ref  # noqa: F401

@@ -1,0 +1,301 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) on the production
+mesh and extract the roofline terms.
+
+MUST be run as its own process (the XLA_FLAGS line above executes before any
+other import so jax sees 512 host devices).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-405b \
+        --shape train_4k [--multi-pod] [--out results/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.analysis import hlo as hlo_an
+from repro.analysis import roofline as rf
+from repro.configs.base import ArchConfig
+from repro.distributed import sharding as shd
+from repro.launch import shapes as shp
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as mdl
+from repro.optim import optimizer as opt
+from repro.runtime import train_loop as tl
+
+
+def _rules(multi_pod: bool, layout: str = "2d") -> shd.ShardingRules:
+    """``2d``: FSDP(data) × TP(model).  ``dp``: pure data parallelism over
+    BOTH axes (the right layout for small-activation archs where TP only
+    buys collective traffic — §Perf G3)."""
+    pod = "pod" if multi_pod else None
+    if layout == "dp":
+        return shd.ShardingRules(data=("data", "model"), model=None,
+                                 pod=pod)
+    return shd.ShardingRules(pod=pod)
+
+
+def _attn_tp(cfg, mesh, rules):
+    """TP on attention projections only when the heads divide the axis."""
+    n_model = shd.mesh_axis_size(mesh, rules.model)
+    if cfg.use_mla:
+        return cfg.num_heads % n_model == 0
+    return (cfg.num_heads % n_model == 0
+            and cfg.num_kv_heads * cfg.resolved_head_dim % n_model == 0)
+
+
+def _train_state_specs(abstract_state, rules, mesh, attn_tp=True):
+    pspecs = shd.params_specs(abstract_state.params, rules, mesh,
+                              attn_tp=attn_tp)
+    mu = shd.params_specs(abstract_state.opt_state.mu, rules, mesh,
+                          attn_tp=attn_tp)
+    nu = (shd.params_specs(abstract_state.opt_state.nu, rules, mesh,
+                           attn_tp=attn_tp)
+          if abstract_state.opt_state.nu is not None else None)
+    return tl.TrainState(
+        params=pspecs,
+        opt_state=opt.OptState(step=P(), mu=mu, nu=nu),
+        err_state=None)
+
+
+def lower_cell(arch: str, shape: str, multi_pod: bool = False,
+               microbatches: int = 16, fsdp: bool = True,
+               donate: bool = True, extra_tag: str = "",
+               layout: str = "2d", remat_policy: str = "nothing",
+               seq_parallel: bool = False, grad_accum_bf16: bool = False,
+               moe_dispatch: str = "dense"):
+    """Lower + compile one (arch × shape × mesh) cell; return result dict."""
+    cfg = configs.get(arch)
+    reason = shp.skip_reason(cfg, shape)
+    if reason:
+        return {"arch": arch, "shape": shape,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "skipped", "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = _rules(multi_pod, layout)
+    chips = 512 if multi_pod else 256
+    cell = shp.SHAPES[shape]
+    specs = shp.input_specs(cfg, shape)
+    t0 = time.time()
+
+    def N(spec_tree):
+        return shd.named(mesh, spec_tree)
+
+    if True:
+        if cell.kind == "train":
+            optimizer = opt.adamw(1e-4, state_dtype=jnp.bfloat16)
+            attn_tp = _attn_tp(cfg, mesh, rules)
+            mb = microbatches if cell.global_batch % microbatches == 0 else 1
+            mb_shard = jax.sharding.NamedSharding(
+                mesh, P(None, rules.batch_axes))
+            act_shard = jax.sharding.NamedSharding(
+                mesh, P(rules.batch_axes, None, None))
+            pspecs_for_grads = shd.params_specs(
+                jax.eval_shape(lambda k: mdl.init_params(k, cfg),
+                               jax.random.PRNGKey(0)), rules, mesh,
+                attn_tp=attn_tp)
+            grad_shard = jax.tree_util.tree_map(
+                lambda s: jax.sharding.NamedSharding(mesh, s),
+                pspecs_for_grads,
+                is_leaf=lambda x: isinstance(x, P))
+            sp_shard = None
+            if seq_parallel and layout == "2d":
+                sp_shard = jax.sharding.NamedSharding(
+                    mesh, P(rules.batch_axes, "model", None))
+            tcfg = tl.TrainStepConfig(microbatches=mb, remat=True,
+                                      remat_policy=remat_policy,
+                                      microbatch_sharding=mb_shard,
+                                      act_sharding=act_shard,
+                                      grad_sharding=grad_shard,
+                                      sp_sharding=sp_shard,
+                                      moe_dispatch=moe_dispatch,
+                                      grad_accum_dtype=(
+                                          jnp.bfloat16 if grad_accum_bf16
+                                          else jnp.float32))
+            step_fn = tl.make_train_step(cfg, optimizer, tcfg)
+            abstract = tl.make_train_state_abstract(cfg, optimizer)
+            state_specs = _train_state_specs(abstract, rules, mesh,
+                                             attn_tp=attn_tp)
+            in_shardings = (N(state_specs),
+                            N(shd.batch_spec(rules)),
+                            N(shd.batch_spec(rules)))
+            out_shardings = (N(state_specs), None)
+            jitted = jax.jit(step_fn, in_shardings=in_shardings,
+                             out_shardings=out_shardings,
+                             donate_argnums=(0,) if donate else ())
+            lowered = jitted.lower(abstract, specs["inputs"],
+                                   specs["labels"])
+        elif cell.kind == "prefill":
+            act_shard = jax.sharding.NamedSharding(
+                mesh, P(rules.batch_axes, None, None))
+            step_fn = tl.make_prefill_step(cfg, act_sharding=act_shard)
+
+            def prefill_last(params, inputs):
+                logits = step_fn(params, inputs)
+                return logits[:, -1]          # serving: last-position logits
+
+            abstract_params = mdl.init_params_abstract(
+                jax.random.PRNGKey(0), cfg)
+            pspecs = shd.params_specs(abstract_params, rules, mesh,
+                                      attn_tp=_attn_tp(cfg, mesh, rules))
+            jitted = jax.jit(
+                prefill_last,
+                in_shardings=(N(pspecs), N(shd.batch_spec(rules))),
+                out_shardings=N(jax.sharding.PartitionSpec(
+                    rules.batch_axes)))
+            lowered = jitted.lower(abstract_params, specs["inputs"])
+        else:  # decode
+            step_fn = tl.make_decode_step(cfg)
+            abstract_params = mdl.init_params_abstract(
+                jax.random.PRNGKey(0), cfg)
+            pspecs = shd.params_specs(abstract_params, rules, mesh,
+                                      attn_tp=_attn_tp(cfg, mesh, rules))
+            seq_shard = cell.global_batch == 1
+            abstract_state = jax.eval_shape(
+                lambda: mdl.init_decode_state(cfg, cell.global_batch,
+                                              cell.seq_len))
+            sspecs_caches = shd.decode_state_specs(
+                abstract_state.caches, rules, cfg, mesh,
+                seq_shard=seq_shard)
+            sspecs = mdl.DecodeState(caches=sspecs_caches, index=P())
+            # batch=1 (long_500k): tokens/logits replicate; the cache is
+            # sequence-sharded instead
+            tok_spec = P() if seq_shard else shd.batch_spec(rules)
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(N(pspecs), N(sspecs), N(tok_spec)),
+                out_shardings=(N(tok_spec), N(sspecs)),
+                donate_argnums=(1,) if donate else ())
+            lowered = jitted.lower(abstract_params, abstract_state,
+                                   specs["tokens"])
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    xla_cost = compiled.cost_analysis()
+    xla_cost = xla_cost[0] if isinstance(xla_cost, (list, tuple)) \
+        else xla_cost
+    text = compiled.as_text()
+    # loop-aware analysis (XLA's HloCostAnalysis counts scan bodies once;
+    # see repro.analysis.hlo docstring)
+    costs = hlo_an.analyze_module(text)
+    coll = {k: int(v) for k, v in costs.per_collective.items()}
+    coll["total"] = int(costs.collective_bytes)
+    counts = dict(costs.collective_ops)
+
+    n_active = cfg.active_param_count()
+    toks = shp.tokens_per_step(cfg, shape)
+    model_flops = (rf.model_flops_train(n_active, toks)
+                   if cell.kind == "train"
+                   else rf.model_flops_decode(n_active, toks))
+    terms = rf.analyze({"flops": costs.flops,
+                        "bytes accessed": costs.hbm_bytes},
+                       costs.collective_bytes, chips, model_flops)
+
+    def _mem(attr):
+        v = getattr(mem, attr, None)
+        return int(v) if v is not None else None
+
+    result = {
+        "arch": arch, "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "ok",
+        "tag": extra_tag,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": _mem("argument_size_in_bytes"),
+            "output_bytes": _mem("output_size_in_bytes"),
+            "temp_bytes": _mem("temp_size_in_bytes"),
+            "generated_code_bytes": _mem("generated_code_size_in_bytes"),
+        },
+        "collective_bytes": coll,
+        "collective_ops": counts,
+        "xla_cost_analysis": {
+            "flops": float(xla_cost.get("flops", 0.0)),
+            "bytes_accessed": float(xla_cost.get("bytes accessed", 0.0)),
+            "note": "loop bodies counted once by XLA; see roofline for "
+                    "loop-aware numbers",
+        },
+        "roofline": terms.to_dict(),
+    }
+    return result
+
+
+CELLS = [(a, s) for a in configs.names()
+         for s in shp.SHAPES]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=16)
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--layout", default="2d", choices=["2d", "dp"])
+    ap.add_argument("--remat-policy", default="nothing",
+                    choices=["nothing", "dots", "dots_no_batch"])
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--grad-accum-bf16", action="store_true")
+    ap.add_argument("--moe-dispatch", default="dense",
+                    choices=["dense", "sparse"])
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    cells = CELLS if args.all else [(args.arch, args.shape)]
+    failures = 0
+    for arch, shape in cells:
+        mesh_tag = "2x16x16" if args.multi_pod else "16x16"
+        suffix = f"_{args.tag}" if args.tag else ""
+        fname = os.path.join(
+            args.out, f"{arch}_{shape}_{mesh_tag}{suffix}.json")
+        if os.path.exists(fname):
+            print(f"[skip-cached] {fname}")
+            continue
+        print(f"[dryrun] {arch} × {shape} × {mesh_tag} ...", flush=True)
+        try:
+            res = lower_cell(arch, shape, multi_pod=args.multi_pod,
+                             microbatches=args.microbatches,
+                             fsdp=not args.no_fsdp, extra_tag=args.tag,
+                             layout=args.layout,
+                             remat_policy=args.remat_policy,
+                             seq_parallel=args.seq_parallel,
+                             grad_accum_bf16=args.grad_accum_bf16,
+                             moe_dispatch=args.moe_dispatch)
+        except Exception as e:
+            failures += 1
+            res = {"arch": arch, "shape": shape, "mesh": mesh_tag,
+                   "status": "error", "error": repr(e),
+                   "traceback": traceback.format_exc()}
+        with open(fname, "w") as f:
+            json.dump(res, f, indent=1)
+        status = res["status"]
+        extra = ""
+        if status == "ok":
+            r = res["roofline"]
+            extra = (f" dom={r['dominant']} mfu={r['mfu']:.3f} "
+                     f"compile={res['compile_s']}s")
+        elif status == "error":
+            extra = " " + res["error"][:120]
+        print(f"  -> {status}{extra}", flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Serving launcher: batched prefill + decode with a KV cache.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-4b --smoke \
+        --batch 4 --prompt-len 16 --gen 16
+
+Implements the production serve loop shape: one prefill pass fills the
+cache, then decode steps run one token/step for the whole batch (greedy).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models import (decode_step, forward, init_decode_state,
+                          init_params)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.names())
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch, smoke=args.smoke)
+    if not cfg.has_decoder:
+        raise SystemExit(f"{cfg.name} is encoder-only; nothing to decode")
+    key = jax.random.PRNGKey(args.seed)
+    params = init_params(key, cfg)
+    B, P, G = args.batch, args.prompt_len, args.gen
+
+    if cfg.embedding_frontend == "stub_embeddings":
+        prompts = jax.random.normal(key, (B, P, cfg.d_model))
+        def embed_tok(tok):
+            return jax.random.normal(jax.random.fold_in(key, 1),
+                                     (B, 1, cfg.d_model))
+    else:
+        prompts = jax.random.randint(key, (B, P), 0, cfg.vocab_size)
+        embed_tok = None
+
+    state = init_decode_state(cfg, B, P + G)
+    step = jax.jit(lambda p, s, t: decode_step(p, cfg, s, t))
+
+    # prefill: feed the prompt through decode steps (cache-filling).  A
+    # chunked prefill (full forward + cache scatter) is the optimized path
+    # exercised by the prefill_32k dry-run cells.
+    t0 = time.perf_counter()
+    logits = None
+    for i in range(P):
+        tok = prompts[:, i:i + 1]
+        logits, state = step(params, state, tok)
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+
+    generated = []
+    t0 = time.perf_counter()
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+    for _ in range(G):
+        if embed_tok is not None:
+            inp = embed_tok(tok)
+        else:
+            inp = tok
+        logits, state = step(params, state, inp)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        generated.append(tok)
+    jax.block_until_ready(logits)
+    t_decode = time.perf_counter() - t0
+
+    out = jnp.concatenate(generated, axis=1)
+    print(f"[serve] arch={cfg.name} batch={B} prompt={P} gen={G}")
+    print(f"[serve] prefill={t_prefill*1e3:.1f}ms "
+          f"decode={t_decode*1e3:.1f}ms "
+          f"({B * G / max(t_decode, 1e-9):.1f} tok/s)")
+    print(f"[serve] sample tokens: {out[0, :8].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Model zoo: dense GQA/MLA transformers, MoE, RWKV-6, Mamba-2 hybrid."""
+from repro.models.model import (init_params, init_params_abstract, forward,
+                                loss_fn, init_decode_state, decode_step,
+                                DecodeState)

@@ -1,0 +1,412 @@
+"""Shared neural layers for the model zoo.
+
+Functional style: each layer is ``init(key, cfg, ...) -> params`` plus
+``apply(params, x, ...) -> y``.  Everything is pure JAX (pjit/GSPMD sharding
+is applied from outside via PartitionSpec trees; see repro.distributed).
+
+Attention comes in three flavours:
+  * GQA multi-head attention with RoPE (optionally M-RoPE) and QKV bias
+  * MLA (DeepSeek-V2 multi-head latent attention, kv_lora compression)
+  * decode-mode variants operating against a KV cache
+
+The attention inner product can be routed through the Pallas flash-attention
+kernel (``repro.kernels``) or the pure-jnp reference; selectable per call so
+dry-runs/smoke tests stay kernel-free on CPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jnp.ndarray:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    # compute in f32 for stability, cast back
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params: Params, x: jnp.ndarray,
+              eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (RoPE + Qwen2-VL M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float, positions: jnp.ndarray
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """positions: (..., seq) int32 -> cos/sin of shape (..., seq, head_dim//2)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                      dtype=jnp.float32) / head_dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray,
+               sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); cos/sin: (..., seq, head_dim//2)."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    c = cos[..., :, None, :]
+    s = sin[..., :, None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mrope_positions(batch: int, seq: int,
+                    sections=(16, 24, 24)) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE position ids, text-only fallback: all three
+    channels (temporal, h, w) share the 1-D position.  Returns (3, B, S)."""
+    pos = jnp.broadcast_to(jnp.arange(seq)[None, :], (batch, seq))
+    return jnp.stack([pos, pos, pos], axis=0)
+
+
+def apply_mrope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+                sections=None) -> jnp.ndarray:
+    """M-RoPE: the head_dim/2 frequency slots are split into 3 sections fed
+    by (t, h, w) position channels.  positions: (3, B, S).
+
+    Default sections follow Qwen2-VL's (16, 24, 24) 1:1.5:1.5 split, scaled
+    to the actual head_dim (exact (16,24,24) at head_dim=128)."""
+    head_dim = x.shape[-1]
+    half = head_dim // 2
+    if sections is None:
+        t = half // 4
+        rem = half - t
+        sections = (t, rem - rem // 2, rem // 2)
+    assert sum(sections) == half, (sections, half)
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                      dtype=jnp.float32) / head_dim))
+    # section id of each frequency slot
+    sec = jnp.repeat(jnp.arange(3), jnp.asarray(sections), total_repeat_length=half)
+    pos_per_slot = positions.astype(jnp.float32)[sec]        # (half, B, S)
+    ang = jnp.moveaxis(pos_per_slot, 0, -1) * inv             # (B, S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    return apply_rope(x, cos, sin)
+
+
+# ---------------------------------------------------------------------------
+# Feed-forward blocks
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg: ArchConfig, d_ff: Optional[int] = None) -> Params:
+    d, dt = cfg.d_model, _dtype(cfg)
+    d_ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.mlp_activation == "silu":      # gated (SwiGLU): 3 matrices
+        return {"w_gate": dense_init(k1, d, d_ff, dt),
+                "w_up": dense_init(k2, d, d_ff, dt),
+                "w_down": dense_init(k3, d_ff, d, dt)}
+    return {"w_up": dense_init(k1, d, d_ff, dt),
+            "w_down": dense_init(k2, d_ff, d, dt)}
+
+
+def mlp_apply(params: Params, x: jnp.ndarray, activation: str) -> jnp.ndarray:
+    if activation == "silu":
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    elif activation == "gelu":
+        h = jax.nn.gelu(x @ params["w_up"])
+    elif activation == "relu2":          # squared ReLU (Nemotron-4)
+        h = jnp.square(jax.nn.relu(x @ params["w_up"]))
+    else:
+        raise ValueError(f"unknown activation {activation}")
+    return h @ params["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+def attention_init(key, cfg: ArchConfig) -> Params:
+    d, dt = cfg.d_model, _dtype(cfg)
+    hd = cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {"w_q": dense_init(kq, d, cfg.num_heads * hd, dt),
+         "w_k": dense_init(kk, d, cfg.num_kv_heads * hd, dt),
+         "w_v": dense_init(kv, d, cfg.num_kv_heads * hd, dt),
+         "w_o": dense_init(ko, cfg.num_heads * hd, d, dt)}
+    if cfg.qkv_bias:
+        p["b_q"] = jnp.zeros((cfg.num_heads * hd,), dt)
+        p["b_k"] = jnp.zeros((cfg.num_kv_heads * hd,), dt)
+        p["b_v"] = jnp.zeros((cfg.num_kv_heads * hd,), dt)
+    return p
+
+
+def _sdpa(q, k, v, causal: bool, q_offset: int = 0):
+    """Reference scaled-dot-product attention.
+    q: (B, Sq, H, D); k/v: (B, Sk, Hkv, D) with H % Hkv == 0."""
+    B, Sq, H, D = q.shape
+    Hkv = k.shape[2]
+    group = H // Hkv
+    qf = q.astype(jnp.float32) / math.sqrt(D)
+    # expand kv heads over the group without materializing repeats: reshape q
+    qg = qf.reshape(B, Sq, Hkv, group, D)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32))
+    if causal:
+        qpos = jnp.arange(Sq) + q_offset
+        kpos = jnp.arange(k.shape[1])
+        mask = kpos[None, :] <= qpos[:, None]
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def attention_apply(params: Params, cfg: ArchConfig, x: jnp.ndarray,
+                    positions: Optional[jnp.ndarray] = None,
+                    kv_cache: Optional[Tuple] = None,
+                    cache_index: Optional[jnp.ndarray] = None,
+                    use_kernel: bool = False):
+    """GQA attention.  Returns (out, new_kv_cache).
+
+    Training/prefill: kv_cache=None, full self-attention over x.
+    Decode: x is (B, 1, D); kv_cache=(k, v) with static max length; the new
+    k/v are scattered at ``cache_index``.
+    """
+    B, S, _ = x.shape
+    H, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = x @ params["w_q"]
+    k = x @ params["w_k"]
+    v = x @ params["w_v"]
+    if cfg.qkv_bias:
+        q, k, v = q + params["b_q"], k + params["b_k"], v + params["b_v"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, Hkv, hd)
+    v = v.reshape(B, S, Hkv, hd)
+
+    if positions is None:
+        if cache_index is not None:
+            positions = jnp.broadcast_to(cache_index, (B,))[:, None] + \
+                jnp.arange(S)[None, :]
+        else:
+            positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    if cfg.mrope:
+        if positions.ndim == 2:       # text-only: replicate channels
+            positions = jnp.stack([positions] * 3, axis=0)
+        q = apply_mrope(q, positions, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.rope_theta)
+    else:
+        cos, sin = rope_freqs(hd, cfg.rope_theta, positions)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    if kv_cache is not None:
+        ck, cv = kv_cache
+        ck = _scatter_cache(ck, k, cache_index)
+        cv = _scatter_cache(cv, v, cache_index)
+        # decode attention over the full (padded) cache with length masking
+        out = _decode_sdpa(q, ck, cv, cache_index + S)
+        new_cache = (ck, cv)
+    else:
+        if use_kernel:
+            from repro.kernels.flash_attention import ops as fa_ops
+            out = fa_ops.flash_attention(q, k, v, causal=cfg.causal)
+        else:
+            out = _sdpa(q, k, v, causal=cfg.causal)
+        new_cache = None
+
+    out = out.reshape(B, S, H * hd) @ params["w_o"]
+    return out, new_cache
+
+
+def _scatter_cache(cache: jnp.ndarray, new: jnp.ndarray,
+                   index: jnp.ndarray) -> jnp.ndarray:
+    """cache: (B, Smax, Hkv, D); new: (B, s, Hkv, D) written at ``index``."""
+    idx = jnp.asarray(index, jnp.int32)
+    zero = jnp.zeros((), jnp.int32)
+    return lax.dynamic_update_slice(
+        cache, new.astype(cache.dtype), (zero, idx, zero, zero))
+
+
+def _decode_sdpa(q, k_cache, v_cache, valid_len):
+    """Decode attention: q (B,1,H,D) against padded cache with length mask."""
+    B, Sq, H, D = q.shape
+    Smax = k_cache.shape[1]
+    Hkv = k_cache.shape[2]
+    group = H // Hkv
+    qf = q.astype(jnp.float32) / math.sqrt(D)
+    qg = qf.reshape(B, Sq, Hkv, group, D)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg,
+                        k_cache.astype(jnp.float32))
+    mask = jnp.arange(Smax)[None, :] < valid_len
+    logits = jnp.where(mask[:, None, None, None, :]
+                       if mask.ndim == 2 else mask[None, None, None, None, :],
+                       logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs,
+                     v_cache.astype(jnp.float32))
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def make_kv_cache(cfg: ArchConfig, batch: int, max_len: int,
+                  dtype=jnp.bfloat16):
+    hd = cfg.resolved_head_dim
+    shape = (batch, max_len, cfg.num_kv_heads, hd)
+    return (jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+# ---------------------------------------------------------------------------
+# MLA — DeepSeek-V2 multi-head latent attention
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg: ArchConfig) -> Params:
+    d, dt = cfg.d_model, _dtype(cfg)
+    H = cfg.num_heads
+    r_kv = cfg.kv_lora_rank
+    r_q = cfg.q_lora_rank or 0
+    dr, dn, dv = cfg.qk_rope_head_dim, cfg.qk_nope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 8)
+    p = {}
+    if r_q:
+        p["w_dq"] = dense_init(ks[0], d, r_q, dt)
+        p["q_norm"] = rmsnorm_init(r_q, dt)
+        p["w_uq"] = dense_init(ks[1], r_q, H * (dr + dn), dt)
+    else:
+        p["w_q"] = dense_init(ks[1], d, H * (dr + dn), dt)
+    p["w_dkv"] = dense_init(ks[2], d, r_kv + dr, dt)   # compress + shared rope k
+    p["kv_norm"] = rmsnorm_init(r_kv, dt)
+    p["w_uk"] = dense_init(ks[3], r_kv, H * dn, dt)
+    p["w_uv"] = dense_init(ks[4], r_kv, H * dv, dt)
+    p["w_o"] = dense_init(ks[5], H * dv, d, dt)
+    return p
+
+
+def mla_apply(params: Params, cfg: ArchConfig, x: jnp.ndarray,
+              positions: Optional[jnp.ndarray] = None,
+              kv_cache: Optional[Tuple] = None,
+              cache_index: Optional[jnp.ndarray] = None):
+    """MLA attention; the KV cache stores the *compressed* latent (r_kv) and
+    the shared rope key (dr) — the memory win that defines the method.
+    Cache layout: (latent (B,S,r_kv), k_rope (B,S,dr))."""
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    dr, dn, dv = cfg.qk_rope_head_dim, cfg.qk_nope_head_dim, cfg.v_head_dim
+    r_kv = cfg.kv_lora_rank
+
+    if positions is None:
+        base = cache_index if cache_index is not None else 0
+        positions = (jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+                     + (base if cache_index is None else
+                        jnp.broadcast_to(cache_index, (B,))[:, None]))
+
+    if "w_dq" in params:
+        q_lat = rmsnorm(params["q_norm"], x @ params["w_dq"],
+                        cfg.norm_eps)
+        q = q_lat @ params["w_uq"]
+    else:
+        q = x @ params["w_q"]
+    q = q.reshape(B, S, H, dr + dn)
+    q_rope, q_nope = q[..., :dr], q[..., dr:]
+    cos, sin = rope_freqs(dr, cfg.rope_theta, positions)
+    q_rope = apply_rope(q_rope, cos, sin)
+
+    dkv = x @ params["w_dkv"]
+    latent = rmsnorm(params["kv_norm"], dkv[..., :r_kv], cfg.norm_eps)
+    k_rope = apply_rope(dkv[..., r_kv:][:, :, None, :], cos, sin)[:, :, 0]
+
+    if kv_cache is not None:
+        c_lat, c_kr = kv_cache
+        idx = jnp.asarray(cache_index, jnp.int32)
+        zero = jnp.zeros((), jnp.int32)
+        c_lat = lax.dynamic_update_slice(
+            c_lat, latent.astype(c_lat.dtype), (zero, idx, zero))
+        c_kr = lax.dynamic_update_slice(
+            c_kr, k_rope.astype(c_kr.dtype), (zero, idx, zero))
+        latent_full, k_rope_full = c_lat, c_kr
+        valid = cache_index + S
+        new_cache = (c_lat, c_kr)
+    else:
+        latent_full, k_rope_full = latent, k_rope
+        valid = None
+        new_cache = None
+
+    k_nope = (latent_full @ params["w_uk"]).reshape(
+        B, latent_full.shape[1], H, dn)
+    v = (latent_full @ params["w_uv"]).reshape(
+        B, latent_full.shape[1], H, dv)
+
+    scale = 1.0 / math.sqrt(dr + dn)
+    logits = (jnp.einsum("bqhd,bkhd->bhqk", q_nope.astype(jnp.float32),
+                         k_nope.astype(jnp.float32))
+              + jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32),
+                           k_rope_full.astype(jnp.float32))) * scale
+    Sk = latent_full.shape[1]
+    if valid is None:
+        mask = jnp.arange(Sk)[None, :] <= jnp.arange(S)[:, None]
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    else:
+        mask = jnp.arange(Sk)[None, :] < valid
+        logits = jnp.where(mask[:, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    out = out.reshape(B, S, H * dv).astype(x.dtype) @ params["w_o"]
+    return out, new_cache
+
+
+def make_mla_cache(cfg: ArchConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16):
+    return (jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+            jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype))
+
+
+# ---------------------------------------------------------------------------
+# Embeddings
+# ---------------------------------------------------------------------------
+
+def embedding_init(key, cfg: ArchConfig) -> Params:
+    dt = _dtype(cfg)
+    p = {"tok": (jax.random.normal(key, (cfg.vocab_size, cfg.d_model))
+                 * 0.02).astype(dt)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(jax.random.fold_in(key, 1), cfg.d_model,
+                                  cfg.vocab_size, dt)
+    return p
+
+
+def embed(params: Params, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(params["tok"], tokens, axis=0)
+
+
+def unembed(params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    if "unembed" in params:
+        return x @ params["unembed"]
+    return x @ params["tok"].T.astype(x.dtype)

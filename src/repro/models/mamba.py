@@ -1,0 +1,171 @@
+"""Mamba-2 (SSD) blocks — for the Zamba2 hybrid backbone.
+
+State-space duality form (Dao & Gu, 2024): per head with head dim P and
+state size Nst,
+
+    h_t = exp(a_t) · h_{t−1} + (b_t ⊗ x_t) · Δ_t      h ∈ R^{Nst×P}
+    y_t = c_tᵀ h_t + D · x_t
+
+with scalar per-head decay a_t = −Δ_t·exp(A_log) (data-dependent via Δ).
+Implemented as a chunked parallel scan (the TPU-friendly SSD layout: chunk
+the sequence, intra-chunk dense matmuls on the MXU, inter-chunk recurrence
+carried by a tiny scan).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig, SSMConfig
+from repro.models.layers import dense_init, rmsnorm, rmsnorm_init
+
+Params = Dict[str, Any]
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm or SSMConfig()
+    d_inner = s.expand * cfg.d_model
+    nheads = s.num_heads or d_inner // s.head_dim
+    return s, d_inner, nheads
+
+
+def mamba_init(key, cfg: ArchConfig) -> Params:
+    s, d_inner, nheads = _dims(cfg)
+    d, dt = cfg.d_model, jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    conv_dim = d_inner + 2 * s.state_size
+    return {
+        # fused input projection: [z (gate), x, B, C, dt]
+        "w_in": dense_init(ks[0], d, 2 * d_inner + 2 * s.state_size
+                           + nheads, dt),
+        "conv_w": (jax.random.normal(ks[1], (s.conv_width, conv_dim))
+                   * 0.1).astype(dt),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads)
+                         ).astype(jnp.float32),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "norm": rmsnorm_init(d_inner, dt),
+        "w_out": dense_init(ks[2], d_inner, d, dt),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv1d.  x: (B, T, C); w: (K, C).
+    state: (B, K−1, C) trailing context for decode.  Returns (y, new_state)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros_like(x[:, : K - 1])
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    # sum_k w[k] * x[t - K + 1 + k]
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else None
+    return jax.nn.silu(y + b), new_state
+
+
+def ssd_scan_ref(x, a, B, C, D, state0=None, chunk: int = 64):
+    """Chunked SSD scan (reference implementation, also the TPU layout).
+
+    x: (Bb, T, H, P) inputs (already Δ-scaled); a: (Bb, T, H) log-decay
+    (negative); B, C: (Bb, T, Nst); D: (H,).
+    Returns (y (Bb,T,H,P), final_state (Bb,H,Nst,P))."""
+    Bb, T, H, P = x.shape
+    Nst = B.shape[-1]
+    if state0 is None:
+        state0 = jnp.zeros((Bb, H, Nst, P), jnp.float32)
+    nchunks = T // chunk
+    assert T % chunk == 0, (T, chunk)
+
+    xf = x.astype(jnp.float32).reshape(Bb, nchunks, chunk, H, P)
+    af = a.astype(jnp.float32).reshape(Bb, nchunks, chunk, H)
+    Bf = B.astype(jnp.float32).reshape(Bb, nchunks, chunk, Nst)
+    Cf = C.astype(jnp.float32).reshape(Bb, nchunks, chunk, Nst)
+
+    cum_a = jnp.cumsum(af, axis=2)                      # (Bb,nc,L,H)
+    total_a = cum_a[:, :, -1]                           # (Bb,nc,H)
+
+    # --- intra-chunk (dense, MXU-friendly) ---
+    # decay from step j to step i (i >= j): exp(cum_a_i - cum_a_j)
+    rel = cum_a[:, :, :, None, :] - cum_a[:, :, None, :, :]   # (Bb,nc,L,L,H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))[None, None, :, :, None]
+    # mask the EXPONENT (not the value): exp of the masked upper triangle
+    # overflows and poisons gradients through the where (inf · 0 = nan).
+    decay = jnp.exp(jnp.where(mask, rel, -jnp.inf))
+    cb = jnp.einsum("bnis,bnjs->bnij", Cf, Bf)                # (Bb,nc,L,L)
+    y_intra = jnp.einsum("bnij,bnijh,bnjhp->bnihp", cb, decay, xf)
+
+    # --- chunk states: S_n = sum_j exp(cum_a_last - cum_a_j) B_j x_j ---
+    dec_to_end = jnp.exp(total_a[:, :, None, :] - cum_a)      # (Bb,nc,L,H)
+    chunk_state = jnp.einsum("bnjs,bnjh,bnjhp->bnhsp", Bf, dec_to_end, xf)
+
+    # --- inter-chunk recurrence over nchunks (tiny scan) ---
+    def step(S, inp):
+        cs, ta = inp                                    # (Bb,H,Nst,P),(Bb,H)
+        S_new = jnp.exp(ta)[..., None, None] * S + cs
+        return S_new, S                                 # emit state *before*
+
+    (S_final, prev_states) = lax.scan(
+        step, state0,
+        (jnp.moveaxis(chunk_state, 1, 0), jnp.moveaxis(total_a, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)       # (Bb,nc,H,Nst,P)
+
+    # --- contribution of carried state to each position ---
+    dec_from_start = jnp.exp(cum_a)                     # (Bb,nc,L,H)
+    y_inter = jnp.einsum("bnis,bnih,bnhsp->bnihp", Cf, dec_from_start,
+                         prev_states)
+
+    y = (y_intra + y_inter).reshape(Bb, T, H, P)
+    y = y + D[None, None, :, None] * x.astype(jnp.float32)
+    return y.astype(x.dtype), S_final
+
+
+def mamba_apply(params: Params, cfg: ArchConfig, x: jnp.ndarray,
+                state: Optional[Tuple] = None, chunk: int = 64):
+    """Mamba-2 block.  state = (conv_state, ssm_state) for decode.
+    Returns (out, new_state)."""
+    s, d_inner, nheads = _dims(cfg)
+    B_, T, d = x.shape
+    P = d_inner // nheads
+    Nst = s.state_size
+
+    proj = x @ params["w_in"]
+    z, xbc_dt = proj[..., :d_inner], proj[..., d_inner:]
+    xbc = xbc_dt[..., : d_inner + 2 * Nst]
+    dt_raw = xbc_dt[..., d_inner + 2 * Nst:]
+
+    conv_state = None if state is None else state[0]
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                 conv_state)
+    xs = xbc[..., :d_inner].reshape(B_, T, nheads, P)
+    Bmat = xbc[..., d_inner: d_inner + Nst]
+    Cmat = xbc[..., d_inner + Nst:]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"])            # (B,T,H)
+    a = -jnp.exp(params["A_log"])[None, None] * dt       # log decay (neg)
+    x_scaled = xs.astype(jnp.float32) * dt[..., None]
+
+    ssm_state = None if state is None else state[1]
+    if T % chunk != 0:
+        chunk = 1 if T == 1 else math.gcd(T, chunk) or 1
+    y, new_ssm = ssd_scan_ref(x_scaled, a, Bmat, Cmat, params["D"],
+                              ssm_state, chunk=chunk)
+    y = y.reshape(B_, T, d_inner).astype(x.dtype)
+    y = rmsnorm(params["norm"], y, cfg.norm_eps) * jax.nn.silu(z)
+    out = y @ params["w_out"]
+    return out, (new_conv, new_ssm)
+
+
+def mamba_state_init(cfg: ArchConfig, batch: int):
+    s, d_inner, nheads = _dims(cfg)
+    conv_dim = d_inner + 2 * s.state_size
+    P = d_inner // nheads
+    return (jnp.zeros((batch, s.conv_width - 1, conv_dim),
+                      jnp.dtype(cfg.dtype)),
+            jnp.zeros((batch, nheads, s.state_size, P), jnp.float32))

@@ -1,0 +1,384 @@
+"""Top-level model: init / forward / loss / decode for every arch family.
+
+Design notes (these matter at scale):
+  * Layer parameters are **stacked** (leading L axis) and the layer loop is a
+    ``lax.scan`` — the compiled HLO contains ONE block body regardless of
+    depth, keeping dry-run compiles tractable and enabling per-layer remat.
+  * Hybrid (Zamba2) = scanned Mamba2 trunk + a **shared** attention block
+    (single weight set) applied every ``shared_attn_every`` layers — faithful
+    to Zamba2's weight-shared attention.
+  * ``[vlm]``/``[audio]`` archs take precomputed embeddings
+    (``embedding_frontend == 'stub_embeddings'``) per the assignment.
+  * Decode: ``init_decode_state`` builds per-layer stacked caches;
+    ``decode_step`` advances one token (the serve_step the decode/long
+    shapes lower).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import moe as X
+from repro.models import rwkv as R
+
+Params = Dict[str, Any]
+
+SHARED_ATTN_EVERY = 27   # Zamba2: shared attention block cadence
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _block_init(key, cfg: ArchConfig) -> Params:
+    """One layer's params for the arch's (homogeneous, scanned) trunk."""
+    dt = jnp.dtype(cfg.dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.family == "ssm":                       # RWKV-6
+        return {"ln1": L.rmsnorm_init(cfg.d_model, dt),
+                "tm": R.time_mix_init(k1, cfg),
+                "ln2": L.rmsnorm_init(cfg.d_model, dt),
+                "cm": R.channel_mix_init(k2, cfg)}
+    if cfg.family == "hybrid":                    # Mamba2 trunk
+        return {"ln1": L.rmsnorm_init(cfg.d_model, dt),
+                "mamba": M.mamba_init(k1, cfg)}
+    p = {"ln1": L.rmsnorm_init(cfg.d_model, dt),
+         "ln2": L.rmsnorm_init(cfg.d_model, dt)}
+    p["attn"] = (L.mla_init(k1, cfg) if cfg.use_mla
+                 else L.attention_init(k1, cfg))
+    if cfg.moe:
+        p["mlp"] = X.moe_init(k2, cfg)
+    else:
+        p["mlp"] = L.mlp_init(k2, cfg)
+    return p
+
+
+def init_params(key, cfg: ArchConfig) -> Params:
+    ke, kb, ks, kf = jax.random.split(key, 4)
+    lkeys = jax.random.split(kb, cfg.num_layers)
+    blocks = jax.vmap(lambda k: _block_init(k, cfg))(lkeys)
+    p = {"embed": L.embedding_init(ke, cfg),
+         "blocks": blocks,
+         "final_norm": L.rmsnorm_init(cfg.d_model, jnp.dtype(cfg.dtype))}
+    if cfg.family == "hybrid":
+        # shared attention (+ its MLP) — ONE weight set reused across depth
+        ka, km = jax.random.split(ks)
+        p["shared_attn"] = {
+            "ln1": L.rmsnorm_init(cfg.d_model, jnp.dtype(cfg.dtype)),
+            "attn": L.attention_init(ka, cfg),
+            "ln2": L.rmsnorm_init(cfg.d_model, jnp.dtype(cfg.dtype)),
+            "mlp": L.mlp_init(km, cfg),
+        }
+    return p
+
+
+def init_params_abstract(key, cfg: ArchConfig) -> Params:
+    """Shape/dtype-only params (for dry-run sharding without allocation)."""
+    return jax.eval_shape(lambda k: init_params(k, cfg), key)
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _dense_block(bp: Params, cfg: ArchConfig, h: jnp.ndarray,
+                 use_kernel: bool, moe_dispatch: str = "dense"):
+    a, _ = (L.mla_apply(bp["attn"], cfg, L.rmsnorm(bp["ln1"], h,
+                                                   cfg.norm_eps))
+            if cfg.use_mla else
+            L.attention_apply(bp["attn"], cfg,
+                              L.rmsnorm(bp["ln1"], h, cfg.norm_eps),
+                              use_kernel=use_kernel))
+    h = h + a
+    m_in = L.rmsnorm(bp["ln2"], h, cfg.norm_eps)
+    if cfg.moe:
+        if moe_dispatch == "sparse":
+            mo, aux = X.moe_apply_sparse_gather(bp["mlp"], cfg, m_in)
+        else:
+            mo, aux = X.moe_apply_dense(bp["mlp"], cfg, m_in)
+    else:
+        mo, aux = L.mlp_apply(bp["mlp"], m_in, cfg.mlp_activation), 0.0
+    return h + mo, aux
+
+
+def _rwkv_block(bp: Params, cfg: ArchConfig, h: jnp.ndarray,
+                use_kernel: bool):
+    a, _ = R.time_mix_apply(bp["tm"], cfg,
+                            L.rmsnorm(bp["ln1"], h, cfg.norm_eps),
+                            use_kernel=use_kernel)
+    h = h + a
+    c, _ = R.channel_mix_apply(bp["cm"], cfg,
+                               L.rmsnorm(bp["ln2"], h, cfg.norm_eps))
+    return h + c, 0.0
+
+
+def _mamba_block(bp: Params, cfg: ArchConfig, h: jnp.ndarray):
+    a, _ = M.mamba_apply(bp["mamba"], cfg,
+                         L.rmsnorm(bp["ln1"], h, cfg.norm_eps))
+    return h + a, 0.0
+
+
+def _shared_attn_block(sp: Params, cfg: ArchConfig, h: jnp.ndarray,
+                       use_kernel: bool):
+    a, _ = L.attention_apply(sp["attn"], cfg,
+                             L.rmsnorm(sp["ln1"], h, cfg.norm_eps),
+                             use_kernel=use_kernel)
+    h = h + a
+    return h + L.mlp_apply(sp["mlp"],
+                           L.rmsnorm(sp["ln2"], h, cfg.norm_eps),
+                           cfg.mlp_activation)
+
+
+REMAT_POLICIES = {
+    "nothing": jax.checkpoint_policies.nothing_saveable,
+    "dots": jax.checkpoint_policies.checkpoint_dots,
+    "dots_no_batch": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+}
+
+
+def forward(params: Params, cfg: ArchConfig, inputs: jnp.ndarray,
+            use_kernel: bool = False, remat: bool = True,
+            act_sharding=None, remat_policy: str = "nothing",
+            sp_sharding=None, moe_dispatch: str = "dense") -> Tuple:
+    """Full forward pass.  ``inputs``: int tokens (B, S) or precomputed
+    embeddings (B, S, d) for stub frontends.  Returns (logits, aux_loss).
+
+    ``act_sharding``: optional NamedSharding for the (B, S, d) activations.
+    GSPMD replicates the output of the embedding gather (the table is
+    2-D-sharded), so without this constraint the whole layer stack runs
+    batch-replicated on the data axis."""
+    if cfg.embedding_frontend == "stub_embeddings" and inputs.ndim == 3:
+        h = inputs.astype(jnp.dtype(cfg.dtype))
+    else:
+        h = L.embed(params["embed"], inputs)
+    if act_sharding is not None:
+        h = jax.lax.with_sharding_constraint(h, act_sharding)
+
+    if cfg.family == "ssm":
+        block = lambda bp, h: _rwkv_block(bp, cfg, h, use_kernel)
+    elif cfg.family == "hybrid":
+        block = lambda bp, h: _mamba_block(bp, cfg, h)
+    else:
+        block = lambda bp, h: _dense_block(bp, cfg, h, use_kernel,
+                                           moe_dispatch)
+
+    if remat:
+        block = jax.checkpoint(block, policy=REMAT_POLICIES[remat_policy])
+
+    if cfg.family == "hybrid":
+        # scan in chunks of SHARED_ATTN_EVERY, interleaving the shared block
+        n = cfg.num_layers
+        every = min(SHARED_ATTN_EVERY, n)
+        aux_total = 0.0
+
+        def scan_body(h, bp):
+            h, aux = block(bp, h)
+            return h, aux
+
+        done = 0
+        while done < n:
+            take = min(every, n - done)
+            seg = jax.tree_util.tree_map(
+                lambda a: lax.slice_in_dim(a, done, done + take, axis=0),
+                params["blocks"])
+            h, auxs = lax.scan(scan_body, h, seg)
+            aux_total = aux_total + jnp.sum(auxs)
+            h = _shared_attn_block(params["shared_attn"], cfg, h,
+                                   use_kernel)
+            done += take
+    else:
+        def scan_body(h, bp):
+            h, aux = block(bp, h)
+            if sp_sharding is not None:
+                # Megatron sequence parallelism: residual/norm regions hold
+                # (b, s/TP, d) shards; GSPMD turns the block's all-reduce
+                # into reduce-scatter + all-gather pairs (§Perf L2)
+                h = jax.lax.with_sharding_constraint(h, sp_sharding)
+            return h, aux
+
+        h, auxs = lax.scan(scan_body, h, params["blocks"])
+        aux_total = jnp.sum(auxs)
+
+    if act_sharding is not None:
+        # re-anchor before the unembed: attention paths for non-divisible
+        # head counts can leave d partially sharded, which would otherwise
+        # turn the logits matmul into a model-axis partial sum (§Perf G2)
+        h = jax.lax.with_sharding_constraint(h, act_sharding)
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = L.unembed(params["embed"], h)
+    return logits, aux_total
+
+
+def loss_fn(params: Params, cfg: ArchConfig, inputs, labels,
+            use_kernel: bool = False, remat: bool = True,
+            act_sharding=None, remat_policy: str = "nothing",
+            sp_sharding=None, moe_dispatch: str = "dense") -> jnp.ndarray:
+    """Mean next-token cross-entropy (+ MoE aux).  ``labels``: (B, S) int."""
+    logits, aux = forward(params, cfg, inputs, use_kernel, remat,
+                          act_sharding=act_sharding,
+                          remat_policy=remat_policy,
+                          sp_sharding=sp_sharding,
+                          moe_dispatch=moe_dispatch)
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(nll)
+    if cfg.moe:
+        loss = loss + cfg.moe.router_aux_loss * aux / cfg.num_layers
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DecodeState:
+    caches: Any            # per-family stacked per-layer caches
+    index: jnp.ndarray     # current length (scalar int32)
+
+    def tree_flatten(self):
+        return (self.caches, self.index), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    DecodeState, DecodeState.tree_flatten, DecodeState.tree_unflatten)
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, max_len: int
+                      ) -> DecodeState:
+    Ln = cfg.num_layers
+    dt = jnp.dtype(cfg.dtype)
+
+    def stack(make):
+        one = make()
+        return jax.tree_util.tree_map(
+            lambda a: jnp.zeros((Ln,) + a.shape, a.dtype), one)
+
+    if cfg.family == "ssm":
+        caches = stack(lambda: R.rwkv_state_init(cfg, batch))
+    elif cfg.family == "hybrid":
+        trunk = stack(lambda: M.mamba_state_init(cfg, batch))
+        n_shared = -(-cfg.num_layers // min(SHARED_ATTN_EVERY,
+                                            cfg.num_layers))
+        k, v = L.make_kv_cache(cfg, batch, max_len, dt)
+        shared = (jnp.zeros((n_shared,) + k.shape, dt),
+                  jnp.zeros((n_shared,) + v.shape, dt))
+        caches = {"trunk": trunk, "shared": shared}
+    elif cfg.use_mla:
+        lat, kr = L.make_mla_cache(cfg, batch, max_len, dt)
+        caches = (jnp.zeros((Ln,) + lat.shape, dt),
+                  jnp.zeros((Ln,) + kr.shape, dt))
+    else:
+        k, v = L.make_kv_cache(cfg, batch, max_len, dt)
+        caches = (jnp.zeros((Ln,) + k.shape, dt),
+                  jnp.zeros((Ln,) + v.shape, dt))
+    return DecodeState(caches=caches, index=jnp.zeros((), jnp.int32))
+
+
+def decode_step(params: Params, cfg: ArchConfig, state: DecodeState,
+                tokens: jnp.ndarray) -> Tuple[jnp.ndarray, DecodeState]:
+    """One serve step: tokens (B, 1) int (or (B, 1, d) embeddings) →
+    (logits (B, 1, V), new state)."""
+    if not cfg.has_decoder:
+        raise ValueError(f"{cfg.name} is encoder-only: no decode step")
+    if cfg.embedding_frontend == "stub_embeddings" and tokens.ndim == 3:
+        h = tokens.astype(jnp.dtype(cfg.dtype))
+    else:
+        h = L.embed(params["embed"], tokens)
+    idx = state.index
+
+    if cfg.family == "ssm":
+        def body(h, blk):
+            bp, st = blk
+            x_tm, wkv, x_cm = st
+            a, (nx_tm, nwkv) = R.time_mix_apply(
+                bp["tm"], cfg, L.rmsnorm(bp["ln1"], h, cfg.norm_eps),
+                state=(x_tm, wkv))
+            h = h + a
+            c, nx_cm = R.channel_mix_apply(
+                bp["cm"], cfg, L.rmsnorm(bp["ln2"], h, cfg.norm_eps),
+                x_prev=x_cm)
+            return h + c, (nx_tm, nwkv, nx_cm)
+
+        h, new_caches = lax.scan(body, h,
+                                 (params["blocks"], state.caches))
+    elif cfg.family == "hybrid":
+        every = min(SHARED_ATTN_EVERY, cfg.num_layers)
+
+        def body(h, blk):
+            bp, st = blk
+            a, nst = M.mamba_apply(
+                bp["mamba"], cfg, L.rmsnorm(bp["ln1"], h, cfg.norm_eps),
+                state=st)
+            return h + a, nst
+
+        n, done, si = cfg.num_layers, 0, 0
+        new_trunk_parts, new_shared_k, new_shared_v = [], [], []
+        trunk = state.caches["trunk"]
+        sk, sv = state.caches["shared"]
+        while done < n:
+            take = min(every, n - done)
+            seg_p = jax.tree_util.tree_map(
+                lambda a: lax.slice_in_dim(a, done, done + take, axis=0),
+                params["blocks"])
+            seg_s = jax.tree_util.tree_map(
+                lambda a: lax.slice_in_dim(a, done, done + take, axis=0),
+                trunk)
+            h, nst = lax.scan(body, h, (seg_p, seg_s))
+            new_trunk_parts.append(nst)
+            sp = params["shared_attn"]
+            a, (nk, nv) = L.attention_apply(
+                sp["attn"], cfg, L.rmsnorm(sp["ln1"], h, cfg.norm_eps),
+                kv_cache=(sk[si], sv[si]), cache_index=idx)
+            h = h + a
+            h = h + L.mlp_apply(sp["mlp"],
+                                L.rmsnorm(sp["ln2"], h, cfg.norm_eps),
+                                cfg.mlp_activation)
+            new_shared_k.append(nk)
+            new_shared_v.append(nv)
+            done += take
+            si += 1
+        new_caches = {
+            "trunk": jax.tree_util.tree_map(
+                lambda *xs: jnp.concatenate(xs, 0), *new_trunk_parts),
+            "shared": (jnp.stack(new_shared_k), jnp.stack(new_shared_v)),
+        }
+    else:
+        def body(h, blk):
+            bp, cache = blk
+            x = L.rmsnorm(bp["ln1"], h, cfg.norm_eps)
+            if cfg.use_mla:
+                a, ncache = L.mla_apply(bp["attn"], cfg, x, kv_cache=cache,
+                                        cache_index=idx)
+            else:
+                a, ncache = L.attention_apply(bp["attn"], cfg, x,
+                                              kv_cache=cache,
+                                              cache_index=idx)
+            h = h + a
+            m_in = L.rmsnorm(bp["ln2"], h, cfg.norm_eps)
+            if cfg.moe:
+                mo, _ = X.moe_apply_dense(bp["mlp"], cfg, m_in)
+            else:
+                mo = L.mlp_apply(bp["mlp"], m_in, cfg.mlp_activation)
+            return h + mo, ncache
+
+        h, new_caches = lax.scan(body, h, (params["blocks"], state.caches))
+
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = L.unembed(params["embed"], h)
+    new_state = DecodeState(caches=new_caches,
+                            index=idx + tokens.shape[1])
+    return logits, new_state

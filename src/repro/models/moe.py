@@ -1,0 +1,172 @@
+"""Mixture-of-Experts layer (Granite-MoE and DeepSeek-V2 styles).
+
+Dense-dispatch formulation: every expert runs on every token and the router's
+top-k weights gate the contributions.  This is the einsum form that shards
+cleanly under GSPMD (expert dim on the `model`/expert axis; tokens on `data`)
+and is mathematically identical to sparse dispatch.  A capacity-based sparse
+dispatch (one-hot combine matrices, à la Switch) is also provided for the
+train-step variants where FLOP savings matter; both are tested for agreement.
+
+DeepSeek-V2 details supported: shared experts (always on), top-k over routed
+experts, and the auxiliary load-balancing loss.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MoEConfig
+from repro.models.layers import dense_init
+
+Params = Dict[str, Any]
+
+
+def moe_init(key, cfg: ArchConfig) -> Params:
+    m = cfg.moe
+    d, dff = cfg.d_model, m.expert_d_ff
+    dt = jnp.dtype(cfg.dtype)
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    E = m.num_experts
+    scale_in = 1.0 / math.sqrt(d)
+    scale_out = 1.0 / math.sqrt(dff)
+    p = {
+        "router": dense_init(kr, d, E, jnp.float32),   # router in f32
+        "w_gate": (jax.random.normal(kg, (E, d, dff)) * scale_in).astype(dt),
+        "w_up": (jax.random.normal(ku, (E, d, dff)) * scale_in).astype(dt),
+        "w_down": (jax.random.normal(kd, (E, dff, d)) * scale_out).astype(dt),
+    }
+    if m.num_shared_experts:
+        sdff = dff * m.num_shared_experts
+        k1, k2, k3 = jax.random.split(ks, 3)
+        p["shared"] = {
+            "w_gate": dense_init(k1, d, sdff, dt),
+            "w_up": dense_init(k2, d, sdff, dt),
+            "w_down": dense_init(k3, sdff, d, dt),
+        }
+    return p
+
+
+def _router_probs(params: Params, m: MoEConfig, x: jnp.ndarray):
+    """Returns (topk_weights (..., E) dense-masked, aux_loss)."""
+    logits = x.astype(jnp.float32) @ params["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    k = m.top_k
+    topv, topi = jax.lax.top_k(probs, k)
+    topv = topv / jnp.sum(topv, axis=-1, keepdims=True)   # renormalize top-k
+    E = probs.shape[-1]
+    gates = jnp.sum(jax.nn.one_hot(topi, E, dtype=probs.dtype)
+                    * topv[..., None], axis=-2)           # (..., E)
+    # Switch-style load balancing: E * Σ_e f_e · p̄_e
+    flat_g = gates.reshape(-1, E)
+    flat_p = probs.reshape(-1, E)
+    frac_routed = jnp.mean((flat_g > 0).astype(jnp.float32), axis=0)
+    mean_prob = jnp.mean(flat_p, axis=0)
+    aux = E * jnp.sum(frac_routed * mean_prob)
+    return gates, aux
+
+
+def moe_apply_dense(params: Params, cfg: ArchConfig,
+                    x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Dense-dispatch MoE: out = Σ_e gate_e · FFN_e(x) (+ shared experts)."""
+    m = cfg.moe
+    gates, aux = _router_probs(params, m, x)              # (B, S, E)
+    h_gate = jnp.einsum("bsd,edf->bsef", x, params["w_gate"])
+    h_up = jnp.einsum("bsd,edf->bsef", x, params["w_up"])
+    h = jax.nn.silu(h_gate) * h_up
+    # gate BEFORE the down-projection and contract (e, f) jointly: the
+    # partial-sum collective is then (b,s,d), not (b,s,E,d) — E× less
+    # traffic when the expert FFN dim is tensor-sharded (§Perf iteration G1)
+    h = h * gates.astype(x.dtype)[..., None]
+    out = jnp.einsum("bsef,efd->bsd", h, params["w_down"])
+    if m.num_shared_experts:
+        sp = params["shared"]
+        out = out + (jax.nn.silu(x @ sp["w_gate"]) * (x @ sp["w_up"])) \
+            @ sp["w_down"]
+    return out, aux
+
+
+def moe_apply_sparse_gather(params: Params, cfg: ArchConfig,
+                            x: jnp.ndarray, capacity_factor: float = 2.0
+                            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Capacity-bounded sparse dispatch via gather/scatter (no one-hot
+    matmuls — the dispatch einsum of the one-hot form costs more FLOPs than
+    the expert compute it saves once E is large; §Perf D1).
+
+    Per expert: token ids = stable argsort of the keep mask (first ``cap``
+    rows), gather (E, cap, d), run the expert FFN batched over E, scatter-
+    add gated outputs back.  Compute scales with E·cap ≈ cf·k·N instead of
+    E·N.
+    """
+    m = cfg.moe
+    B, S, d = x.shape
+    E, k = m.num_experts, m.top_k
+    N = B * S
+    xf = x.reshape(N, d)
+    gates, aux = _router_probs(params, m, x)
+    gflat = gates.reshape(N, E)
+
+    cap = max(1, int(capacity_factor * N * k / E))
+    active = gflat > 0
+    pos = jnp.cumsum(active.astype(jnp.int32), axis=0) - 1
+    keep = active & (pos < cap)
+    # stable argsort: kept tokens first, in token order, per expert column
+    order = jnp.argsort(~keep, axis=0, stable=True)        # (N, E)
+    ids = order[:cap].T                                    # (E, cap)
+    valid = jnp.take_along_axis(keep, order[:cap], axis=0).T  # (E, cap)
+
+    xe = xf[ids]                                           # (E, cap, d)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, params["w_gate"])) \
+        * jnp.einsum("ecd,edf->ecf", xe, params["w_up"])
+    ye = jnp.einsum("ecf,efd->ecd", h, params["w_down"])   # (E, cap, d)
+
+    g_slot = jnp.take_along_axis(
+        gflat.T, ids, axis=1) * valid.astype(gflat.dtype)  # (E, cap)
+    contrib = (ye * g_slot[..., None].astype(ye.dtype)).reshape(-1, d)
+    out = jnp.zeros((N, d), x.dtype).at[ids.reshape(-1)].add(
+        contrib.astype(x.dtype), mode="drop")
+    out = out.reshape(B, S, d)
+    if m.num_shared_experts:
+        sp = params["shared"]
+        out = out + (jax.nn.silu(x @ sp["w_gate"]) * (x @ sp["w_up"])) \
+            @ sp["w_down"]
+    return out, aux
+
+
+def moe_apply_sparse(params: Params, cfg: ArchConfig, x: jnp.ndarray,
+                     capacity_factor: float = 2.0
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Capacity-bounded sparse dispatch (einsum one-hot combine).
+
+    Tokens beyond an expert's capacity are dropped (residual passes through),
+    matching production MoE training.  FLOPs scale with capacity, not E.
+    """
+    m = cfg.moe
+    B, S, d = x.shape
+    E, k = m.num_experts, m.top_k
+    N = B * S
+    xf = x.reshape(N, d)
+    gates, aux = _router_probs(params, m, x)
+    gflat = gates.reshape(N, E)
+
+    cap = max(1, int(capacity_factor * N * k / E))
+    # position of each token in each expert's queue
+    active = (gflat > 0).astype(jnp.int32)
+    pos = jnp.cumsum(active, axis=0) - 1                   # (N, E)
+    keep = (pos < cap) & (active > 0)
+    # dispatch tensor: (N, E, cap) one-hot
+    disp = keep[..., None] & (jax.nn.one_hot(pos, cap, dtype=jnp.bool_))
+    disp_f = disp.astype(x.dtype)
+    xe = jnp.einsum("nec,nd->ecd", disp_f, xf)             # (E, cap, d)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, params["w_gate"])) \
+        * jnp.einsum("ecd,edf->ecf", xe, params["w_up"])
+    ye = jnp.einsum("ecf,efd->ecd", h, params["w_down"])   # (E, cap, d)
+    combine = disp_f * gflat[..., None].astype(x.dtype)
+    out = jnp.einsum("nec,ecd->nd", combine, ye).reshape(B, S, d)
+    if m.num_shared_experts:
+        sp = params["shared"]
+        out = out + (jax.nn.silu(x @ sp["w_gate"]) * (x @ sp["w_up"])) \
+            @ sp["w_down"]
+    return out, aux

@@ -1,0 +1,4 @@
+from repro.optim.optimizer import (adamw, lion, sgd, apply_updates,
+                                   clip_by_global_norm, global_norm,
+                                   OptState, Optimizer, OPTIMIZERS)
+from repro.optim import schedules, grad_compression

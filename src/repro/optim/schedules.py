@@ -1,0 +1,28 @@
+"""Learning-rate schedules (pure functions of the step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup_cosine(lr: float, warmup: int, total: int,
+                         final_frac: float = 0.1):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = lr * (final_frac + (1 - final_frac)
+                    * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return fn
+
+
+def inverse_sqrt(lr: float, warmup: int):
+    def fn(step):
+        step = jnp.maximum(step.astype(jnp.float32), 1.0)
+        return lr * jnp.minimum(step / max(warmup, 1),
+                                jnp.sqrt(warmup / step))
+    return fn

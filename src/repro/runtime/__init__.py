@@ -1,0 +1,10 @@
+from repro.runtime.train_loop import (TrainState, TrainStepConfig,
+                                      make_train_state, make_train_step,
+                                      make_prefill_step, make_decode_step)
+from repro.runtime.train_loop import train_loop as run_train_loop
+from repro.runtime.fault_tolerance import (StragglerMonitor, HeartbeatRegistry,
+                                           PreemptionHandler, ElasticPlan)
+# keep the submodule accessible as repro.runtime.train_loop
+from repro.runtime import train_loop as _tl_module
+import sys as _sys
+_sys.modules[__name__ + ".train_loop"] = _tl_module

@@ -1,0 +1,209 @@
+"""Train-step / serve-step factories and the training loop.
+
+``make_train_step`` builds the jit-able function the dry-run lowers for the
+``train_4k`` cells: forward+loss (remat'd scan over layers), backward,
+gradient clip, optional int8 error-feedback compression on the DP reduction,
+optimizer update.  Gradient accumulation (microbatching) happens INSIDE the
+step via ``lax.scan`` so the compiled program overlaps the per-microbatch
+backward with the gradient reduction.
+
+``make_prefill_step`` / ``make_decode_step`` are the serving entry points
+(the ``prefill_*`` / ``decode_*`` / ``long_*`` cells).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.distributed import sharding as shd
+from repro.models import model as mdl
+from repro.optim import optimizer as opt
+from repro.optim import grad_compression as gc
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: opt.OptState
+    err_state: Any            # grad-compression error feedback (or None)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepConfig:
+    microbatches: int = 1
+    clip_norm: float = 1.0
+    compress_grads: bool = False
+    remat: bool = True
+    remat_policy: str = "nothing"   # nothing | dots | dots_no_batch
+    use_kernel: bool = False
+    # sharding constraint applied to the microbatched (mb, b, ...) inputs;
+    # without it GSPMD shards the scan dim and replicates each microbatch.
+    microbatch_sharding: Optional[Any] = None
+    # constraint for (B, S, d) activations after the embedding gather
+    act_sharding: Optional[Any] = None
+    # sequence-parallel sharding for residual activations between blocks
+    sp_sharding: Optional[Any] = None
+    moe_dispatch: str = "dense"     # dense | sparse (gather-based, capacity)
+    # dtype for the gradient accumulator / cross-device dW reductions.
+    # bf16 halves the reduce-scatter payload and accumulator traffic; the
+    # optimizer still updates in f32 moments (§Perf L3).
+    grad_accum_dtype: Any = jnp.float32
+    # pytree of NamedShardings (like params) for the grad accumulator; keeps
+    # the per-microbatch dW reduction a reduce-scatter (ZeRO-3) instead of a
+    # full all-reduce of replicated gradients
+    grad_sharding: Optional[Any] = None
+
+
+def make_train_state(cfg: ArchConfig, optimizer: opt.Optimizer, key,
+                     compress: bool = False) -> TrainState:
+    params = mdl.init_params(key, cfg)
+    return TrainState(
+        params=params,
+        opt_state=optimizer.init(params),
+        err_state=gc.init_error_state(params) if compress else None)
+
+
+def make_train_state_abstract(cfg: ArchConfig, optimizer: opt.Optimizer,
+                              compress: bool = False):
+    """ShapeDtypeStruct TrainState for the dry-run (no allocation)."""
+    return jax.eval_shape(
+        lambda k: make_train_state(cfg, optimizer, k, compress),
+        jax.random.PRNGKey(0))
+
+
+def make_train_step(cfg: ArchConfig, optimizer: opt.Optimizer,
+                    tcfg: TrainStepConfig = TrainStepConfig()) -> Callable:
+    """Returns train_step(state, inputs, labels) -> (state, metrics)."""
+
+    def loss_for(params, x, y):
+        return mdl.loss_fn(params, cfg, x, y, use_kernel=tcfg.use_kernel,
+                           remat=tcfg.remat, act_sharding=tcfg.act_sharding,
+                           remat_policy=tcfg.remat_policy,
+                           sp_sharding=tcfg.sp_sharding,
+                           moe_dispatch=tcfg.moe_dispatch)
+
+    grad_fn = jax.value_and_grad(loss_for)
+
+    def train_step(state: TrainState, inputs, labels):
+        if tcfg.microbatches > 1:
+            B = inputs.shape[0]
+            mb = tcfg.microbatches
+            assert B % mb == 0, (B, mb)
+            xs = inputs.reshape(mb, B // mb, *inputs.shape[1:])
+            ys = labels.reshape(mb, B // mb, *labels.shape[1:])
+            if tcfg.microbatch_sharding is not None:
+                c = lambda a: jax.lax.with_sharding_constraint(
+                    a, tcfg.microbatch_sharding)
+                xs, ys = c(xs), c(ys)
+
+            def micro(acc, xy):
+                x, y = xy
+                loss, g = grad_fn(state.params, x, y)
+                if tcfg.grad_sharding is not None:
+                    # force the dW partial-sum reduction to land sharded
+                    # (reduce-scatter) instead of replicated (all-reduce)
+                    g = jax.tree_util.tree_map(
+                        jax.lax.with_sharding_constraint, g,
+                        tcfg.grad_sharding)
+                acc_loss, acc_g = acc
+                acc_g = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(a.dtype), acc_g, g)
+                return (acc_loss + loss, acc_g), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, tcfg.grad_accum_dtype),
+                state.params)
+            if tcfg.grad_sharding is not None:
+                zeros = jax.tree_util.tree_map(
+                    jax.lax.with_sharding_constraint, zeros,
+                    tcfg.grad_sharding)
+            (loss, grads), _ = lax.scan(micro, (0.0, zeros), (xs, ys))
+            loss = loss / mb
+            grads = jax.tree_util.tree_map(lambda g: g / mb, grads)
+        else:
+            loss, grads = grad_fn(state.params, inputs, labels)
+
+        grads, gnorm = opt.clip_by_global_norm(grads, tcfg.clip_norm)
+
+        err_state = state.err_state
+        if tcfg.compress_grads:
+            grads, err_state = gc.roundtrip(grads, err_state)
+
+        updates, opt_state = optimizer.update(grads, state.opt_state,
+                                              state.params)
+        params = opt.apply_updates(state.params, updates)
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "step": opt_state.step}
+        return TrainState(params, opt_state, err_state), metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Serving steps
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ArchConfig, use_kernel: bool = False,
+                      act_sharding=None) -> Callable:
+    """prefill_step(params, inputs) -> logits (forward only, remat off)."""
+
+    def prefill_step(params, inputs):
+        logits, _ = mdl.forward(params, cfg, inputs, use_kernel=use_kernel,
+                                remat=False, act_sharding=act_sharding)
+        return logits
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig) -> Callable:
+    """decode_step(params, state, tokens) -> (logits, state)."""
+
+    def step(params, state, tokens):
+        return mdl.decode_step(params, cfg, state, tokens)
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Host-side training loop with fault tolerance hooks
+# ---------------------------------------------------------------------------
+
+def train_loop(train_step: Callable, state: TrainState, data_iter,
+               num_steps: int, *, checkpoint_manager=None,
+               checkpoint_every: int = 100, monitor=None,
+               preemption_flag=None, log_every: int = 10,
+               start_step: int = 0):
+    """Run the loop with checkpoint/restart + straggler monitoring hooks.
+
+    ``preemption_flag``: a callable returning True when this host must stop
+    (SIGTERM handler sets it in launch/train.py); we checkpoint and exit
+    cleanly — the restart resumes from the same step with identical data.
+    """
+    history = []
+    step = start_step
+    for _ in range(num_steps):
+        t0 = time.perf_counter()
+        data_step, (x, y) = next(data_iter)
+        state, metrics = train_step(state, x, y)
+        if monitor is not None:
+            jax.block_until_ready(metrics["loss"])
+            monitor.record(step, time.perf_counter() - t0)
+        if step % log_every == 0:
+            history.append({k: float(v) for k, v in metrics.items()})
+        step += 1
+        if checkpoint_manager is not None and step % checkpoint_every == 0:
+            checkpoint_manager.save(step, state)
+        if preemption_flag is not None and preemption_flag():
+            if checkpoint_manager is not None:
+                checkpoint_manager.save(step, state, blocking=True)
+            break
+    if checkpoint_manager is not None:
+        checkpoint_manager.wait()
+    return state, history

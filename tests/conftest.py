@@ -1,0 +1,10 @@
+import jax
+import pytest
+
+# float64 gives the numerical headroom the implicit-diff precision tests need
+jax.config.update("jax_enable_x64", True)
+
+
+@pytest.fixture
+def rng():
+    return jax.random.PRNGKey(0)

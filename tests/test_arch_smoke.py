@@ -1,0 +1,194 @@
+"""Per-architecture smoke tests (assignment deliverable f).
+
+Each assigned arch instantiates its REDUCED config and runs one forward +
+train step on CPU, asserting output shapes and no NaNs.  Decode paths are
+checked for causal consistency against the full forward.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import (init_params, forward, loss_fn, init_decode_state,
+                          decode_step)
+from repro.models import moe as moe_lib
+
+ALL_ARCHS = configs.names()
+
+
+def _inputs(cfg, key, B=2, S=16):
+    if cfg.embedding_frontend == "stub_embeddings":
+        x = jax.random.normal(key, (B, S, cfg.d_model),
+                              dtype=jnp.float32)
+    else:
+        x = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    labels = jax.random.randint(jax.random.fold_in(key, 7), (B, S), 0,
+                                cfg.vocab_size)
+    return x, labels
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = configs.get(arch, smoke=True)
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    x, labels = _inputs(cfg, key)
+    logits, aux = forward(params, cfg, x, remat=False)
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+
+    # one SGD train step
+    loss, grads = jax.value_and_grad(
+        lambda p: loss_fn(p, cfg, x, labels, remat=False))(params)
+    assert jnp.isfinite(loss)
+    new_params = jax.tree_util.tree_map(
+        lambda p, g: p - 1e-3 * g.astype(p.dtype), params, grads)
+    loss2 = loss_fn(new_params, cfg, x, labels, remat=False)
+    assert jnp.isfinite(loss2)
+    for leaf in jax.tree_util.tree_leaves(grads):
+        assert not bool(jnp.any(jnp.isnan(leaf)))
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_remat_matches_no_remat(arch):
+    cfg = configs.get(arch, smoke=True)
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    x, labels = _inputs(cfg, key, B=1, S=8)
+    l1 = loss_fn(params, cfg, x, labels, remat=False)
+    l2 = loss_fn(params, cfg, x, labels, remat=True)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-5)
+
+
+@pytest.mark.parametrize("arch", [a for a in ALL_ARCHS
+                                  if configs.get(a).has_decoder])
+def test_smoke_decode_step(arch):
+    cfg = configs.get(arch, smoke=True)
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    x, _ = _inputs(cfg, key, B=2, S=4)
+    state = init_decode_state(cfg, 2, 16)
+    tok = x[:, :1]
+    logits, state = decode_step(params, cfg, state, tok)
+    assert logits.shape == (2, 1, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+    assert int(state.index) == 1
+
+
+@pytest.mark.parametrize("arch", ["llama3-405b", "qwen2.5-32b",
+                                  "deepseek-v2-236b", "granite-moe-3b-a800m",
+                                  "rwkv6-3b", "zamba2-7b", "qwen2-vl-72b"])
+def test_decode_matches_forward(arch):
+    """Token-by-token decode must reproduce the full causal forward —
+    validates KV caches, MLA latent caches, RWKV/Mamba recurrent states."""
+    cfg = configs.get(arch, smoke=True)
+    key = jax.random.PRNGKey(1)
+    params = init_params(key, cfg)
+    B, S = 2, 8
+    x, _ = _inputs(cfg, key, B=B, S=S)
+    full, _ = forward(params, cfg, x, remat=False)
+    state = init_decode_state(cfg, B, S + 4)
+    outs = []
+    for t in range(S):
+        tok = x[:, t:t + 1]
+        lg, state = decode_step(params, cfg, state, tok)
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(dec, np.float32), np.asarray(full, np.float32),
+        atol=5e-2, rtol=5e-2)   # bf16 accumulation tolerance
+
+
+def test_encoder_only_has_no_decode():
+    cfg = configs.get("hubert-xlarge", smoke=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError):
+        decode_step(params, cfg, init_decode_state(cfg, 1, 4),
+                    jnp.zeros((1, 1, cfg.d_model)))
+
+
+def test_encoder_attention_is_bidirectional():
+    cfg = configs.get("hubert-xlarge", smoke=True)
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    x, _ = _inputs(cfg, key, B=1, S=8)
+    base, _ = forward(params, cfg, x, remat=False)
+    # perturb the LAST frame: an encoder lets it affect position 0
+    x2 = x.at[:, -1].add(1.0)
+    out2, _ = forward(params, cfg, x2, remat=False)
+    assert float(jnp.max(jnp.abs(out2[:, 0] - base[:, 0]))) > 0
+
+
+def test_causal_lm_is_causal():
+    cfg = configs.get("llama3-405b", smoke=True)
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    x, _ = _inputs(cfg, key, B=1, S=8)
+    base, _ = forward(params, cfg, x, remat=False)
+    x2 = x.at[:, -1].set((x[:, -1] + 1) % cfg.vocab_size)
+    out2, _ = forward(params, cfg, x2, remat=False)
+    np.testing.assert_allclose(np.asarray(out2[:, :-1], np.float32),
+                               np.asarray(base[:, :-1], np.float32),
+                               atol=1e-5)
+
+
+def test_moe_sparse_matches_dense_dispatch():
+    """Capacity-unbounded sparse dispatch == dense-gated mixture."""
+    cfg = configs.get("granite-moe-3b-a800m", smoke=True)
+    key = jax.random.PRNGKey(0)
+    params = init_params(key, cfg)
+    bp = jax.tree_util.tree_map(lambda a: a[0], params["blocks"])
+    x = jax.random.normal(key, (2, 8, cfg.d_model),
+                          dtype=jnp.float32).astype(jnp.bfloat16)
+    dense_out, aux_d = moe_lib.moe_apply_dense(bp["mlp"], cfg, x)
+    sparse_out, aux_s = moe_lib.moe_apply_sparse(bp["mlp"], cfg, x,
+                                                 capacity_factor=100.0)
+    np.testing.assert_allclose(np.asarray(dense_out, np.float32),
+                               np.asarray(sparse_out, np.float32),
+                               atol=2e-2)
+    np.testing.assert_allclose(float(aux_d), float(aux_s), rtol=1e-5)
+
+
+def test_moe_router_balanced_at_init():
+    cfg = configs.get("granite-moe-3b-a800m", smoke=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    bp = jax.tree_util.tree_map(lambda a: a[0], params["blocks"])
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 32, cfg.d_model)
+                          ).astype(jnp.bfloat16)
+    _, aux = moe_lib.moe_apply_dense(bp["mlp"], cfg, x)
+    # perfectly balanced aux = k (top_k fraction routed × E);
+    # near-random router at init should be within 2x
+    assert float(aux) < 2.0 * cfg.moe.top_k + 1.0
+
+
+def test_param_count_formula_close_to_actual():
+    """Analytic 6ND input: formula within 25% of true parameter count."""
+    for arch in ["llama3-405b", "granite-moe-3b-a800m", "rwkv6-3b"]:
+        cfg = configs.get(arch, smoke=True)
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        actual = sum(int(np.prod(l.shape))
+                     for l in jax.tree_util.tree_leaves(params))
+        predicted = cfg.param_count()
+        assert abs(predicted - actual) / actual < 0.25, \
+            (arch, predicted, actual)
+
+
+def test_moe_gather_dispatch_matches_dense():
+    """Gather/scatter sparse dispatch (§Perf D1) == dense-gated mixture when
+    capacity is unbounded."""
+    cfg = configs.get("deepseek-v2-236b", smoke=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    bp = jax.tree_util.tree_map(lambda a: a[0], params["blocks"])
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model)
+                          ).astype(jnp.bfloat16)
+    dense, aux_d = moe_lib.moe_apply_dense(bp["mlp"], cfg, x)
+    sparse, aux_s = moe_lib.moe_apply_sparse_gather(bp["mlp"], cfg, x,
+                                                    capacity_factor=100.0)
+    np.testing.assert_allclose(np.asarray(dense, np.float32),
+                               np.asarray(sparse, np.float32), atol=5e-2)
+    np.testing.assert_allclose(float(aux_d), float(aux_s), rtol=1e-5)
+    # capacity actually binds when small: outputs differ but stay finite
+    tight, _ = moe_lib.moe_apply_sparse_gather(bp["mlp"], cfg, x,
+                                               capacity_factor=0.5)
+    assert bool(jnp.all(jnp.isfinite(tight.astype(jnp.float32))))

@@ -1,0 +1,257 @@
+"""Tests for the implicit differentiation core (paper §2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (custom_root, custom_fixed_point, custom_root_jvp,
+                        custom_fixed_point_jvp, root_vjp, root_jvp,
+                        optimality, projections)
+
+
+def _ridge_problem(key, m=20, d=5):
+    kx, ky = jax.random.split(key)
+    X = jax.random.normal(kx, (m, d))
+    y = jax.random.normal(ky, (m,))
+    return X, y
+
+
+def _ridge_closed_form_jac(X, y, theta):
+    d = X.shape[1]
+    A = X.T @ X + theta * jnp.eye(d)
+    return -jnp.linalg.solve(A, jnp.linalg.solve(A, X.T @ y))
+
+
+class TestCustomRoot:
+    """Fig. 1: ridge regression with a stationarity condition."""
+
+    @pytest.mark.parametrize("solve", ["cg", "normal_cg", "bicgstab",
+                                       "gmres", "lu"])
+    def test_ridge_jacobian_matches_closed_form(self, rng, solve):
+        X, y = _ridge_problem(rng)
+
+        def f(x, theta):
+            r = X @ x - y
+            return (jnp.sum(r ** 2) + theta * jnp.sum(x ** 2)) / 2
+
+        F = jax.grad(f, argnums=0)
+
+        @custom_root(F, solve=solve, tol=1e-12)
+        def ridge_solver(init_x, theta):
+            del init_x
+            d = X.shape[1]
+            return jnp.linalg.solve(X.T @ X + theta * jnp.eye(d), X.T @ y)
+
+        J = jax.jacobian(ridge_solver, argnums=1)(None, 10.0)
+        np.testing.assert_allclose(J, _ridge_closed_form_jac(X, y, 10.0),
+                                   atol=1e-7)
+
+    def test_forward_mode_matches_reverse(self, rng):
+        X, y = _ridge_problem(rng)
+
+        def f(x, theta):
+            r = X @ x - y
+            return (jnp.sum(r ** 2) + theta * jnp.sum(x ** 2)) / 2
+
+        F = jax.grad(f, argnums=0)
+
+        def solver(init_x, theta):
+            del init_x
+            d = X.shape[1]
+            return jnp.linalg.solve(X.T @ X + theta * jnp.eye(d), X.T @ y)
+
+        Jr = jax.jacobian(custom_root(F)(solver), argnums=1)(None, 3.0)
+        Jf = jax.jacfwd(custom_root_jvp(F)(solver), argnums=1)(None, 3.0)
+        np.testing.assert_allclose(Jr, Jf, atol=1e-8)
+
+    def test_multiple_theta_args_one_linear_solve(self, rng):
+        """Per-coordinate ridge: theta is a vector; grads to every arg."""
+        X, y = _ridge_problem(rng)
+        d = X.shape[1]
+
+        def f(x, theta_vec, offset):
+            r = X @ x - y - offset
+            return 0.5 * jnp.sum(r ** 2) + 0.5 * jnp.sum(theta_vec * x ** 2)
+
+        F = jax.grad(f, argnums=0)
+
+        @custom_root(F, tol=1e-12)
+        def solver(init_x, theta_vec, offset):
+            del init_x
+            return jnp.linalg.solve(X.T @ X + jnp.diag(theta_vec),
+                                    X.T @ (y + offset))
+
+        tv = jnp.full((d,), 2.0)
+        off = jnp.zeros(X.shape[0])
+        g1, g2 = jax.grad(lambda a, b: jnp.sum(solver(None, a, b) ** 2),
+                          argnums=(0, 1))(tv, off)
+        # finite differences
+        eps = 1e-6
+        base = jnp.sum(solver(None, tv, off) ** 2)
+        fd = (jnp.sum(solver(None, tv.at[0].add(eps), off) ** 2) - base) / eps
+        np.testing.assert_allclose(g1[0], fd, rtol=1e-4)
+        fd2 = (jnp.sum(solver(None, tv, off.at[3].add(eps)) ** 2) - base) / eps
+        np.testing.assert_allclose(g2[3], fd2, rtol=1e-4)
+
+    def test_has_aux(self, rng):
+        X, y = _ridge_problem(rng)
+        F = jax.grad(lambda x, t: 0.5 * jnp.sum((X @ x - y) ** 2)
+                     + 0.5 * t * jnp.sum(x ** 2), argnums=0)
+
+        @custom_root(F, has_aux=True)
+        def solver(init_x, theta):
+            d = X.shape[1]
+            x = jnp.linalg.solve(X.T @ X + theta * jnp.eye(d), X.T @ y)
+            return x, {"iters": jnp.asarray(3)}
+
+        def loss(theta):
+            x, aux = solver(None, theta)
+            return jnp.sum(x ** 2)
+
+        g = jax.grad(loss)(10.0)
+        Jtrue = _ridge_closed_form_jac(X, y, 10.0)
+        x_star = solver(None, 10.0)[0]
+        np.testing.assert_allclose(g, 2 * x_star @ Jtrue, atol=1e-7)
+
+    def test_init_gets_zero_gradient(self, rng):
+        X, y = _ridge_problem(rng)
+        F = jax.grad(lambda x, t: 0.5 * jnp.sum((X @ x - y) ** 2)
+                     + 0.5 * t * jnp.sum(x ** 2), argnums=0)
+
+        @custom_root(F)
+        def solver(init_x, theta):
+            d = X.shape[1]
+            return jnp.linalg.solve(X.T @ X + theta * jnp.eye(d),
+                                    X.T @ y) + 0.0 * init_x
+
+        g = jax.grad(lambda i: jnp.sum(solver(i, 1.0)))(jnp.ones(X.shape[1]))
+        np.testing.assert_allclose(g, 0.0, atol=1e-12)
+
+
+class TestFixedPoint:
+
+    def test_gradient_descent_fp_equals_stationary(self, rng):
+        """Eq. (5): the stepsize cancels — same Jacobian as eq. (4)."""
+        X, y = _ridge_problem(rng)
+        d = X.shape[1]
+
+        def f(x, theta):
+            return 0.5 * jnp.sum((X @ x - y) ** 2) + \
+                0.5 * theta * jnp.sum(x ** 2)
+
+        def solver(init_x, theta):
+            del init_x
+            return jnp.linalg.solve(X.T @ X + theta * jnp.eye(d), X.T @ y)
+
+        T = optimality.gradient_descent_fp(f, stepsize=0.123)
+        J_fp = jax.jacobian(custom_fixed_point(T)(solver), argnums=1)(
+            None, 5.0)
+        np.testing.assert_allclose(J_fp, _ridge_closed_form_jac(X, y, 5.0),
+                                   atol=1e-7)
+
+    def test_contraction_fixed_point(self, rng):
+        """x* = M x* + theta with ||M|| < 1: J = (I − M)⁻¹."""
+        M = 0.3 * jax.random.orthogonal(rng, 6)
+
+        def T(x, theta):
+            return M @ x + theta
+
+        def solver(init, theta):
+            return jnp.linalg.solve(jnp.eye(6) - M, theta)
+
+        J = jax.jacobian(custom_fixed_point(T)(solver), argnums=1)(
+            jnp.zeros(6), jnp.ones(6))
+        np.testing.assert_allclose(J, jnp.linalg.inv(jnp.eye(6) - M),
+                                   atol=1e-8)
+
+    def test_fixed_point_jvp_wrapper(self, rng):
+        M = 0.3 * jax.random.orthogonal(rng, 6)
+
+        def T(x, theta):
+            return M @ x + theta
+
+        def solver(init, theta):
+            return jnp.linalg.solve(jnp.eye(6) - M, theta)
+
+        wrapped = custom_fixed_point_jvp(T)(solver)
+        v = jax.random.normal(rng, (6,))
+        _, jv = jax.jvp(lambda t: wrapped(jnp.zeros(6), t),
+                        (jnp.ones(6),), (v,))
+        np.testing.assert_allclose(jv, jnp.linalg.solve(jnp.eye(6) - M, v),
+                                   atol=1e-8)
+
+
+class TestLowLevel:
+
+    def test_root_vjp_root_jvp_consistent(self, rng):
+        """<v, J u> computed both ways must agree."""
+        k1, k2, k3 = jax.random.split(rng, 3)
+        Q = jax.random.normal(k1, (5, 5))
+        Q = Q @ Q.T + 5 * jnp.eye(5)
+
+        def F(x, theta):
+            return Q @ x - theta ** 2   # x*(θ) = Q⁻¹ θ²
+
+        x_star = jnp.linalg.solve(Q, jnp.ones(5))
+        theta = jnp.ones(5)
+        v = jax.random.normal(k2, (5,))
+        u = jax.random.normal(k3, (5,))
+        (vjp_out,) = root_vjp(F, x_star, (theta,), v, tol=1e-12)
+        jvp_out = root_jvp(F, x_star, (theta,), (u,), tol=1e-12)
+        np.testing.assert_allclose(jnp.vdot(vjp_out, u),
+                                   jnp.vdot(v, jvp_out), rtol=1e-8)
+
+    def test_pytree_x_and_theta(self, rng):
+        """x and theta both dict pytrees."""
+        def F(x, theta):
+            return {"a": 2.0 * x["a"] - theta["p"],
+                    "b": 3.0 * x["b"] - theta["q"]}
+
+        def solver(init, theta):
+            return {"a": theta["p"] / 2.0, "b": theta["q"] / 3.0}
+
+        wrapped = custom_root(F)(solver)
+        theta = {"p": jnp.ones(3), "q": jnp.ones(2)}
+        g = jax.grad(lambda t: jnp.sum(wrapped(None, t)["a"])
+                     + jnp.sum(wrapped(None, t)["b"]))(theta)
+        np.testing.assert_allclose(g["p"], 0.5, atol=1e-9)
+        np.testing.assert_allclose(g["q"], 1 / 3, atol=1e-9)
+
+
+class TestJacobianPrecision:
+    """Theorem 1: ||J(x̂) − ∂x*|| ≤ C ||x̂ − x*|| — the Fig. 3 law."""
+
+    def test_error_scales_linearly_with_iterate_error(self, rng):
+        X, y = _ridge_problem(rng, m=30, d=8)
+        d = 8
+        theta = 1.0
+
+        def f(x, theta):
+            return 0.5 * jnp.sum((X @ x - y) ** 2) + \
+                0.5 * theta * jnp.sum(x ** 2)
+
+        F = jax.grad(f, argnums=0)
+        x_star = jnp.linalg.solve(X.T @ X + theta * jnp.eye(d), X.T @ y)
+        J_star = _ridge_closed_form_jac(X, y, theta)
+
+        def J_at(x_hat):
+            """Definition 1: solve A(x̂)J = B(x̂) at an approximate root."""
+            jac_err = root_jvp(F, x_hat, (theta,), (1.0,), tol=1e-13)
+            return jac_err
+
+        errs_x, errs_j = [], []
+        L = jnp.linalg.eigvalsh(X.T @ X + theta * jnp.eye(d)).max()
+        x = jnp.zeros(d)
+        for t in range(1, 60, 4):
+            x_t = x
+            for _ in range(t):
+                x_t = x_t - (1.0 / L) * F(x_t, theta)
+            errs_x.append(float(jnp.linalg.norm(x_t - x_star)))
+            errs_j.append(float(jnp.linalg.norm(J_at(x_t) - J_star)))
+        errs_x, errs_j = np.asarray(errs_x), np.asarray(errs_j)
+        mask = errs_x > 1e-12
+        ratio = errs_j[mask] / errs_x[mask]
+        # Thm 1: ratio bounded by a constant (no blow-up as x̂ → x*)
+        assert ratio.max() < 100 * ratio.min() + 1e-9
+        # and the Jacobian error decreases with the iterate error
+        assert errs_j[mask][-1] < errs_j[mask][0] * 1e-2

@@ -1,0 +1,231 @@
+"""Pallas kernel tests: shape/dtype sweeps vs pure-jnp oracles
+(interpret=True executes the kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rwkv_wkv.ops import wkv
+from repro.kernels.rwkv_wkv.ref import wkv_scan_ref
+from repro.kernels.simplex_proj.ops import projection_simplex_batched
+from repro.kernels.simplex_proj.ref import projection_simplex_ref
+
+
+class TestFlashAttention:
+
+    @pytest.mark.parametrize("B,S,H,Hkv,D", [
+        (2, 256, 4, 2, 64),     # GQA group 2
+        (1, 128, 2, 2, 128),    # MHA, wide head
+        (2, 512, 8, 2, 64),     # longer seq, group 4
+        (1, 256, 4, 1, 64),     # MQA
+    ])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_matches_reference(self, B, S, H, Hkv, D, causal):
+        key = jax.random.PRNGKey(0)
+        q = jax.random.normal(key, (B, S, H, D), jnp.float32)
+        k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, Hkv, D),
+                              jnp.float32)
+        v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, Hkv, D),
+                              jnp.float32)
+        out = flash_attention(q, k, v, causal=causal, interpret=True)
+        kr = jnp.repeat(k, H // Hkv, 2)
+        vr = jnp.repeat(v, H // Hkv, 2)
+        ref = attention_ref(q, kr, vr, causal=causal)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=3e-5)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        key = jax.random.PRNGKey(1)
+        q = jax.random.normal(key, (1, 128, 2, 64)).astype(dtype)
+        k = jax.random.normal(jax.random.fold_in(key, 1),
+                              (1, 128, 2, 64)).astype(dtype)
+        v = jax.random.normal(jax.random.fold_in(key, 2),
+                              (1, 128, 2, 64)).astype(dtype)
+        out = flash_attention(q, k, v, interpret=True)
+        ref = attention_ref(q, k, v)
+        atol = 3e-5 if dtype == jnp.float32 else 5e-2
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32), atol=atol)
+        assert out.dtype == dtype
+
+    @pytest.mark.parametrize("block_q,block_k", [(64, 64), (128, 64),
+                                                 (64, 128)])
+    def test_block_shapes(self, block_q, block_k):
+        key = jax.random.PRNGKey(2)
+        q = jax.random.normal(key, (1, 256, 2, 64), jnp.float32)
+        k = jax.random.normal(jax.random.fold_in(key, 1), (1, 256, 2, 64),
+                              jnp.float32)
+        v = jax.random.normal(jax.random.fold_in(key, 2), (1, 256, 2, 64),
+                              jnp.float32)
+        out = flash_attention(q, k, v, block_q=block_q, block_k=block_k,
+                              interpret=True)
+        ref = attention_ref(q, k, v)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=3e-5)
+
+
+class TestWKV:
+
+    @pytest.mark.parametrize("B,T,H", [(1, 64, 1), (2, 128, 3), (1, 256, 2)])
+    def test_matches_reference(self, B, T, H):
+        N = 64
+        key = jax.random.PRNGKey(0)
+        r = jax.random.normal(key, (B, T, H, N)) * 0.5
+        k = jax.random.normal(jax.random.fold_in(key, 1), (B, T, H, N)) * 0.5
+        v = jax.random.normal(jax.random.fold_in(key, 2), (B, T, H, N)) * 0.5
+        w = jax.nn.sigmoid(jax.random.normal(jax.random.fold_in(key, 3),
+                                             (B, T, H, N))) * 0.5 + 0.4
+        u = jax.random.normal(jax.random.fold_in(key, 4), (H, N)) * 0.1
+        out, sT = wkv(r, k, v, w, u, interpret=True)
+        ref, sref = wkv_scan_ref(r, k, v, w, u)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-4)
+        np.testing.assert_allclose(np.asarray(sT), np.asarray(sref),
+                                   atol=1e-4)
+
+    def test_carried_state(self):
+        """Two chunked calls with carried state == one long call."""
+        N, B, T, H = 64, 1, 128, 2
+        key = jax.random.PRNGKey(5)
+        r = jax.random.normal(key, (B, T, H, N)) * 0.5
+        k = jax.random.normal(jax.random.fold_in(key, 1), (B, T, H, N)) * 0.5
+        v = jax.random.normal(jax.random.fold_in(key, 2), (B, T, H, N)) * 0.5
+        w = jnp.full((B, T, H, N), 0.9)
+        u = jnp.zeros((H, N))
+        full, _ = wkv(r, k, v, w, u, interpret=True)
+        h1, s1 = wkv(r[:, :64], k[:, :64], v[:, :64], w[:, :64], u,
+                     interpret=True)
+        h2, _ = wkv(r[:, 64:], k[:, 64:], v[:, 64:], w[:, 64:], u, s1,
+                    interpret=True)
+        np.testing.assert_allclose(np.asarray(jnp.concatenate([h1, h2], 1)),
+                                   np.asarray(full), atol=1e-4)
+
+    @pytest.mark.parametrize("chunk", [32, 64, 128])
+    def test_chunk_invariance(self, chunk):
+        N, B, T, H = 64, 1, 128, 1
+        key = jax.random.PRNGKey(7)
+        args = [jax.random.normal(jax.random.fold_in(key, i),
+                                  (B, T, H, N)) * 0.5 for i in range(3)]
+        w = jnp.full((B, T, H, N), 0.95)
+        u = jnp.zeros((H, N))
+        out, _ = wkv(*args, w, u, chunk=chunk, interpret=True)
+        ref, _ = wkv_scan_ref(*args, w, u)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-4)
+
+
+class TestSimplexKernel:
+
+    @pytest.mark.parametrize("R,d", [(8, 16), (16, 33), (32, 128), (4, 5)])
+    def test_matches_sort_based_oracle(self, R, d):
+        key = jax.random.PRNGKey(0)
+        Y = jax.random.normal(key, (R, d)) * 3
+        out = projection_simplex_batched(Y, 1.0, True)
+        ref = projection_simplex_ref(Y)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-5)
+
+    @pytest.mark.parametrize("scale", [0.5, 1.0, 3.0])
+    def test_scales(self, scale):
+        Y = jax.random.normal(jax.random.PRNGKey(1), (8, 20)) * 2
+        out = projection_simplex_batched(Y, scale, True)
+        np.testing.assert_allclose(np.asarray(jnp.sum(out, -1)), scale,
+                                   atol=1e-5)
+        assert bool(jnp.all(out >= 0))
+
+    def test_custom_jvp_matches_closed_form(self):
+        # avoid kinks (coordinates exactly at the support boundary)
+        y = jnp.array([0.3, -0.1, 0.8, 0.07])
+        J = jax.jacfwd(
+            lambda y: projection_simplex_batched(y[None], 1.0, True)[0])(y)
+        Jr = jax.jacobian(projection_simplex_ref)(y)
+        np.testing.assert_allclose(np.asarray(J), np.asarray(Jr), atol=1e-9)
+
+    def test_3d_batch(self):
+        Y = jax.random.normal(jax.random.PRNGKey(2), (2, 8, 12))
+        out = projection_simplex_batched(Y, 1.0, True)
+        ref = projection_simplex_ref(Y)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-5)
+
+
+class TestKernelsInsideModel:
+    """use_kernel=True paths agree with the jnp reference paths."""
+
+    def test_attention_layer_kernel_path(self):
+        from repro import configs
+        from repro.models import init_params, forward
+        cfg = configs.get("llama3-405b", smoke=True)
+        key = jax.random.PRNGKey(0)
+        params = init_params(key, cfg)
+        x = jax.random.randint(key, (1, 128), 0, cfg.vocab_size)
+        ref, _ = forward(params, cfg, x, use_kernel=False, remat=False)
+        # interpret=True is plumbed via ops default only in tests: monkey-
+        # patch the op to force interpret mode on CPU.
+        import repro.kernels.flash_attention.ops as fa_ops
+        import repro.models.layers as mlayers
+        orig = fa_ops.flash_attention
+        try:
+            fa_ops.flash_attention = lambda q, k, v, causal=True: orig(
+                q, k, v, causal=causal, interpret=True)
+            out, _ = forward(params, cfg, x, use_kernel=True, remat=False)
+        finally:
+            fa_ops.flash_attention = orig
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   atol=0.15, rtol=0.1)   # bf16 paths
+
+
+class TestChunkedWKV:
+    """The chunked WKV schedule (§Perf R1) must match the sequential oracle."""
+
+    @pytest.mark.parametrize("T,chunk", [(64, 32), (128, 32), (256, 64)])
+    def test_matches_sequential(self, T, chunk):
+        from repro.models.rwkv import wkv_chunked
+        N, B, H = 64, 2, 3
+        key = jax.random.PRNGKey(0)
+        r = jax.random.normal(key, (B, T, H, N)) * 0.5
+        k = jax.random.normal(jax.random.fold_in(key, 1), (B, T, H, N)) * 0.5
+        v = jax.random.normal(jax.random.fold_in(key, 2), (B, T, H, N)) * 0.5
+        dec = -6.0 + jnp.tanh(jax.random.normal(jax.random.fold_in(key, 3),
+                                                (B, T, H, N)))
+        w = jnp.exp(-jnp.exp(dec))
+        u = jax.random.normal(jax.random.fold_in(key, 4), (H, N)) * 0.1
+        ref, sref = wkv_scan_ref(r, k, v, w, u)
+        out, sT = wkv_chunked(r, k, v, w, u, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-4)
+        np.testing.assert_allclose(np.asarray(sT), np.asarray(sref),
+                                   atol=2e-4)
+
+    def test_strong_decay_stable(self):
+        """The log-space clamp keeps strong decay finite and accurate."""
+        from repro.models.rwkv import wkv_chunked
+        N, B, T, H = 64, 1, 64, 2
+        key = jax.random.PRNGKey(5)
+        r = jax.random.normal(key, (B, T, H, N)) * 0.5
+        k = jax.random.normal(jax.random.fold_in(key, 1), (B, T, H, N)) * 0.5
+        v = jax.random.normal(jax.random.fold_in(key, 2), (B, T, H, N)) * 0.5
+        w = jnp.full((B, T, H, N), 0.1)   # strong decay (cum |log w| ≈ 74)
+        u = jnp.zeros((H, N))
+        ref, _ = wkv_scan_ref(r, k, v, w, u)
+        out, _ = wkv_chunked(r, k, v, w, u, chunk=32)
+        assert bool(jnp.all(jnp.isfinite(out)))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-4)
+
+    def test_gradients_flow(self):
+        from repro.models.rwkv import wkv_chunked
+        N, B, T, H = 64, 1, 64, 1
+        key = jax.random.PRNGKey(7)
+        r = jax.random.normal(key, (B, T, H, N)) * 0.5
+        k = jax.random.normal(jax.random.fold_in(key, 1), (B, T, H, N)) * 0.5
+        v = jax.random.normal(jax.random.fold_in(key, 2), (B, T, H, N)) * 0.5
+        w = jnp.full((B, T, H, N), 0.95)
+        u = jnp.zeros((H, N))
+        g = jax.grad(lambda k: jnp.sum(wkv_chunked(r, k, v, w, u)[0] ** 2))(k)
+        assert bool(jnp.all(jnp.isfinite(g)))
+        assert float(jnp.max(jnp.abs(g))) > 0

@@ -1,0 +1,117 @@
+"""Matrix-free linear solver tests, incl. hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import linear_solve as ls
+
+
+def _spd(key, d, cond=10.0):
+    A = jax.random.normal(key, (d, d))
+    A = A @ A.T
+    return A + (jnp.trace(A) / d / cond) * jnp.eye(d)
+
+
+@pytest.mark.parametrize("name", ["cg", "normal_cg", "bicgstab", "gmres",
+                                  "lu"])
+def test_spd_solve(rng, name):
+    A = _spd(rng, 12)
+    b = jax.random.normal(jax.random.fold_in(rng, 1), (12,))
+    x = ls.get_solver(name)(lambda v: A @ v, b, tol=1e-12)
+    np.testing.assert_allclose(A @ x, b, atol=1e-6)
+
+
+@pytest.mark.parametrize("name", ["normal_cg", "bicgstab", "gmres"])
+def test_nonsymmetric_solve(rng, name):
+    A = jax.random.normal(rng, (10, 10)) + 5 * jnp.eye(10)
+    b = jax.random.normal(jax.random.fold_in(rng, 1), (10,))
+    x = ls.get_solver(name)(lambda v: A @ v, b, tol=1e-12)
+    np.testing.assert_allclose(A @ x, b, atol=1e-6)
+
+
+def test_pytree_rhs(rng):
+    """Solvers operate on pytrees, not just flat vectors."""
+    k1, k2 = jax.random.split(rng)
+    Qa = _spd(k1, 4)
+    Qb = _spd(k2, 3)
+
+    def matvec(tree):
+        return {"a": Qa @ tree["a"], "b": Qb @ tree["b"]}
+
+    b = {"a": jnp.ones(4), "b": jnp.ones(3)}
+    x = ls.solve_cg(matvec, b, tol=1e-12)
+    np.testing.assert_allclose(Qa @ x["a"], b["a"], atol=1e-8)
+    np.testing.assert_allclose(Qb @ x["b"], b["b"], atol=1e-8)
+
+
+def test_neumann_contraction(rng):
+    """(I − M)x = b with ||M||<1: Neumann series converges geometrically."""
+    M = 0.4 * jax.random.orthogonal(rng, 6)
+    A = jnp.eye(6) - M
+    b = jnp.ones(6)
+    x_exact = jnp.linalg.solve(A, b)
+    x10 = ls.solve_neumann(lambda v: A @ v, b, maxiter=10)
+    x40 = ls.solve_neumann(lambda v: A @ v, b, maxiter=40)
+    assert jnp.linalg.norm(x40 - x_exact) < jnp.linalg.norm(x10 - x_exact)
+    np.testing.assert_allclose(x40, x_exact, atol=1e-9)
+
+
+def test_ridge_regularized_solve(rng):
+    """Singular A + ridge damping still returns a finite least-squares-ish x."""
+    A = jnp.diag(jnp.array([1.0, 2.0, 0.0]))
+    b = jnp.array([1.0, 1.0, 0.0])
+    x = ls.solve_cg(lambda v: A @ v, b, ridge=1e-3, tol=1e-12)
+    assert jnp.all(jnp.isfinite(x))
+    np.testing.assert_allclose(x[:2], jnp.array([1.0 / 1.001, 1.0 / 2.001]),
+                               rtol=1e-3)
+
+
+def test_make_rmatvec(rng):
+    A = jax.random.normal(rng, (7, 7))
+    rmv = ls.make_rmatvec(lambda v: A @ v, jnp.zeros(7))
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (7,))
+    np.testing.assert_allclose(rmv(v), A.T @ v, atol=1e-10)
+
+
+def test_materialize_matrix(rng):
+    A = jax.random.normal(rng, (5, 5))
+    M = ls.materialize_matrix(lambda v: A @ v, jnp.zeros(5))
+    np.testing.assert_allclose(M, A, atol=1e-12)
+
+
+def test_solvers_jit_and_grad_safe(rng):
+    """Solvers must be usable inside jit and under grad (while_loop based)."""
+    A = _spd(rng, 6)
+
+    @jax.jit
+    def solve(b):
+        return ls.solve_cg(lambda v: A @ v, b, tol=1e-12)
+
+    b = jnp.ones(6)
+    np.testing.assert_allclose(A @ solve(b), b, atol=1e-8)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), d=st.integers(2, 16))
+def test_property_cg_solves_any_spd(seed, d):
+    """Property: CG solves every well-conditioned SPD system to tolerance."""
+    key = jax.random.PRNGKey(seed)
+    A = _spd(key, d, cond=50.0)
+    b = jax.random.normal(jax.random.fold_in(key, 1), (d,))
+    x = ls.solve_cg(lambda v: A @ v, b, tol=1e-10, maxiter=10 * d)
+    residual = float(jnp.linalg.norm(A @ x - b) / jnp.linalg.norm(b))
+    assert residual < 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), d=st.integers(2, 12))
+def test_property_gmres_equals_bicgstab(seed, d):
+    """Property: two general-purpose solvers agree on the same system."""
+    key = jax.random.PRNGKey(seed)
+    A = jax.random.normal(key, (d, d)) + (d + 2) * jnp.eye(d)
+    b = jax.random.normal(jax.random.fold_in(key, 1), (d,))
+    xg = ls.solve_gmres(lambda v: A @ v, b, tol=1e-12)
+    xb = ls.solve_bicgstab(lambda v: A @ v, b, tol=1e-12)
+    np.testing.assert_allclose(xg, xb, atol=1e-5)

@@ -1,0 +1,217 @@
+"""Optimality-condition catalog tests (paper Table 1, §2.2, Appendix A)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (custom_root, custom_fixed_point, optimality,
+                        projections, prox, solvers)
+
+
+class TestKKT:
+    """Equality-constrained QP (paper eq. 16): closed-form check."""
+
+    def _qp(self, rng):
+        k1, k2 = jax.random.split(rng)
+        Q = jax.random.normal(k1, (4, 4))
+        Q = Q @ Q.T + 4 * jnp.eye(4)
+        E = jax.random.normal(k2, (2, 4))
+        return Q, E
+
+    def test_eq_qp_jacobian(self, rng):
+        Q, E = self._qp(rng)
+        c = jnp.ones(4)
+        d_vec = jnp.array([1.0, -1.0])
+
+        def f(z, theta_f):
+            cc = theta_f
+            return 0.5 * z @ Q @ z + cc @ z
+
+        def H(z, theta_H):
+            dd = theta_H
+            return E @ z - dd
+
+        F = optimality.kkt(f, H=H)
+
+        def kkt_solve(cc, dd):
+            KKT = jnp.block([[Q, E.T], [E, jnp.zeros((2, 2))]])
+            rhs = jnp.concatenate([-cc, dd])
+            zn = jnp.linalg.solve(KKT, rhs)
+            return zn[:4], zn[4:]
+
+        @custom_root(F, tol=1e-12, solve="normal_cg")
+        def solver(init, theta):
+            cc, dd = theta
+            z, nu = kkt_solve(cc, dd)
+            return (z, nu)
+
+        def primal(theta):
+            return solver(None, theta)[0]
+
+        theta = (c, d_vec)
+        J_c = jax.jacobian(lambda cc: primal((cc, d_vec)))(c)
+        # closed form via full KKT matrix inverse
+        KKT = jnp.block([[Q, E.T], [E, jnp.zeros((2, 2))]])
+        Kinv = jnp.linalg.inv(KKT)
+        J_true = -Kinv[:4, :4]
+        np.testing.assert_allclose(J_c, J_true, atol=1e-7)
+
+    def test_ineq_qp_matches_projection(self, rng):
+        """min ½‖z − y‖² s.t. −z ≤ 0  ⇒ z* = relu(y); check KKT Jacobian."""
+        y0 = jnp.array([0.5, -0.3, 1.2])
+
+        def f(z, theta_f):
+            return 0.5 * jnp.sum((z - theta_f) ** 2)
+
+        def G(z, theta_G):
+            del theta_G
+            return -z
+
+        F = optimality.kkt(f, G=G)
+
+        @custom_root(F, tol=1e-12)
+        def solver(init, theta):
+            y, _ = theta
+            z = jnp.maximum(y, 0.0)
+            lam = jnp.maximum(-y, 0.0)   # dual = negative part
+            return (z, lam)
+
+        J = jax.jacobian(lambda y: solver(None, (y, None))[0])(y0)
+        s = (y0 > 0).astype(jnp.float64)
+        np.testing.assert_allclose(J, jnp.diag(s), atol=1e-8)
+
+
+class TestFixedPointMappings:
+
+    def test_proximal_gradient_fp_lasso(self, rng):
+        """Lasso via prox-grad fixed point; Jacobian wrt λ on the support
+        matches the closed form dx*/dλ = −(XᵀX)⁻¹_supp sign(x*)."""
+        k1, k2 = jax.random.split(rng)
+        X = jax.random.normal(k1, (20, 5))
+        y = jax.random.normal(k2, (20,))
+        L = float(jnp.linalg.eigvalsh(X.T @ X).max())
+
+        def f(x, theta_f):
+            del theta_f
+            return 0.5 * jnp.sum((X @ x - y) ** 2)
+
+        def pr(v, lam, scaling):
+            return prox.prox_lasso(v, lam, scaling)
+
+        T = optimality.proximal_gradient_fp(f, pr, stepsize=1.0 / L)
+
+        def solver(init, theta):
+            _, lam = theta
+            return solvers.proximal_gradient(
+                f, pr, jnp.zeros(5), (None, lam), stepsize=1.0 / L,
+                maxiter=20000, tol=1e-14)
+
+        lam0 = 2.0
+        wrapped = custom_fixed_point(T, tol=1e-12)(solver)
+        x_star = wrapped(None, (None, lam0))
+        supp = jnp.abs(x_star) > 1e-10
+        dx = jax.jacobian(lambda lam: wrapped(None, (None, lam)))(lam0)
+        # closed form on the support
+        idx = np.where(np.asarray(supp))[0]
+        Xs = X[:, idx]
+        expected = -np.linalg.solve(np.asarray(Xs.T @ Xs),
+                                    np.sign(np.asarray(x_star[idx])))
+        np.testing.assert_allclose(np.asarray(dx)[idx], expected, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(dx)[~np.asarray(supp)], 0.0,
+                                   atol=1e-8)
+
+    def test_mirror_descent_fp_matches_projected_gradient_fp(self, rng):
+        """Same x*, different F — both must give the same Jacobian (a.e.)."""
+        theta0 = jnp.array([0.2, 0.8, 0.4])
+
+        def f(x, theta_f):
+            return 0.5 * jnp.sum((x - theta_f) ** 2)
+
+        proj_e = lambda v, tp: projections.projection_simplex(v)
+        proj_kl = lambda v, tp: projections.projection_simplex_kl(v)
+
+        T_pg = optimality.projected_gradient_fp(f, proj_e, stepsize=0.7)
+        T_md = optimality.mirror_descent_fp(f, proj_kl,
+                                            optimality.kl_phi_grad,
+                                            stepsize=0.9)
+
+        def solver(init, theta):
+            theta_f, _ = theta
+            return solvers.projected_gradient(
+                f, proj_e, jnp.ones(3) / 3, (theta_f, None), stepsize=0.5,
+                maxiter=5000, tol=1e-14)
+
+        J_pg = jax.jacobian(
+            lambda t: custom_fixed_point(T_pg)(solver)(None, (t, None)))(
+                theta0)
+        J_md = jax.jacobian(
+            lambda t: custom_fixed_point(T_md)(solver)(None, (t, None)))(
+                theta0)
+        np.testing.assert_allclose(J_pg, J_md, atol=1e-6)
+
+    def test_newton_fp_same_system_as_gradient_fp(self, rng):
+        """Appendix A: Newton fixed point ⇒ same implicit linear system."""
+        Q = jnp.diag(jnp.array([1.0, 3.0]))
+
+        def f(x, theta):
+            return 0.5 * x @ Q @ x - theta @ x
+
+        def solver(init, theta):
+            return jnp.linalg.solve(Q, theta)
+
+        T_gd = optimality.gradient_descent_fp(f, 0.1)
+        G = jax.grad(f, argnums=0)
+        T_nt = optimality.newton_fp(G, stepsize=0.5)
+        theta0 = jnp.array([1.0, -2.0])
+        J_gd = jax.jacobian(custom_fixed_point(T_gd)(solver), argnums=1)(
+            None, theta0)
+        J_nt = jax.jacobian(custom_fixed_point(T_nt)(solver), argnums=1)(
+            None, theta0)
+        np.testing.assert_allclose(J_gd, jnp.linalg.inv(Q), atol=1e-8)
+        np.testing.assert_allclose(J_nt, jnp.linalg.inv(Q), atol=1e-6)
+
+    def test_block_prox_fp_equals_prox_fp_with_shared_stepsize(self, rng):
+        X = jax.random.normal(rng, (10, 4))
+        y = jnp.ones(10)
+        L = float(jnp.linalg.eigvalsh(X.T @ X).max())
+
+        def f(x, theta_f):
+            xx = jnp.concatenate(x) if isinstance(x, tuple) else x
+            return 0.5 * jnp.sum((X @ xx - y) ** 2)
+
+        pr = lambda v, lam, s: prox.prox_lasso(v, lam, s)
+        T_full = optimality.proximal_gradient_fp(f, pr, stepsize=1.0 / L)
+
+        def f_blocks(x, theta_f):
+            return f(jnp.concatenate(x), theta_f)
+
+        T_blk = optimality.block_proximal_gradient_fp(
+            f_blocks, [pr, pr], stepsizes=(1.0 / L, 1.0 / L))
+
+        x = jnp.array([0.1, -0.2, 0.3, 0.0])
+        lam = 0.05
+        full = T_full(x, (None, lam))
+        blk = T_blk((x[:2], x[2:]), (None, (lam, lam)))
+        np.testing.assert_allclose(full, jnp.concatenate(blk), atol=1e-12)
+
+
+class TestConic:
+    """Conic residual map (eq. 18) on a tiny LP."""
+
+    def test_residual_zero_at_optimum(self):
+        # min x s.t. x >= 1  (one var, one nonneg-cone constraint):
+        # conic form: c=1, E=-1, d=-1, s = x - 1 ∈ K=R+
+        c = jnp.array([1.0])
+        E = jnp.array([[-1.0]])
+        d = jnp.array([-1.0])
+        theta = jnp.block([
+            [jnp.zeros((1, 1)), E.T, c[:, None]],
+            [-E, jnp.zeros((1, 1)), d[:, None]],
+            [-c[None, :], -d[None, :], jnp.zeros((1, 1))],
+        ])
+        proj = optimality.make_cone_projector(
+            1, [(1, lambda v: jnp.maximum(v, 0.0))])
+        F = optimality.conic_residual(proj)
+        # primal x*=1, dual y*=1, tau=1 -> u=(x, y, tau)=(1, 1, 1), v=0
+        x = jnp.array([1.0, 1.0, 1.0])
+        np.testing.assert_allclose(F(x, theta), 0.0, atol=1e-9)

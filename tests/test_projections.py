@@ -1,0 +1,236 @@
+"""Projection and prox catalog tests (paper Appendix C), with property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import projections as P
+from repro.core import prox as prx
+
+
+# ---------------------------------------------------------------------------
+# Simplex
+# ---------------------------------------------------------------------------
+
+class TestSimplex:
+
+    def test_projection_feasible(self, rng):
+        y = jax.random.normal(rng, (7,)) * 3
+        x = P.projection_simplex(y)
+        assert jnp.all(x >= 0)
+        np.testing.assert_allclose(jnp.sum(x), 1.0, atol=1e-9)
+
+    def test_already_on_simplex_is_identity(self):
+        y = jnp.array([0.2, 0.3, 0.5])
+        np.testing.assert_allclose(P.projection_simplex(y), y, atol=1e-9)
+
+    def test_jacobian_closed_form(self, rng):
+        """Appendix C: ∂proj = diag(s) − ssᵀ/‖s‖₁ with s the support."""
+        y = jnp.array([0.3, -0.1, 0.8, 0.05])
+        x = P.projection_simplex(y)
+        s = (x > 0).astype(jnp.float64)
+        J = jax.jacobian(P.projection_simplex)(y)
+        J_true = jnp.diag(s) - jnp.outer(s, s) / jnp.sum(s)
+        np.testing.assert_allclose(J, J_true, atol=1e-9)
+
+    def test_batched(self, rng):
+        Y = jax.random.normal(rng, (5, 9))
+        X = P.projection_simplex(Y)
+        np.testing.assert_allclose(jnp.sum(X, -1), jnp.ones(5), atol=1e-9)
+        Xv = jax.vmap(P.projection_simplex)(Y)
+        np.testing.assert_allclose(X, Xv, atol=1e-12)
+
+    def test_kl_projection_is_softmax(self, rng):
+        y = jax.random.normal(rng, (6,))
+        np.testing.assert_allclose(P.projection_simplex_kl(y),
+                                   jax.nn.softmax(y), atol=1e-12)
+
+    @settings(max_examples=50, deadline=None)
+    @given(seed=st.integers(0, 2 ** 16), d=st.integers(2, 30),
+           scale=st.floats(0.1, 10.0))
+    def test_property_optimality(self, seed, d, scale):
+        """Property: proj(y) is the closest simplex point — verify via the
+        variational inequality <y − x*, z − x*> ≤ 0 for random feasible z."""
+        key = jax.random.PRNGKey(seed)
+        y = jax.random.normal(key, (d,)) * 2
+        x = P.projection_simplex(y, scale)
+        assert float(jnp.sum(x)) == pytest.approx(scale, abs=1e-6)
+        assert jnp.all(x >= -1e-12)
+        z = jax.random.dirichlet(jax.random.fold_in(key, 1),
+                                 jnp.ones(d)) * scale
+        assert float(jnp.vdot(y - x, z - x)) <= 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Balls / boxes / planes
+# ---------------------------------------------------------------------------
+
+class TestSets:
+
+    def test_box(self):
+        y = jnp.array([-2.0, 0.5, 3.0])
+        np.testing.assert_allclose(P.projection_box(y, (0.0, 1.0)),
+                                   jnp.array([0.0, 0.5, 1.0]))
+
+    def test_l2_ball(self, rng):
+        y = jax.random.normal(rng, (5,)) * 10
+        x = P.projection_l2_ball(y, 2.0)
+        np.testing.assert_allclose(jnp.linalg.norm(x), 2.0, rtol=1e-9)
+        y_in = y / jnp.linalg.norm(y) * 0.5
+        np.testing.assert_allclose(P.projection_l2_ball(y_in, 2.0), y_in)
+
+    def test_l1_ball(self, rng):
+        y = jax.random.normal(rng, (6,)) * 5
+        x = P.projection_l1_ball(y, 1.0)
+        np.testing.assert_allclose(jnp.sum(jnp.abs(x)), 1.0, atol=1e-8)
+        assert jnp.all(jnp.sign(x) * jnp.sign(y) >= 0)
+
+    def test_linf_ball(self, rng):
+        y = jax.random.normal(rng, (6,)) * 5
+        assert jnp.max(jnp.abs(P.projection_linf_ball(y, 0.7))) <= 0.7 + 1e-12
+
+    def test_hyperplane(self, rng):
+        a = jax.random.normal(rng, (4,))
+        y = jax.random.normal(jax.random.fold_in(rng, 1), (4,))
+        x = P.projection_hyperplane(y, (a, 2.0))
+        np.testing.assert_allclose(jnp.vdot(a, x), 2.0, atol=1e-9)
+
+    def test_halfspace(self, rng):
+        a = jnp.array([1.0, 1.0])
+        x = P.projection_halfspace(jnp.array([2.0, 2.0]), (a, 1.0))
+        assert float(jnp.vdot(a, x)) <= 1.0 + 1e-9
+        inside = jnp.array([-1.0, -1.0])
+        np.testing.assert_allclose(
+            P.projection_halfspace(inside, (a, 1.0)), inside)
+
+    def test_affine_set(self, rng):
+        A = jax.random.normal(rng, (2, 5))
+        b = jnp.array([1.0, -0.5])
+        y = jax.random.normal(jax.random.fold_in(rng, 1), (5,))
+        x = P.projection_affine_set(y, (A, b))
+        np.testing.assert_allclose(A @ x, b, atol=1e-8)
+        # y − x ⟂ null(A): x is the orthogonal projection
+        ns = jnp.eye(5) - jnp.linalg.pinv(A) @ A
+        np.testing.assert_allclose(ns @ (y - x), 0.0, atol=1e-8)
+
+    def test_box_section(self, rng):
+        """Appendix C: singly-constrained bounded QP by bisection."""
+        d = 6
+        alpha, beta = jnp.zeros(d), jnp.ones(d)
+        w = jnp.ones(d)
+        y = jax.random.normal(rng, (d,))
+        x = P.projection_box_section(y, (alpha, beta, w, 1.0))
+        np.testing.assert_allclose(jnp.vdot(w, x), 1.0, atol=1e-6)
+        assert jnp.all(x >= -1e-9) and jnp.all(x <= 1 + 1e-9)
+        # equal weights + unit budget in [0,1]^d == simplex projection
+        np.testing.assert_allclose(x, P.projection_simplex(y), atol=1e-6)
+
+    def test_box_section_gradient(self, rng):
+        d = 4
+        theta = (jnp.zeros(d), jnp.ones(d), jnp.ones(d), 1.0)
+        # avoid kinks: no coordinate of the solution exactly at a bound
+        y = jnp.array([0.31, -0.2, 0.9, 0.13])
+
+        def f(y):
+            return jnp.sum(P.projection_box_section(y, theta) ** 2)
+
+        g = jax.grad(f)(y)
+        eps = 1e-6
+        for i in range(d):
+            fd = (f(y.at[i].add(eps)) - f(y.at[i].add(-eps))) / (2 * eps)
+            np.testing.assert_allclose(g[i], fd, atol=1e-4)
+
+    def test_order_simplex(self):
+        y = jnp.array([0.1, 0.9, 0.4, 0.45])
+        x = P.projection_order_simplex(y, (1.0, 0.0))
+        assert jnp.all(jnp.diff(x) <= 1e-9)          # non-increasing
+        assert jnp.all(x >= 0) and jnp.all(x <= 1)
+
+    def test_second_order_cone(self):
+        # inside
+        y = jnp.array([2.0, 1.0, 0.0])
+        np.testing.assert_allclose(P.projection_second_order_cone(y), y)
+        # polar
+        y = jnp.array([-2.0, 1.0, 0.0])
+        np.testing.assert_allclose(P.projection_second_order_cone(y), 0.0,
+                                   atol=1e-12)
+        # boundary projection
+        y = jnp.array([0.0, 2.0, 0.0])
+        x = P.projection_second_order_cone(y)
+        np.testing.assert_allclose(x, jnp.array([1.0, 1.0, 0.0]), atol=1e-9)
+
+
+class TestTransport:
+
+    def test_sinkhorn_marginals(self, rng):
+        a = jnp.array([0.2, 0.3, 0.5])
+        b = jnp.array([0.25, 0.25, 0.25, 0.25])
+        y = jax.random.normal(rng, (3, 4))
+        X = P.projection_transport_kl(y, (a, b), num_iters=200)
+        np.testing.assert_allclose(X.sum(1), a, atol=1e-6)
+        np.testing.assert_allclose(X.sum(0), b, atol=1e-6)
+
+    def test_birkhoff(self, rng):
+        y = jax.random.normal(rng, (4, 4))
+        X = P.projection_birkhoff_kl(y, num_iters=300)
+        np.testing.assert_allclose(X.sum(0), 0.25, atol=1e-6)
+        np.testing.assert_allclose(X.sum(1), 0.25, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Prox operators
+# ---------------------------------------------------------------------------
+
+class TestProx:
+
+    def test_lasso_soft_threshold(self):
+        y = jnp.array([-2.0, -0.5, 0.0, 0.5, 2.0])
+        np.testing.assert_allclose(
+            prx.prox_lasso(y, 1.0),
+            jnp.array([-1.0, 0.0, 0.0, 0.0, 1.0]))
+
+    def test_elastic_net_reduces_to_lasso(self, rng):
+        y = jax.random.normal(rng, (5,))
+        np.testing.assert_allclose(prx.prox_elastic_net(y, (0.3, 0.0)),
+                                   prx.prox_lasso(y, 0.3))
+
+    def test_group_lasso_shrinks_norm(self, rng):
+        y = jax.random.normal(rng, (3, 4))
+        x = prx.prox_group_lasso(y, 0.5)
+        n_y = jnp.linalg.norm(y, axis=-1)
+        n_x = jnp.linalg.norm(x, axis=-1)
+        np.testing.assert_allclose(n_x, jnp.maximum(n_y - 0.5, 0.0),
+                                   atol=1e-9)
+
+    def test_log_barrier_positive(self, rng):
+        y = jax.random.normal(rng, (6,)) * 3
+        assert jnp.all(prx.prox_log_barrier(y, 0.5) > 0)
+
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(0, 2 ** 16), lam=st.floats(0.01, 5.0))
+    def test_property_prox_is_prox(self, seed, lam):
+        """Property: x = prox_g(y) satisfies the prox optimality condition
+        (for lasso: y − x ∈ λ∂‖x‖₁)."""
+        y = jax.random.normal(jax.random.PRNGKey(seed), (8,))
+        x = prx.prox_lasso(y, lam)
+        r = y - x
+        on = jnp.abs(x) > 0
+        assert bool(jnp.all(jnp.where(on, jnp.abs(
+            r - lam * jnp.sign(x)) < 1e-9, jnp.abs(r) <= lam + 1e-9)))
+
+    @settings(max_examples=40, deadline=None)
+    @given(seed=st.integers(0, 2 ** 16))
+    def test_property_prox_nonexpansive(self, seed):
+        """Property (Moreau): prox operators are 1-Lipschitz."""
+        k = jax.random.PRNGKey(seed)
+        y1 = jax.random.normal(jax.random.fold_in(k, 0), (6,))
+        y2 = jax.random.normal(jax.random.fold_in(k, 1), (6,))
+        for fn in (lambda v: prx.prox_lasso(v, 0.7),
+                   lambda v: prx.prox_elastic_net(v, (0.5, 0.2)),
+                   lambda v: prx.prox_ridge(v, 1.3),
+                   lambda v: P.projection_simplex(v),
+                   lambda v: P.projection_l2_ball(v, 1.0)):
+            d_out = jnp.linalg.norm(fn(y1) - fn(y2))
+            d_in = jnp.linalg.norm(y1 - y2)
+            assert float(d_out) <= float(d_in) + 1e-9

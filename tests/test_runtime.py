@@ -1,0 +1,367 @@
+"""Runtime substrate tests: optimizer, schedules, grad compression, data
+pipeline, checkpointing, fault tolerance, end-to-end training loop."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import configs
+from repro.checkpoint import CheckpointManager
+from repro.data import DataConfig, PrefetchIterator, SyntheticLMStream
+from repro.optim import (adamw, lion, sgd, apply_updates,
+                         clip_by_global_norm, schedules, grad_compression)
+from repro.runtime import (TrainStepConfig, make_train_state,
+                           make_train_step, run_train_loop,
+                           StragglerMonitor, HeartbeatRegistry,
+                           PreemptionHandler, ElasticPlan)
+
+
+# ---------------------------------------------------------------------------
+# Optimizers
+# ---------------------------------------------------------------------------
+
+class TestOptimizers:
+
+    def _quad(self):
+        Q = jnp.diag(jnp.array([1.0, 5.0, 10.0]))
+        return lambda x: 0.5 * x @ Q @ x
+
+    @pytest.mark.parametrize("make", [
+        lambda: adamw(0.05, weight_decay=0.0),
+        lambda: lion(0.01, weight_decay=0.0),
+        lambda: sgd(0.05, momentum=0.9),
+    ])
+    def test_converges_on_quadratic(self, make):
+        f = self._quad()
+        opt = make()
+        x = jnp.ones(3)
+        state = opt.init(x)
+        for _ in range(300):
+            g = jax.grad(f)(x)
+            upd, state = opt.update(g, state, x)
+            x = apply_updates(x, upd)
+        assert float(f(x)) < 1e-3
+
+    def test_adamw_weight_decay_shrinks(self):
+        opt = adamw(0.1, weight_decay=0.5)
+        x = jnp.ones(4)
+        state = opt.init(x)
+        upd, state = opt.update(jnp.zeros(4), state, x)
+        assert float(jnp.linalg.norm(apply_updates(x, upd))) < \
+            float(jnp.linalg.norm(x))
+
+    def test_state_tree_mirrors_params(self):
+        """ZeRO property: moments share the params' tree structure (and so
+        inherit their PartitionSpecs)."""
+        cfg = configs.get("llama3-405b", smoke=True)
+        from repro.models import init_params
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        opt = adamw(1e-3)
+        st_ = opt.init(params)
+        assert (jax.tree_util.tree_structure(st_.mu)
+                == jax.tree_util.tree_structure(params))
+
+    def test_clip_by_global_norm(self):
+        g = {"a": jnp.full((4,), 10.0)}
+        clipped, norm = clip_by_global_norm(g, 1.0)
+        np.testing.assert_allclose(float(norm), 20.0)
+        np.testing.assert_allclose(
+            float(jnp.linalg.norm(clipped["a"])), 1.0, rtol=1e-6)
+
+    def test_schedules(self):
+        s = schedules.linear_warmup_cosine(1.0, 10, 100)
+        assert float(s(jnp.asarray(0))) == 0.0
+        np.testing.assert_allclose(float(s(jnp.asarray(10))), 1.0)
+        assert float(s(jnp.asarray(100))) < 0.2
+        inv = schedules.inverse_sqrt(1.0, 10)
+        np.testing.assert_allclose(float(inv(jnp.asarray(40))), 0.5)
+
+
+# ---------------------------------------------------------------------------
+# Gradient compression
+# ---------------------------------------------------------------------------
+
+class TestGradCompression:
+
+    def test_roundtrip_error_bounded(self, rng):
+        g = {"w": jax.random.normal(rng, (100,))}
+        err = grad_compression.init_error_state(g)
+        out, new_err = grad_compression.roundtrip(g, err)
+        scale = float(jnp.max(jnp.abs(g["w"]))) / 127.0
+        assert float(jnp.max(jnp.abs(out["w"] - g["w"]))) <= scale + 1e-6
+
+    def test_error_feedback_accumulates(self, rng):
+        """EF property: sum of quantized grads over steps tracks the true sum
+        (bias cancels) — the reason convergence is preserved."""
+        g = {"w": 0.01 * jax.random.normal(rng, (50,))}
+        err = grad_compression.init_error_state(g)
+        total_q = jnp.zeros(50)
+        for _ in range(50):
+            out, err = grad_compression.roundtrip(g, err)
+            total_q = total_q + out["w"]
+        true_total = 50 * g["w"]
+        # relative error of accumulated signal far below one-step quant error
+        rel = float(jnp.linalg.norm(total_q - true_total)
+                    / jnp.linalg.norm(true_total))
+        assert rel < 0.02
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2 ** 16))
+    def test_property_compression_4x(self, seed):
+        g = jax.random.normal(jax.random.PRNGKey(seed), (4096,))
+        c = grad_compression._quantize(g)
+        raw = g.size * 4
+        comp = c.q.size * 1 + c.scale.size * 4
+        assert comp * 3 < raw        # > 3x reduction
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+
+class TestData:
+
+    def test_deterministic_replay(self):
+        cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=8, seed=3)
+        s = SyntheticLMStream(cfg)
+        x1, y1 = s.batch_at(7)
+        x2, y2 = s.batch_at(7)
+        np.testing.assert_array_equal(x1, x2)
+        np.testing.assert_array_equal(y1, y2)
+
+    def test_host_sharding_partitions_batch(self):
+        full = SyntheticLMStream(DataConfig(vocab_size=100, seq_len=8,
+                                            global_batch=8))
+        h0 = SyntheticLMStream(DataConfig(vocab_size=100, seq_len=8,
+                                          global_batch=8, num_hosts=2,
+                                          host_id=0))
+        h1 = SyntheticLMStream(DataConfig(vocab_size=100, seq_len=8,
+                                          global_batch=8, num_hosts=2,
+                                          host_id=1))
+        assert h0.local_batch == 4 and h1.local_batch == 4
+        x0, _ = h0.batch_at(0)
+        x1, _ = h1.batch_at(0)
+        assert x0.shape == (4, 8)
+        assert not np.array_equal(x0, x1)     # different shards
+
+    def test_labels_are_next_tokens(self):
+        s = SyntheticLMStream(DataConfig(vocab_size=50, seq_len=12,
+                                         global_batch=2))
+        x, y = s.batch_at(0)
+        np.testing.assert_array_equal(x[:, 1:], y[:, :-1])
+
+    def test_prefetch_iterator(self):
+        s = SyntheticLMStream(DataConfig(vocab_size=50, seq_len=8,
+                                         global_batch=2))
+        it = PrefetchIterator(s, start_step=0)
+        try:
+            step0, (x0, _) = next(it)
+            step1, _ = next(it)
+            assert (step0, step1) == (0, 1)
+            np.testing.assert_array_equal(x0, s.batch_at(0)[0])
+        finally:
+            it.close()
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+
+class TestCheckpoint:
+
+    def _tree(self, key):
+        return {"w": jax.random.normal(key, (8, 4)),
+                "opt": {"mu": jnp.ones((8, 4)), "step": jnp.asarray(5)}}
+
+    def test_save_restore_roundtrip(self, tmp_path, rng):
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        tree = self._tree(rng)
+        mgr.save(100, tree, blocking=True)
+        target = jax.tree_util.tree_map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree)
+        restored = mgr.restore(100, target)
+        np.testing.assert_array_equal(restored["w"], tree["w"])
+        assert int(restored["opt"]["step"]) == 5
+
+    def test_keep_n_gc(self, tmp_path, rng):
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        tree = self._tree(rng)
+        for s in [1, 2, 3, 4]:
+            mgr.save(s, tree, blocking=True)
+        assert mgr.all_steps() == [3, 4]
+
+    def test_atomic_no_partial_checkpoints(self, tmp_path, rng):
+        """A .tmp dir (simulated crash mid-write) is never listed."""
+        mgr = CheckpointManager(str(tmp_path), keep=3)
+        os.makedirs(os.path.join(str(tmp_path), "step_9.tmp"))
+        mgr.save(1, self._tree(rng), blocking=True)
+        assert mgr.all_steps() == [1]
+
+    def test_shape_mismatch_rejected(self, tmp_path, rng):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(1, {"w": jnp.ones((4,))}, blocking=True)
+        with pytest.raises(ValueError, match="mismatch"):
+            mgr.restore(1, {"w": jax.ShapeDtypeStruct((5,), jnp.float32)})
+
+    def test_async_save(self, tmp_path, rng):
+        mgr = CheckpointManager(str(tmp_path))
+        mgr.save(7, self._tree(rng), blocking=False)
+        mgr.wait()
+        assert mgr.latest_step() == 7
+
+
+# ---------------------------------------------------------------------------
+# Fault tolerance
+# ---------------------------------------------------------------------------
+
+class TestFaultTolerance:
+
+    def test_straggler_detection(self):
+        mon = StragglerMonitor(window=10, threshold=1.5)
+        for step in range(10):
+            for host in range(8):
+                mon.record(step, 0.1 if host != 3 else 0.25, host=host)
+        assert mon.stragglers() == [3]
+
+    def test_no_false_positives(self):
+        mon = StragglerMonitor()
+        for step in range(10):
+            for host in range(8):
+                mon.record(step, 0.1 + 0.001 * host, host=host)
+        assert mon.stragglers() == []
+
+    def test_heartbeat_failure_detection(self):
+        t = [0.0]
+        reg = HeartbeatRegistry(timeout=10.0, clock=lambda: t[0])
+        for h in range(4):
+            reg.ping(h)
+        t[0] = 5.0
+        reg.ping(0); reg.ping(1); reg.ping(2)   # host 3 goes silent
+        t[0] = 12.0
+        assert reg.failed_hosts() == [3]
+        assert sorted(reg.healthy_hosts()) == [0, 1, 2]
+
+    def test_preemption_handler(self):
+        h = PreemptionHandler()
+        assert not h()
+        h.preempt()
+        assert h()
+
+    def test_elastic_plan(self):
+        plan = ElasticPlan(old_data=16, old_model=16)
+        nd, nm = plan.survivor_mesh(failed_fraction=0.1)
+        assert nm == 16 and nd < 16 and 16 % nd == 0
+        assert plan.batch_scale(0.1) == nd / 16
+
+
+# ---------------------------------------------------------------------------
+# End-to-end training loop (smoke config, real loop with checkpoint/resume)
+# ---------------------------------------------------------------------------
+
+class TestTrainLoopE2E:
+
+    def test_loss_decreases_and_resume_is_exact(self, tmp_path):
+        cfg = configs.get("qwen1.5-4b", smoke=True)
+        optimizer = adamw(3e-3, weight_decay=0.0)
+        tcfg = TrainStepConfig(microbatches=1, remat=False)
+        step_fn = jax.jit(make_train_step(cfg, optimizer, tcfg))
+        state = make_train_state(cfg, optimizer, jax.random.PRNGKey(0))
+        stream = SyntheticLMStream(DataConfig(
+            vocab_size=cfg.vocab_size, seq_len=32, global_batch=4))
+
+        def data_iter(start=0):
+            step = start
+            while True:
+                yield step, stream.batch_at(step)
+                step += 1
+
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        state, hist = run_train_loop(
+            step_fn, state, data_iter(), num_steps=30,
+            checkpoint_manager=mgr, checkpoint_every=10, log_every=1)
+        losses = [h["loss"] for h in hist]
+        assert losses[-1] < losses[0]          # learns the synthetic structure
+        assert mgr.latest_step() == 30
+
+        # resume from step 20 and replay to 30: identical final loss
+        target = jax.tree_util.tree_map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), state)
+        restored = mgr.restore(20, target)
+        state2, hist2 = run_train_loop(
+            step_fn, restored, data_iter(20), num_steps=10,
+            log_every=1, start_step=20)
+        np.testing.assert_allclose(hist2[-1]["loss"], losses[-1],
+                                   rtol=1e-4)
+
+    def test_preemption_checkpoints_and_stops(self, tmp_path):
+        cfg = configs.get("qwen1.5-4b", smoke=True)
+        optimizer = adamw(1e-3)
+        step_fn = jax.jit(make_train_step(cfg, optimizer,
+                                          TrainStepConfig(remat=False)))
+        state = make_train_state(cfg, optimizer, jax.random.PRNGKey(0))
+        stream = SyntheticLMStream(DataConfig(
+            vocab_size=cfg.vocab_size, seq_len=16, global_batch=2))
+
+        def data_iter():
+            step = 0
+            while True:
+                yield step, stream.batch_at(step)
+                step += 1
+
+        handler = PreemptionHandler()
+        calls = {"n": 0}
+
+        def flag():
+            calls["n"] += 1
+            if calls["n"] == 3:
+                handler.preempt()
+            return handler()
+
+        mgr = CheckpointManager(str(tmp_path))
+        state, hist = run_train_loop(
+            step_fn, state, data_iter(), num_steps=100,
+            checkpoint_manager=mgr, checkpoint_every=1000,
+            preemption_flag=flag, log_every=1)
+        assert len(hist) == 3                  # stopped early
+        assert mgr.latest_step() == 3          # checkpointed at preemption
+
+    def test_grad_compression_training_still_converges(self):
+        cfg = configs.get("qwen1.5-4b", smoke=True)
+        optimizer = adamw(3e-3, weight_decay=0.0)
+        tcfg = TrainStepConfig(remat=False, compress_grads=True)
+        step_fn = jax.jit(make_train_step(cfg, optimizer, tcfg))
+        state = make_train_state(cfg, optimizer, jax.random.PRNGKey(0),
+                                 compress=True)
+        stream = SyntheticLMStream(DataConfig(
+            vocab_size=cfg.vocab_size, seq_len=32, global_batch=4))
+        losses = []
+        for step in range(25):
+            x, y = stream.batch_at(step)
+            state, m = step_fn(state, x, y)
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0]
+
+    def test_microbatched_step_matches_full_batch(self):
+        """Grad accumulation must be loss/grad-equivalent to the full batch."""
+        cfg = configs.get("llama3-405b", smoke=True)
+        optimizer = sgd(1e-2, momentum=0.0)
+        s1 = make_train_state(cfg, optimizer, jax.random.PRNGKey(0))
+        s2 = jax.tree_util.tree_map(lambda a: a, s1)
+        stream = SyntheticLMStream(DataConfig(
+            vocab_size=cfg.vocab_size, seq_len=16, global_batch=8))
+        x, y = stream.batch_at(0)
+        full = jax.jit(make_train_step(
+            cfg, optimizer, TrainStepConfig(microbatches=1, remat=False)))
+        micro = jax.jit(make_train_step(
+            cfg, optimizer, TrainStepConfig(microbatches=4, remat=False)))
+        s1, m1 = full(s1, x, y)
+        s2, m2 = micro(s2, x, y)
+        np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                                   rtol=2e-2)
+        w1 = jax.tree_util.tree_leaves(s1.params)[0]
+        w2 = jax.tree_util.tree_leaves(s2.params)[0]
+        np.testing.assert_allclose(np.asarray(w1, np.float32),
+                                   np.asarray(w2, np.float32), atol=1e-2)
