@@ -1,8 +1,27 @@
 """Shared benchmark utilities."""
+import json
 import time
 
 import jax
 import numpy as np
+
+
+class Collector:
+    """emit-compatible sink that also accumulates rows for a JSON report."""
+
+    def __init__(self):
+        self.rows = []
+
+    def __call__(self, name: str, seconds: float, derived: str = ""):
+        self.rows.append({"name": name, "us_per_call": seconds * 1e6,
+                          "derived": derived})
+        emit(name, seconds, derived)
+
+    def write_json(self, path: str, **meta):
+        payload = dict(meta, rows=self.rows)
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2)
+        return path
 
 
 def time_fn(fn, *args, warmup: int = 1, iters: int = 5):

@@ -36,6 +36,18 @@ def run(emit_fn=emit):
     t = time_fn(lambda: projection_simplex_batched(Y, 1.0, True), iters=2)
     emit_fn("kernel_simplex_proj_interp", t, "")
 
+    from repro.kernels.batched_cg.kernel import batched_cg_pallas
+    from repro.kernels.batched_cg.ref import batched_cg_ref
+    B, d = 16, 64
+    R = jax.random.normal(key, (B, d, d), jnp.float32)
+    A = jnp.einsum("bij,bkj->bik", R, R) + 8.0 * jnp.eye(d, dtype=jnp.float32)
+    rhs = jax.random.normal(jax.random.fold_in(key, 5), (B, d), jnp.float32)
+    t = time_fn(lambda: batched_cg_pallas(A, rhs, tol=1e-6, maxiter=d,
+                                          interpret=True), iters=2)
+    t_ref = time_fn(lambda: batched_cg_ref(A, rhs, tol=1e-6, maxiter=d),
+                    iters=3)
+    emit_fn("kernel_batched_cg_interp", t, f"jnp_ref={t_ref*1e6:.1f}us")
+
 
 if __name__ == "__main__":
     run()

@@ -2,29 +2,41 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.
 
-  fig3   Jacobian precision (ridge; Thm 1 bound + unroll comparison)
-  fig4   multiclass-SVM hyperopt: implicit vs unrolled, 3 solvers x 2 FPs
-  fig5   dataset distillation: implicit vs unrolled bilevel
-  table2 task-driven dictionary learning vs baselines
-  fig6   molecular-dynamics position sensitivity (implicit JVP)
+  fig3    Jacobian precision (ridge; Thm 1 bound + unroll comparison)
+  fig4    multiclass-SVM hyperopt: implicit vs unrolled, 3 solvers x 2 FPs
+  fig5    dataset distillation: implicit vs unrolled bilevel
+  table2  task-driven dictionary learning vs baselines
+  fig6    molecular-dynamics position sensitivity (implicit JVP)
   kernels micro-benchmarks of the Pallas ops (interpret mode on CPU)
+  batched batched-vs-looped linear-solve engine speedups
   roofline per-(arch x shape) terms from the dry-run artifacts
+
+``--smoke`` runs a fast CI subset (kernels + batched) and writes the rows to
+``BENCH_smoke.json`` (override with ``--out``) for artifact upload.
 """
 import argparse
 import sys
 import traceback
 
 
+SMOKE_BENCHES = ["kernels", "batched"]
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of benchmark names")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI subset; writes a BENCH_*.json report")
+    ap.add_argument("--out", default="BENCH_smoke.json",
+                    help="JSON report path (with --smoke)")
     args = ap.parse_args()
 
-    from benchmarks import (dictionary_learning, distillation,
+    from benchmarks import (batched_solve, dictionary_learning, distillation,
                             jacobian_precision, kernels_micro,
                             molecular_dynamics, roofline_report,
                             svm_hyperopt)
+    from benchmarks.common import Collector, emit
     all_benches = {
         "fig3": jacobian_precision.run,
         "fig4": svm_hyperopt.run,
@@ -32,18 +44,34 @@ def main() -> None:
         "table2": dictionary_learning.run,
         "fig6": molecular_dynamics.run,
         "kernels": kernels_micro.run,
+        "batched": batched_solve.run,
         "roofline": roofline_report.run,
     }
-    names = args.only.split(",") if args.only else list(all_benches)
+    if args.only:
+        names = args.only.split(",")     # --only wins, also under --smoke
+    elif args.smoke:
+        names = SMOKE_BENCHES
+    else:
+        names = list(all_benches)
+
+    emit_fn = Collector() if args.smoke else emit
     print("name,us_per_call,derived")
     failed = []
     for name in names:
         try:
-            all_benches[name]()
+            if args.smoke and name == "batched":
+                all_benches[name](emit_fn, smoke=True)
+            else:
+                all_benches[name](emit_fn)
         except Exception:
             failed.append(name)
             traceback.print_exc()
             print(f"{name},nan,ERROR")
+    if args.smoke:
+        import jax
+        path = emit_fn.write_json(args.out, backend=jax.default_backend(),
+                                  failed=failed)
+        print(f"wrote {path}", file=sys.stderr)
     if failed:
         sys.exit(1)
 

@@ -3,7 +3,8 @@
 Public API re-exports:
   custom_root, custom_fixed_point, custom_root_jvp, custom_fixed_point_jvp,
   root_vjp, root_jvp           — repro.core.implicit_diff
-  solve_cg / bicgstab / gmres / normal_cg / lu / neumann
+  solve (batched engine entry), SolverSpec registry, SolveInfo,
+  solve_cg / bicgstab / gmres / normal_cg / lu / neumann / pallas_cg
                                — repro.core.linear_solve
   optimality-condition catalog — repro.core.optimality
   projections / prox catalogs  — repro.core.projections, repro.core.prox
@@ -14,7 +15,10 @@ Public API re-exports:
 from repro.core.implicit_diff import (custom_root, custom_fixed_point,
                                       custom_root_jvp, custom_fixed_point_jvp,
                                       root_vjp, root_jvp)
-from repro.core.linear_solve import (solve_cg, solve_bicgstab, solve_gmres,
-                                     solve_normal_cg, solve_lu, solve_neumann)
+from repro.core.linear_solve import (solve, solve_cg, solve_bicgstab,
+                                     solve_gmres, solve_normal_cg, solve_lu,
+                                     solve_neumann, SolverSpec, SolveInfo,
+                                     register_solver, get_solver, get_spec,
+                                     available_solvers, jacobi_preconditioner)
 from repro.core import optimality, projections, prox, solvers, bilevel
 from repro.core.implicit_layer import deq_fixed_point, make_deq_block

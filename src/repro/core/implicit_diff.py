@@ -36,16 +36,42 @@ from repro.core import linear_solve as ls
 # Low-level products with the implicit Jacobian
 # ---------------------------------------------------------------------------
 
+def _call_solver(solve, matvec, b, *, tol, maxiter, ridge, precond):
+    """Dispatch to a registry solver (with precond) or a bare callable.
+
+    Mirrors ``linear_solve.solve``'s contract: precond requires a registry
+    solver that supports it — never silently dropped.
+    """
+    if callable(solve):
+        if precond is not None:
+            raise ValueError("precond requires a registry solver name; "
+                             "bake it into the custom solve callable instead")
+        return solve(matvec, b, tol=tol, maxiter=maxiter, ridge=ridge)
+    spec = ls.get_spec(solve)
+    if precond is not None and not spec.supports_precond:
+        raise ValueError(f"solver {spec.name!r} does not support "
+                         "preconditioning; see SolverSpec.supports_precond")
+    kwargs = dict(tol=tol, maxiter=maxiter, ridge=ridge)
+    if precond is not None:
+        kwargs["precond"] = precond
+    return spec.fn(matvec, b, **kwargs)
+
+
 def root_vjp(F: Callable, x_star, theta_args: tuple, cotangent,
              solve="normal_cg", tol: float = 1e-6, maxiter: int = 1000,
-             ridge: float = 0.0):
+             ridge: float = 0.0, precond=None):
     """VJP through the implicitly-defined root: returns vᵀ ∂x*(θ) per θ arg.
 
     Solve Aᵀ u = v  (A = -∂₁F),  then  vᵀJ = uᵀB  (B = ∂₂F).
     One linear solve serves all theta arguments (paper §2.1).
-    """
-    solve = ls.get_solver(solve)
 
+    ``solve`` is a registry name (``repro.core.linear_solve.available_solvers``)
+    or a solver callable; ``precond`` is forwarded to registry solvers
+    (``None``, a callable v ↦ M⁻¹v, or ``"jacobi"``).  Because every registry
+    solver is vmap-safe with per-instance convergence masks, a ``jax.vmap``
+    of this function (or of a ``@custom_root`` gradient) runs ONE batched
+    masked solve for the whole batch, not N sequential solves.
+    """
     def f_of_x(x):
         return F(x, *theta_args)
 
@@ -56,7 +82,8 @@ def root_vjp(F: Callable, x_star, theta_args: tuple, cotangent,
         (out,) = vjp_x(u)
         return jax.tree_util.tree_map(jnp.negative, out)
 
-    u = solve(At_matvec, cotangent, tol=tol, maxiter=maxiter, ridge=ridge)
+    u = _call_solver(solve, At_matvec, cotangent, tol=tol, maxiter=maxiter,
+                     ridge=ridge, precond=precond)
 
     # uᵀ B = uᵀ ∂₂F : one more VJP, wrt the theta args.
     def f_of_theta(*targs):
@@ -68,13 +95,12 @@ def root_vjp(F: Callable, x_star, theta_args: tuple, cotangent,
 
 def root_jvp(F: Callable, x_star, theta_args: tuple, tangents: tuple,
              solve="normal_cg", tol: float = 1e-6, maxiter: int = 1000,
-             ridge: float = 0.0):
+             ridge: float = 0.0, precond=None):
     """JVP through the implicitly-defined root: J · v.
 
     Solve A (Jv) = B v  with  Bv = ∂₂F · v  computed by one JVP of F in θ.
+    Vmap-safe (see ``root_vjp``): batching dispatches to one masked solve.
     """
-    solve = ls.get_solver(solve)
-
     def f_of_theta(*targs):
         return F(x_star, *targs)
 
@@ -87,7 +113,8 @@ def root_jvp(F: Callable, x_star, theta_args: tuple, tangents: tuple,
         _, jv = jax.jvp(f_of_x, (x_star,), (v,))
         return jax.tree_util.tree_map(jnp.negative, jv)
 
-    return solve(A_matvec, Bv, tol=tol, maxiter=maxiter, ridge=ridge)
+    return _call_solver(solve, A_matvec, Bv, tol=tol, maxiter=maxiter,
+                        ridge=ridge, precond=precond)
 
 
 # ---------------------------------------------------------------------------
@@ -96,7 +123,7 @@ def root_jvp(F: Callable, x_star, theta_args: tuple, tangents: tuple,
 
 def custom_root(F: Callable, solve="normal_cg", tol: float = 1e-6,
                 maxiter: int = 1000, ridge: float = 0.0,
-                has_aux: bool = False):
+                has_aux: bool = False, precond=None):
     """Decorator: attach implicit differentiation to ``solver(init, *theta)``.
 
     The returned function is differentiable (reverse mode) in every ``theta``
@@ -104,6 +131,13 @@ def custom_root(F: Callable, solve="normal_cg", tol: float = 1e-6,
 
     ``has_aux=True`` means the solver returns ``(x_star, aux)``; only
     ``x_star`` participates in the implicit system, ``aux`` gets zero grads.
+
+    Batched implicit differentiation: ``jax.vmap`` over the decorated solver
+    (or over its gradient) batches the backward linear system through the
+    masked solver engine — the whole batch solves in ONE ``lax.while_loop``
+    where converged instances freeze while stragglers iterate, instead of N
+    sequential solves.  ``precond`` (e.g. ``"jacobi"``) is forwarded to the
+    registry solver named by ``solve``.
 
     Example (paper Fig. 1)::
 
@@ -131,7 +165,7 @@ def custom_root(F: Callable, solve="normal_cg", tol: float = 1e-6,
             init, x_star, theta = res
             ct = cotangent[0] if has_aux else cotangent
             grads = root_vjp(F, x_star, theta, ct, solve=solve, tol=tol,
-                             maxiter=maxiter, ridge=ridge)
+                             maxiter=maxiter, ridge=ridge, precond=precond)
             zero_init = jax.tree_util.tree_map(jnp.zeros_like, init)
             return (zero_init,) + tuple(grads)
 
@@ -143,7 +177,7 @@ def custom_root(F: Callable, solve="normal_cg", tol: float = 1e-6,
 
 def custom_fixed_point(T: Callable, solve="normal_cg", tol: float = 1e-6,
                        maxiter: int = 1000, ridge: float = 0.0,
-                       has_aux: bool = False):
+                       has_aux: bool = False, precond=None):
     """Decorator for solvers of fixed points x* = T(x*, θ).
 
     Reduces to ``custom_root`` with the residual F(x, θ) = T(x, θ) − x (eq. 3).
@@ -153,7 +187,7 @@ def custom_fixed_point(T: Callable, solve="normal_cg", tol: float = 1e-6,
         return jax.tree_util.tree_map(lambda a, b: a - b, tx, x)
 
     return custom_root(F, solve=solve, tol=tol, maxiter=maxiter,
-                       ridge=ridge, has_aux=has_aux)
+                       ridge=ridge, has_aux=has_aux, precond=precond)
 
 
 # ---------------------------------------------------------------------------
@@ -164,7 +198,7 @@ def custom_fixed_point(T: Callable, solve="normal_cg", tol: float = 1e-6,
 # ---------------------------------------------------------------------------
 
 def custom_root_jvp(F: Callable, solve="normal_cg", tol: float = 1e-6,
-                    maxiter: int = 1000, ridge: float = 0.0):
+                    maxiter: int = 1000, ridge: float = 0.0, precond=None):
     """Like ``custom_root`` but registers a JVP rule (forward mode only)."""
     def wrapper(solver: Callable) -> Callable:
 
@@ -178,7 +212,8 @@ def custom_root_jvp(F: Callable, solve="normal_cg", tol: float = 1e-6,
             _, *theta_dot = tangents
             x_star = solver(init, *theta)
             dx = root_jvp(F, x_star, tuple(theta), tuple(theta_dot),
-                          solve=solve, tol=tol, maxiter=maxiter, ridge=ridge)
+                          solve=solve, tol=tol, maxiter=maxiter, ridge=ridge,
+                          precond=precond)
             return x_star, dx
 
         return fun

@@ -1,4 +1,4 @@
-"""Matrix-free linear system solvers.
+"""Matrix-free linear solvers: the batched solve engine behind implicit diff.
 
 All solvers take ``matvec: pytree -> pytree`` and a pytree right-hand side and
 return a pytree solution.  They are implemented with ``lax.while_loop`` so they
@@ -6,20 +6,37 @@ can live inside jit/scan/custom_vjp bodies, and they only touch the operator
 through matrix-vector products — exactly the contract the paper's implicit
 differentiation needs (access to F only through JVPs/VJPs).
 
-Solvers:
-  * ``solve_cg``        — conjugate gradient (A symmetric PSD)
-  * ``solve_normal_cg`` — CG on the normal equations AᵀA x = Aᵀ b (general A,
-                          needs ``rmatvec`` or builds it via linear transpose)
-  * ``solve_bicgstab``  — BiCGSTAB (general square A)
-  * ``solve_gmres``     — restarted GMRES (general square A)
-  * ``solve_lu``        — dense direct solve (materializes A; small systems)
-  * ``solve_neumann``   — truncated Neumann series for I - M with ||M|| < 1
-                          (the "Jacobian-free"/unrolled-free approximation)
+Registry (``SolverSpec``; see ``available_solvers()``):
+
+  * ``cg``        — conjugate gradient (A symmetric PSD; preconditioned)
+  * ``normal_cg`` — CG on the normal equations AᵀA x = Aᵀ b (general A,
+                    needs ``rmatvec`` or builds it via linear transpose)
+  * ``bicgstab``  — BiCGSTAB (general square A)
+  * ``gmres``     — restarted GMRES (general square A; left-preconditioned)
+  * ``lu``        — dense direct solve (materializes A; small systems)
+  * ``neumann``   — truncated Neumann series for I - M with ||M|| < 1
+                    (the "Jacobian-free"/unrolled-free approximation)
+  * ``pallas_cg`` — fused Pallas batched-CG kernel for the dense small-system
+                    regime (d ≤ 512); materializes per-instance operators
+
+Batching
+--------
+Every iterative solver is **vmap-safe with per-instance convergence masks**:
+the ``lax.while_loop`` state carries a ``done`` flag and converged instances
+freeze (their state is held by ``where(done, old, new)``) while stragglers
+keep iterating — one while_loop for the whole batch, never N sequential
+solves.  Use either
+
+  * ``jax.vmap`` over any solver (or over a ``@custom_root``-decorated solver:
+    its backward pass then runs one batched solve), or
+  * the uniform entry point ``solve(matvec, b, batch_axes=0, ...)`` where
+    ``matvec`` maps batched pytrees to batched pytrees.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Callable, Optional
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.flatten_util  # registers jax.flatten_util.ravel_pytree
@@ -28,33 +45,62 @@ from jax import lax
 
 
 # ---------------------------------------------------------------------------
-# pytree helpers
+# batch-aware pytree helpers
+#
+# ``batch_ndim`` is the number of leading batch axes on every leaf (0 or 1).
+# Reductions run over the instance axes only, so per-instance scalars
+# (step sizes, residual norms, done flags) have the batch shape.
 # ---------------------------------------------------------------------------
 
-def _tree_dot(a, b):
+def _bc(s, leaf, batch_ndim: int):
+    """Broadcast a per-instance scalar against an instance-shaped leaf."""
+    if batch_ndim == 0:
+        return s
+    s = jnp.asarray(s)
+    return s.reshape(s.shape + (1,) * (jnp.ndim(leaf) - batch_ndim))
+
+
+def _tree_dot(a, b, batch_ndim: int = 0):
     leaves_a = jax.tree_util.tree_leaves(a)
     leaves_b = jax.tree_util.tree_leaves(b)
-    return sum(jnp.vdot(x, y) for x, y in zip(leaves_a, leaves_b))
+    out = 0.0
+    for x, y in zip(leaves_a, leaves_b):
+        axes = tuple(range(batch_ndim, jnp.ndim(x)))
+        out = out + jnp.sum(jnp.conj(x) * y, axis=axes)
+    return out
 
 
-def _tree_add(a, b, alpha=1.0):
-    return jax.tree_util.tree_map(lambda x, y: x + alpha * y, a, b)
+def _tree_add(a, b, alpha=1.0, batch_ndim: int = 0):
+    return jax.tree_util.tree_map(
+        lambda x, y: x + _bc(alpha, x, batch_ndim) * y, a, b)
 
 
 def _tree_sub(a, b):
     return jax.tree_util.tree_map(lambda x, y: x - y, a, b)
 
 
-def _tree_scale(a, alpha):
-    return jax.tree_util.tree_map(lambda x: alpha * x, a)
+def _tree_scale(a, alpha, batch_ndim: int = 0):
+    return jax.tree_util.tree_map(lambda x: _bc(alpha, x, batch_ndim) * x, a)
 
 
 def _tree_zeros_like(a):
     return jax.tree_util.tree_map(jnp.zeros_like, a)
 
 
-def _tree_l2(a):
-    return jnp.sqrt(jnp.maximum(_tree_dot(a, a).real, 0.0))
+def _tree_l2(a, batch_ndim: int = 0):
+    return jnp.sqrt(jnp.maximum(_tree_dot(a, a, batch_ndim).real, 0.0))
+
+
+def _tree_freeze(done, old, new, batch_ndim: int = 0):
+    """Hold converged instances: where(done, old, new) leaf-wise."""
+    return jax.tree_util.tree_map(
+        lambda o, n: jnp.where(_bc(done, o, batch_ndim), o, n), old, new)
+
+
+def _damped(matvec: Callable, ridge: float) -> Callable:
+    if not ridge:
+        return matvec
+    return lambda v: _tree_add(matvec(v), v, ridge)
 
 
 def make_rmatvec(matvec: Callable, example_x):
@@ -82,49 +128,182 @@ def materialize_matrix(matvec: Callable, example_x) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
-# Conjugate gradient
+# flat (B, d) view of a batched pytree operator
+# ---------------------------------------------------------------------------
+
+class _FlatView(NamedTuple):
+    """Batched flat representation: leaves (B, ...) <-> matrix (B, d)."""
+    mv: Callable          # (B, d) -> (B, d)
+    b: jnp.ndarray        # (B, d)
+    to_tree: Callable     # (B, d) -> batched pytree
+    batched: bool         # whether the original call was batch_ndim == 1
+
+
+def _flat_view(matvec: Callable, b, batch_ndim: int) -> _FlatView:
+    if batch_ndim == 0:
+        b_flat, unravel = jax.flatten_util.ravel_pytree(b)
+
+        def mv(vf):  # (1, d) -> (1, d)
+            out, _ = jax.flatten_util.ravel_pytree(matvec(unravel(vf[0])))
+            return out[None]
+
+        return _FlatView(mv, b_flat[None], lambda xf: unravel(xf[0]), False)
+
+    example = jax.tree_util.tree_map(lambda l: l[0], b)
+    _, unravel = jax.flatten_util.ravel_pytree(example)
+    ravel1 = lambda t: jax.flatten_util.ravel_pytree(t)[0]
+    b_flat = jax.vmap(ravel1)(b)
+
+    def mv(vf):  # (B, d) -> (B, d)
+        return jax.vmap(ravel1)(matvec(jax.vmap(unravel)(vf)))
+
+    return _FlatView(mv, b_flat, jax.vmap(unravel), True)
+
+
+def materialize_batched(matvec: Callable, b, batch_ndim: int = 0,
+                        view: Optional[_FlatView] = None):
+    """Densify a (possibly batched) operator to (B, d, d) plus the flat view.
+
+    Probes with basis vectors broadcast across the batch, so the cost is d
+    matvecs regardless of batch size.
+    """
+    if view is None:
+        view = _flat_view(matvec, b, batch_ndim)
+    B, d = view.b.shape
+
+    def col(i):
+        e = jnp.zeros(d, view.b.dtype).at[i].set(1.0)
+        return view.mv(jnp.broadcast_to(e, (B, d)))   # (B, d) = A e_i
+
+    cols = jax.vmap(col)(jnp.arange(d))               # (d, B, d)
+    return cols.transpose(1, 2, 0), view              # A[b][:, i] = cols[i, b]
+
+
+# ---------------------------------------------------------------------------
+# preconditioning hooks
+# ---------------------------------------------------------------------------
+
+def jacobi_preconditioner(diag):
+    """M⁻¹ v = v / diag, elementwise over a pytree of diagonals."""
+    safe = jax.tree_util.tree_map(
+        lambda dg: jnp.where(jnp.abs(dg) > 1e-30, dg, 1.0), diag)
+    return lambda v: jax.tree_util.tree_map(lambda x, dg: x / dg, v, safe)
+
+
+def diagonal_of_matvec(matvec: Callable, b, batch_ndim: int = 0):
+    """Extract diag(A) by probing with basis vectors (d matvecs, vmapped).
+
+    Returns the diagonal with the same (possibly batched) structure as ``b``.
+    """
+    view = _flat_view(matvec, b, batch_ndim)
+    B, d = view.b.shape
+
+    def entry(i):
+        e = jnp.zeros(d, view.b.dtype).at[i].set(1.0)
+        return view.mv(jnp.broadcast_to(e, (B, d)))[:, i]   # (B,)
+
+    diag = jax.vmap(entry)(jnp.arange(d)).T                 # (B, d)
+    return view.to_tree(diag)
+
+
+def _resolve_precond(precond, matvec, b, batch_ndim: int):
+    """None | callable | "jacobi" -> callable M⁻¹ (or None)."""
+    if precond is None or callable(precond):
+        return precond
+    if precond == "jacobi":
+        return jacobi_preconditioner(
+            diagonal_of_matvec(matvec, b, batch_ndim))
+    raise ValueError(f"unknown preconditioner {precond!r}; "
+                     "expected None, a callable M⁻¹, or 'jacobi'")
+
+
+# ---------------------------------------------------------------------------
+# solve diagnostics
+# ---------------------------------------------------------------------------
+
+class SolveInfo(NamedTuple):
+    """Per-instance diagnostics (batch-shaped under vmap / batch_axes).
+
+    ``iterations`` counts the solver's outer steps: matvec iterations for
+    cg/normal_cg/bicgstab, *restart cycles* (each up to ``restart`` Arnoldi
+    steps) for gmres, 0 for direct solves, -1 when untracked (pallas_cg).
+    """
+    iterations: jnp.ndarray    # outer steps actually spent per instance
+    residual: jnp.ndarray      # final ||b - A x|| per instance
+    converged: jnp.ndarray     # residual <= tol * ||b|| per instance
+
+
+def _maybe_info(x, info: Optional[SolveInfo], return_info: bool):
+    return (x, info) if return_info else x
+
+
+# ---------------------------------------------------------------------------
+# Conjugate gradient (preconditioned, masked)
 # ---------------------------------------------------------------------------
 
 def solve_cg(matvec: Callable, b, *, init=None, tol: float = 1e-6,
-             maxiter: int = 1000, ridge: float = 0.0):
-    """Conjugate gradient for symmetric positive-(semi)definite operators.
+             maxiter: int = 1000, ridge: float = 0.0, precond=None,
+             return_info: bool = False, batch_ndim: int = 0):
+    """(Preconditioned) conjugate gradient for symmetric PSD operators.
 
     ``ridge`` adds λI damping, the common non-invertibility heuristic.
+    ``precond`` is ``None``, a callable v ↦ M⁻¹v, or ``"jacobi"``.
+    Vmap-safe: converged instances freeze inside the single while_loop.
     """
-    if ridge:
-        inner = matvec
-        matvec = lambda v: _tree_add(inner(v), v, ridge)
+    nb = batch_ndim
+    matvec = _damped(matvec, ridge)
+    M = _resolve_precond(precond, matvec, b, nb)
     x0 = _tree_zeros_like(b) if init is None else init
     r0 = _tree_sub(b, matvec(x0))
-    p0 = r0
-    rs0 = _tree_dot(r0, r0)
-    b_norm = _tree_l2(b)
+    z0 = M(r0) if M is not None else r0
+    p0 = z0
+    rz0 = _tree_dot(r0, z0, nb)
+    rr0 = _tree_dot(r0, r0, nb).real
+    b_norm = _tree_l2(b, nb)
     atol2 = jnp.maximum(tol * b_norm, 1e-30) ** 2
+    done0 = rr0 <= atol2
+    it0 = jnp.zeros_like(b_norm, dtype=jnp.int32)
 
     def cond(state):
-        _, _, _, rs, k = state
-        return jnp.logical_and(k < maxiter, rs.real > atol2)
+        k = state[-2]
+        done = state[-1]
+        return jnp.logical_and(k < maxiter, jnp.logical_not(jnp.all(done)))
 
     def body(state):
-        x, r, p, rs, k = state
+        x, r, p, rz, rr, it, k, done = state
         ap = matvec(p)
-        denom = _tree_dot(p, ap)
-        alpha = rs / jnp.where(denom == 0, 1.0, denom)
-        alpha = jnp.where(denom == 0, 0.0, alpha)
-        x = _tree_add(x, p, alpha)
-        r = _tree_add(r, ap, -alpha)
-        rs_new = _tree_dot(r, r)
-        beta = rs_new / jnp.where(rs == 0, 1.0, rs)
-        p = _tree_add(r, p, beta)
-        return x, r, p, rs_new, k + 1
+        denom = _tree_dot(p, ap, nb)
+        alpha = jnp.where(denom == 0, 0.0, rz / jnp.where(denom == 0, 1.0,
+                                                          denom))
+        x1 = _tree_add(x, p, alpha, nb)
+        r1 = _tree_add(r, ap, -alpha, nb)
+        rr1 = _tree_dot(r1, r1, nb).real
+        z1 = M(r1) if M is not None else r1
+        rz1 = _tree_dot(r1, z1, nb)
+        beta = rz1 / jnp.where(rz == 0, 1.0, rz)
+        beta = jnp.where(rz == 0, 0.0, beta)
+        p1 = _tree_add(z1, p, beta, nb)
+        # freeze instances that were already done at loop entry
+        x = _tree_freeze(done, x, x1, nb)
+        r = _tree_freeze(done, r, r1, nb)
+        p = _tree_freeze(done, p, p1, nb)
+        rz = jnp.where(done, rz, rz1)
+        rr = jnp.where(done, rr, rr1)
+        it = it + jnp.logical_not(done)
+        done = jnp.logical_or(done, rr <= atol2)
+        return x, r, p, rz, rr, it, k + 1, done
 
-    x, _, _, _, _ = lax.while_loop(cond, body, (x0, r0, p0, rs0, 0))
-    return x
+    x, r, _, _, rr, it, _, done = lax.while_loop(
+        cond, body, (x0, r0, p0, rz0, rr0, it0, 0, done0))
+    info = SolveInfo(iterations=it, residual=jnp.sqrt(rr),
+                     converged=rr <= atol2)
+    return _maybe_info(x, info, return_info)
 
 
 def solve_normal_cg(matvec: Callable, b, *, init=None, rmatvec=None,
                     tol: float = 1e-6, maxiter: int = 1000,
-                    ridge: float = 0.0):
+                    ridge: float = 0.0, precond=None,
+                    return_info: bool = False, batch_ndim: int = 0):
     """Solve A x = b via CG on AᵀA x = Aᵀ b.  Works for any square A."""
     example = _tree_zeros_like(b) if init is None else init
     if rmatvec is None:
@@ -134,176 +313,450 @@ def solve_normal_cg(matvec: Callable, b, *, init=None, rmatvec=None,
         return rmatvec(matvec(v))
 
     return solve_cg(normal_mv, rmatvec(b), init=init, tol=tol,
-                    maxiter=maxiter, ridge=ridge)
+                    maxiter=maxiter, ridge=ridge, precond=precond,
+                    return_info=return_info, batch_ndim=batch_ndim)
 
 
 # ---------------------------------------------------------------------------
-# BiCGSTAB
+# BiCGSTAB (masked)
 # ---------------------------------------------------------------------------
 
 def solve_bicgstab(matvec: Callable, b, *, init=None, tol: float = 1e-6,
-                   maxiter: int = 1000, ridge: float = 0.0):
-    """BiCGSTAB (van der Vorst, 1992) for general square operators."""
-    if ridge:
+                   maxiter: int = 1000, ridge: float = 0.0, precond=None,
+                   return_info: bool = False, batch_ndim: int = 0):
+    """BiCGSTAB (van der Vorst, 1992) for general square operators.
+
+    ``precond`` applies as a left preconditioner (wraps the operator); the
+    loop iterates on the preconditioned residual, but ``SolveInfo`` always
+    reports the TRUE residual ||b - A x|| so ``converged`` means the same
+    thing across solvers.  Vmap-safe: per-instance done/breakdown masks
+    inside one while_loop.
+    """
+    nb = batch_ndim
+    matvec = _damped(matvec, ridge)
+    matvec0, b0 = matvec, b
+    M = _resolve_precond(precond, matvec, b, nb)
+    if M is not None:
         inner = matvec
-        matvec = lambda v: _tree_add(inner(v), v, ridge)
+        matvec = lambda v: M(inner(v))
+        b = M(b)
     x0 = _tree_zeros_like(b) if init is None else init
     r0 = _tree_sub(b, matvec(x0))
     rhat = r0
-    b_norm = _tree_l2(b)
+    b_norm = _tree_l2(b, nb)
     atol = jnp.maximum(tol * b_norm, 1e-30)
+    rn0 = _tree_l2(r0, nb)
+    done0 = rn0 <= atol
 
-    init_state = dict(x=x0, r=r0, p=r0, v=_tree_zeros_like(b),
-                      rho=_tree_dot(rhat, r0), alpha=jnp.asarray(1.0, b_norm.dtype),
-                      omega=jnp.asarray(1.0, b_norm.dtype), k=0,
-                      breakdown=jnp.asarray(False))
+    init_state = dict(x=x0, r=r0, p=r0, rho=_tree_dot(rhat, r0, nb),
+                      alpha=jnp.ones_like(b_norm),
+                      omega=jnp.ones_like(b_norm),
+                      rnorm=rn0, it=jnp.zeros_like(b_norm, dtype=jnp.int32),
+                      k=0, done=done0,
+                      breakdown=jnp.zeros_like(done0))
 
     def cond(s):
-        return jnp.logical_and(
-            s["k"] < maxiter,
-            jnp.logical_and(_tree_l2(s["r"]) > atol,
-                            jnp.logical_not(s["breakdown"])))
+        return jnp.logical_and(s["k"] < maxiter,
+                               jnp.logical_not(jnp.all(s["done"])))
 
     def body(s):
-        x, r, p, rho = s["x"], s["r"], s["p"], s["rho"]
+        x, r, p, rho, done = s["x"], s["r"], s["p"], s["rho"], s["done"]
         v = matvec(p)
-        denom = _tree_dot(rhat, v)
+        denom = _tree_dot(rhat, v, nb)
         breakdown = denom == 0
         alpha = rho / jnp.where(breakdown, 1.0, denom)
-        h = _tree_add(x, p, alpha)
-        sres = _tree_add(r, v, -alpha)
+        alpha = jnp.where(breakdown, 0.0, alpha)
+        h = _tree_add(x, p, alpha, nb)
+        sres = _tree_add(r, v, -alpha, nb)
         t = matvec(sres)
-        tt = _tree_dot(t, t)
-        omega = _tree_dot(t, sres) / jnp.where(tt == 0, 1.0, tt)
+        tt = _tree_dot(t, t, nb)
+        omega = _tree_dot(t, sres, nb) / jnp.where(tt == 0, 1.0, tt)
         omega = jnp.where(tt == 0, 0.0, omega)
-        x_new = _tree_add(h, sres, omega)
-        r_new = _tree_add(sres, t, -omega)
-        rho_new = _tree_dot(rhat, r_new)
-        beta = (rho_new / jnp.where(rho == 0, 1.0, rho)) * \
+        x1 = _tree_add(h, sres, omega, nb)
+        r1 = _tree_add(sres, t, -omega, nb)
+        rho1 = _tree_dot(rhat, r1, nb)
+        beta = (rho1 / jnp.where(rho == 0, 1.0, rho)) * \
                (alpha / jnp.where(omega == 0, 1.0, omega))
-        p_new = _tree_add(r_new,
-                          _tree_add(p, v, -omega), beta)
-        return dict(x=x_new, r=r_new, p=p_new, v=v, rho=rho_new,
-                    alpha=alpha, omega=omega, k=s["k"] + 1,
-                    breakdown=jnp.logical_or(breakdown, rho == 0))
+        p1 = _tree_add(r1, _tree_add(p, v, -omega, nb), beta, nb)
+        rn1 = _tree_l2(r1, nb)
+        breakdown = jnp.logical_or(breakdown, rho == 0)
+        # freeze instances that were already done at loop entry
+        x = _tree_freeze(done, x, x1, nb)
+        r = _tree_freeze(done, r, r1, nb)
+        p = _tree_freeze(done, p, p1, nb)
+        rho = jnp.where(done, rho, rho1)
+        alpha = jnp.where(done, s["alpha"], alpha)
+        omega = jnp.where(done, s["omega"], omega)
+        rnorm = jnp.where(done, s["rnorm"], rn1)
+        it = s["it"] + jnp.logical_not(done)
+        done = jnp.logical_or(done, jnp.logical_or(rnorm <= atol, breakdown))
+        return dict(x=x, r=r, p=p, rho=rho, alpha=alpha, omega=omega,
+                    rnorm=rnorm, it=it, k=s["k"] + 1, done=done,
+                    breakdown=jnp.logical_or(s["breakdown"], breakdown))
 
     out = lax.while_loop(cond, body, init_state)
+    if return_info:
+        rn, cutoff = out["rnorm"], atol
+        if M is not None:   # report the true residual, not M(b - A x)
+            rn = _tree_l2(_tree_sub(b0, matvec0(out["x"])), nb)
+            cutoff = jnp.maximum(tol * _tree_l2(b0, nb), 1e-30)
+        return out["x"], SolveInfo(iterations=out["it"], residual=rn,
+                                   converged=rn <= cutoff)
     return out["x"]
 
 
 # ---------------------------------------------------------------------------
-# GMRES (restarted, flat-vector core)
+# GMRES (restarted; flat (B, d) core, masked restarts)
 # ---------------------------------------------------------------------------
 
 def solve_gmres(matvec: Callable, b, *, init=None, tol: float = 1e-6,
-                restart: int = 20, maxiter: int = 50, ridge: float = 0.0):
-    """Restarted GMRES.  Flattens the pytree to run Arnoldi on a matrix basis."""
-    if ridge:
+                restart: int = 20, maxiter: int = 1000, ridge: float = 0.0,
+                precond=None, return_info: bool = False, batch_ndim: int = 0):
+    """Restarted GMRES.  Flattens instances to run batched Arnoldi cycles.
+
+    ``maxiter`` is the total matvec budget, like the other iterative
+    solvers; the cycle cap is ``ceil(maxiter / restart)`` (so the uniform
+    engine default of 1000 means ~50 restart cycles, not 1000).
+    ``precond`` applies as a left preconditioner; the loop iterates on the
+    preconditioned residual, but ``SolveInfo`` always reports the TRUE
+    residual.  Converged instances skip further cycles via per-instance
+    masks.
+    """
+    matvec = _damped(matvec, ridge)
+    matvec0, b0 = matvec, b
+    M = _resolve_precond(precond, matvec, b, batch_ndim)
+    if M is not None:
         inner = matvec
-        matvec = lambda v: _tree_add(inner(v), v, ridge)
+        matvec = lambda v: M(inner(v))
+        b = M(b)
 
-    b_flat, unravel = jax.flatten_util.ravel_pytree(b)
-    d = b_flat.shape[0]
+    view = _flat_view(matvec, b, batch_ndim)
+    mv, b_flat = view.mv, view.b
+    B, d = b_flat.shape
     m = min(restart, d)
+    max_cycles = max(1, -(-maxiter // m))       # ceil: total matvec budget
 
-    def mv_flat(v):
-        out, _ = jax.flatten_util.ravel_pytree(matvec(unravel(v)))
-        return out
-
-    b_norm = jnp.linalg.norm(b_flat)
+    b_norm = jnp.linalg.norm(b_flat, axis=-1)                    # (B,)
     atol = jnp.maximum(tol * b_norm, 1e-30)
-    x0 = jnp.zeros_like(b_flat) if init is None else \
-        jax.flatten_util.ravel_pytree(init)[0]
+    if init is None:
+        x0 = jnp.zeros_like(b_flat)
+    elif batch_ndim == 0:
+        x0 = jax.flatten_util.ravel_pytree(init)[0][None]
+    else:
+        x0 = jax.vmap(lambda t: jax.flatten_util.ravel_pytree(t)[0])(init)
 
     def arnoldi_cycle(x):
-        r = b_flat - mv_flat(x)
-        beta = jnp.linalg.norm(r)
+        r = b_flat - mv(x)                                       # (B, d)
+        beta = jnp.linalg.norm(r, axis=-1)                       # (B,)
         safe_beta = jnp.where(beta == 0, 1.0, beta)
-        V = jnp.zeros((m + 1, d), b_flat.dtype).at[0].set(r / safe_beta)
-        H = jnp.zeros((m + 1, m), b_flat.dtype)
+        V = jnp.zeros((B, m + 1, d), b_flat.dtype)
+        V = V.at[:, 0].set(r / safe_beta[:, None])
+        H = jnp.zeros((B, m + 1, m), b_flat.dtype)
 
         def step(carry, j):
             V, H = carry
-            w = mv_flat(V[j])
+            w = mv(V[:, j])                                      # (B, d)
             # modified Gram-Schmidt against all basis vectors (masked)
             def ortho(i, w_h):
                 w, H = w_h
-                hij = jnp.where(i <= j, jnp.vdot(V[i], w), 0.0)
-                w = w - hij * V[i]
-                H = H.at[i, j].set(jnp.where(i <= j, hij, H[i, j]))
+                hij = jnp.where(i <= j,
+                                jnp.sum(jnp.conj(V[:, i]) * w, axis=-1), 0.0)
+                w = w - hij[:, None] * V[:, i]
+                H = H.at[:, i, j].set(jnp.where(i <= j, hij, H[:, i, j]))
                 return w, H
             w, H = lax.fori_loop(0, m, ortho, (w, H))
-            hn = jnp.linalg.norm(w)
-            H = H.at[j + 1, j].set(hn)
-            V = V.at[j + 1].set(w / jnp.where(hn == 0, 1.0, hn))
+            hn = jnp.linalg.norm(w, axis=-1)
+            H = H.at[:, j + 1, j].set(hn)
+            V = V.at[:, j + 1].set(w / jnp.where(hn == 0, 1.0, hn)[:, None])
             return (V, H), None
 
         (V, H), _ = lax.scan(step, (V, H), jnp.arange(m))
-        # least squares: min ||beta e1 - H y||
-        e1 = jnp.zeros(m + 1, b_flat.dtype).at[0].set(beta)
-        y, *_ = jnp.linalg.lstsq(H, e1, rcond=None)
-        return x + V[:m].T @ y
+        # least squares per instance: min ||beta e1 - H y||
+        e1 = jnp.zeros((B, m + 1), b_flat.dtype).at[:, 0].set(beta)
+        y = jax.vmap(lambda Hi, ei: jnp.linalg.lstsq(Hi, ei, rcond=None)[0])(
+            H, e1)
+        return x + jnp.einsum("bmd,bm->bd", V[:, :m], y)
+
+    rn0 = jnp.linalg.norm(b_flat - mv(x0), axis=-1)
+    done0 = rn0 <= atol
+    it0 = jnp.zeros((B,), jnp.int32)
 
     def cond(state):
-        x, k = state
-        r = jnp.linalg.norm(b_flat - mv_flat(x))
-        return jnp.logical_and(k < maxiter, r > atol)
+        _, _, _, k, done = state
+        return jnp.logical_and(k < max_cycles, jnp.logical_not(jnp.all(done)))
 
     def body(state):
-        x, k = state
-        return arnoldi_cycle(x), k + 1
+        x, rn, it, k, done = state
+        x1 = arnoldi_cycle(x)
+        rn1 = jnp.linalg.norm(b_flat - mv(x1), axis=-1)
+        x = jnp.where(done[:, None], x, x1)                      # freeze
+        rn = jnp.where(done, rn, rn1)
+        it = it + jnp.logical_not(done)
+        done = jnp.logical_or(done, rn <= atol)
+        return x, rn, it, k + 1, done
 
-    x, _ = lax.while_loop(cond, body, (x0, 0))
-    return unravel(x)
+    x, rn, it, _, done = lax.while_loop(cond, body,
+                                        (x0, rn0, it0, 0, done0))
+    x_tree = view.to_tree(x)
+    if not return_info:
+        return x_tree
+    cutoff = atol
+    if M is not None:   # report the true residual, not M(b - A x)
+        rn = _tree_l2(_tree_sub(b0, matvec0(x_tree)), batch_ndim)
+        cutoff = jnp.maximum(tol * _tree_l2(b0, batch_ndim), 1e-30)
+    info = SolveInfo(iterations=it, residual=rn, converged=rn <= cutoff)
+    if batch_ndim == 0:
+        info = SolveInfo(*(jnp.asarray(leaf).reshape(-1)[0] for leaf in info))
+    return x_tree, info
 
 
 # ---------------------------------------------------------------------------
 # Direct and Neumann
 # ---------------------------------------------------------------------------
 
-def solve_lu(matvec: Callable, b, *, init=None, **_):
+def solve_lu(matvec: Callable, b, *, init=None, tol: float = 1e-6,
+             ridge: float = 0.0, return_info: bool = False,
+             batch_ndim: int = 0, **_):
     """Materialize A and solve densely.  For small/d≤few-thousand systems."""
     del init
-    b_flat, unravel = jax.flatten_util.ravel_pytree(b)
-    A = materialize_matrix(matvec, b)
-    return unravel(jnp.linalg.solve(A, b_flat))
+    matvec = _damped(matvec, ridge)
+    A, view = materialize_batched(matvec, b, batch_ndim)
+    x = jnp.linalg.solve(A, view.b[..., None])[..., 0]
+    if return_info:
+        rn = jnp.linalg.norm(view.b - jnp.einsum("bij,bj->bi", A, x), axis=-1)
+        atol = jnp.maximum(tol * jnp.linalg.norm(view.b, axis=-1), 1e-30)
+        it = jnp.zeros_like(rn, dtype=jnp.int32)
+        # rn <= atol is False for NaN residuals (singular A) — reported honestly
+        info = SolveInfo(iterations=it, residual=rn, converged=rn <= atol)
+        if batch_ndim == 0:
+            info = SolveInfo(*(leaf[0] for leaf in info))
+        return view.to_tree(x), info
+    return view.to_tree(x)
 
 
-def solve_neumann(matvec: Callable, b, *, init=None, maxiter: int = 10, **_):
+def solve_neumann(matvec: Callable, b, *, init=None, maxiter: int = 10,
+                  tol: float = 0.0, ridge: float = 0.0,
+                  return_info: bool = False, batch_ndim: int = 0, **_):
     """Approximate (I - M)⁻¹ b ≈ Σ_{k<K} Mᵏ b where matvec(v) = v - M v.
 
     I.e. interprets ``matvec`` as A = I - M and truncates the Neumann series.
     Matches "Jacobian-free backprop" / phantom-gradient style approximations.
+    ``ridge`` damps A (shrinks M, improving contraction) like the other
+    solvers.  Vmap-safe: instances whose series term drops below tolerance
+    freeze while stragglers keep summing, and the loop exits early once the
+    whole batch is done (so the engine-level maxiter is a cap, not a cost).
+    The local default ``tol=0`` preserves the classic fixed-K truncation;
+    ``solve()`` forwards its tol, making engine-routed calls tol-aware.
     """
     del init
+    nb = batch_ndim
+    matvec = _damped(matvec, ridge)
+    atol = jnp.maximum(tol * _tree_l2(b, nb), 1e-30)
 
     def mfun(v):  # M v = v - A v
         return _tree_sub(v, matvec(v))
 
-    def body(carry, _):
-        acc, term = carry
-        term = mfun(term)
-        return (_tree_add(acc, term), term), None
+    it0 = jnp.zeros_like(atol, dtype=jnp.int32)
+    done0 = _tree_l2(b, nb) <= atol   # b = first series term
 
-    (acc, _), _ = lax.scan(body, (b, b), None, length=maxiter)
+    def cond(state):
+        _, _, _, k, done = state
+        return jnp.logical_and(k < maxiter, jnp.logical_not(jnp.all(done)))
+
+    def body(state):
+        acc, term, it, k, done = state
+        term1 = mfun(term)
+        acc = _tree_freeze(done, acc, _tree_add(acc, term1), nb)
+        term = _tree_freeze(done, term, term1, nb)
+        it = it + jnp.logical_not(done)
+        done = jnp.logical_or(done, _tree_l2(term, nb) <= atol)
+        return acc, term, it, k + 1, done
+
+    acc, _, it, _, _ = lax.while_loop(cond, body, (b, b, it0, 0, done0))
+    if return_info:
+        rn = _tree_l2(_tree_sub(b, matvec(acc)), nb)
+        # rn <= atol is False for NaN/diverged series — reported honestly
+        info = SolveInfo(iterations=it, residual=rn, converged=rn <= atol)
+        return acc, info
     return acc
 
 
-SOLVERS = {
-    "cg": solve_cg,
-    "normal_cg": solve_normal_cg,
-    "bicgstab": solve_bicgstab,
-    "gmres": solve_gmres,
-    "lu": solve_lu,
-    "neumann": solve_neumann,
-}
+# ---------------------------------------------------------------------------
+# Pallas fused batched-CG (dense small-system regime)
+# ---------------------------------------------------------------------------
+
+MAX_DENSE_DIM = 512
+
+
+def solve_pallas_cg(matvec: Callable, b, *, init=None, tol: float = 1e-6,
+                    maxiter: int = 1000, ridge: float = 0.0, precond=None,
+                    return_info: bool = False, batch_ndim: int = 0,
+                    interpret: Optional[bool] = None, block_b: int = 8):
+    """Materialize per-instance operators and run the fused Pallas CG kernel.
+
+    Dense small-system regime (d ≤ ``MAX_DENSE_DIM``) that dominates
+    hyperopt and DEQ workloads: the whole batch of (d × d) systems iterates
+    inside one kernel, VMEM-resident, with per-instance convergence masks.
+    """
+    if init is not None:
+        raise ValueError("pallas_cg always starts from zero; warm starts "
+                         "are not supported — use method='cg' instead")
+    if precond is not None:
+        raise ValueError("pallas_cg does not support preconditioning")
+    from repro.kernels.batched_cg.ops import batched_cg  # lazy: avoid cycle
+
+    matvec = _damped(matvec, ridge)
+    view = _flat_view(matvec, b, batch_ndim)
+    d = view.b.shape[-1]
+    if d > MAX_DENSE_DIM:   # guard BEFORE the d-matvec dense materialization
+        raise ValueError(
+            f"pallas_cg materializes dense systems; d={d} exceeds "
+            f"MAX_DENSE_DIM={MAX_DENSE_DIM} — use a matrix-free solver")
+    A, _ = materialize_batched(matvec, b, batch_ndim, view=view)
+    x = batched_cg(A, view.b, tol=tol, maxiter=maxiter, block_b=block_b,
+                   interpret=interpret)
+    if return_info:
+        r = view.b - jnp.einsum("bij,bj->bi", A, x)
+        rn = jnp.linalg.norm(r, axis=-1)
+        atol = jnp.maximum(tol * jnp.linalg.norm(view.b, axis=-1), 1e-30)
+        info = SolveInfo(iterations=jnp.full_like(rn, -1, dtype=jnp.int32),
+                         residual=rn, converged=rn <= atol)
+        if batch_ndim == 0:
+            info = SolveInfo(*(leaf[0] for leaf in info))
+        return view.to_tree(x), info
+    return view.to_tree(x)
+
+
+# ---------------------------------------------------------------------------
+# SolverSpec registry and the uniform entry point
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SolverSpec:
+    """A registered linear solver and its dispatch-relevant properties."""
+    name: str
+    fn: Callable
+    symmetric_only: bool = False     # requires A symmetric (PSD)
+    matrix_free: bool = True         # False: materializes A densely
+    supports_precond: bool = False
+    description: str = ""
+
+
+_REGISTRY: dict = {}
+
+
+def register_solver(name: str, fn: Callable, **attrs) -> SolverSpec:
+    """Register (or override) a solver under ``name`` in the global registry."""
+    spec = SolverSpec(name=name, fn=fn, **attrs)
+    _REGISTRY[name] = spec
+    return spec
+
+
+def get_spec(name: str) -> SolverSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown linear solver {name!r}; "
+                         f"available: {available_solvers()}") from None
+
+
+def available_solvers():
+    return sorted(_REGISTRY)
 
 
 def get_solver(name_or_fn):
+    """Resolve a registry name (or pass through a callable) to a solver fn."""
     if callable(name_or_fn):
         return name_or_fn
-    try:
-        return SOLVERS[name_or_fn]
-    except KeyError:
-        raise ValueError(f"unknown linear solver {name_or_fn!r}; "
-                         f"available: {sorted(SOLVERS)}") from None
+    return get_spec(name_or_fn).fn
+
+
+register_solver("cg", solve_cg, symmetric_only=True, supports_precond=True,
+                description="conjugate gradient (A symmetric PSD)")
+register_solver("normal_cg", solve_normal_cg, supports_precond=True,
+                description="CG on the normal equations (general A)")
+register_solver("bicgstab", solve_bicgstab, supports_precond=True,
+                description="BiCGSTAB (general square A)")
+register_solver("gmres", solve_gmres, supports_precond=True,
+                description="restarted GMRES (general square A)")
+register_solver("lu", solve_lu, matrix_free=False,
+                description="dense direct solve (materializes A)")
+register_solver("neumann", solve_neumann,
+                description="truncated Neumann series for I - M")
+register_solver("pallas_cg", solve_pallas_cg, symmetric_only=True,
+                matrix_free=False,
+                description="fused Pallas batched-CG kernel (dense, d<=512)")
+
+def __getattr__(name):
+    # Back-compat: the pre-registry name -> fn mapping, computed live so
+    # register_solver() stays visible.  Extend via register_solver, not by
+    # mutating this dict (mutations are discarded).
+    if name == "SOLVERS":
+        return {n: spec.fn for n, spec in _REGISTRY.items()}
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def solve(matvec: Callable, b, *, method="cg", batch_axes: Optional[int] = None,
+          precond=None, tol: float = 1e-6, maxiter: int = 1000,
+          ridge: float = 0.0, init=None, return_info: bool = False,
+          **solver_kwargs):
+    """Uniform entry point of the batched linear-solve engine.
+
+    Args:
+      matvec: linear operator.  Unbatched: maps an instance pytree to an
+        instance pytree.  With ``batch_axes`` set: maps *batched* pytrees
+        (every leaf carrying the batch axis) to batched pytrees — i.e. the
+        block-diagonal operator over all instances, applied at once.
+      b: right-hand side pytree (batched along ``batch_axes`` if set).
+      method: registry name (see ``available_solvers()``) or a solver callable
+        ``fn(matvec, b, **kw)``.  Callables cannot be combined with
+        ``batch_axes`` (they would need to handle batching themselves).
+      batch_axes: ``None`` for a single system, or an int axis carried by
+        every leaf of ``b``/``init`` along which independent systems stack.
+        The whole batch is solved by ONE masked while_loop: converged
+        instances freeze while stragglers iterate.
+      precond: ``None``, a callable v ↦ M⁻¹v, or ``"jacobi"`` (builds the
+        diagonal preconditioner by probing the operator).
+      tol / maxiter / ridge / init: the usual solver controls.
+      return_info: also return a ``SolveInfo`` with per-instance iteration
+        counts, residuals and convergence flags.
+    """
+    if callable(method):
+        if batch_axes is not None:
+            raise ValueError("batch_axes requires a registry solver name; "
+                             "custom callables must handle batching")
+        if precond is not None or return_info:
+            raise ValueError("precond/return_info require a registry solver "
+                             "name; pass them to the callable directly")
+        return method(matvec, b, tol=tol, maxiter=maxiter, ridge=ridge,
+                      init=init, **solver_kwargs)
+
+    spec = get_spec(method)
+    if precond is not None and not spec.supports_precond:
+        raise ValueError(f"solver {spec.name!r} does not support "
+                         "preconditioning; see SolverSpec.supports_precond")
+    if batch_axes is None:
+        return spec.fn(matvec, b, init=init, tol=tol, maxiter=maxiter,
+                       ridge=ridge, precond=precond,
+                       return_info=return_info, **solver_kwargs)
+
+    axis = int(batch_axes)
+    if axis != 0:
+        move_in = functools.partial(jax.tree_util.tree_map,
+                                    lambda l: jnp.moveaxis(l, axis, 0))
+        move_out = functools.partial(jax.tree_util.tree_map,
+                                     lambda l: jnp.moveaxis(l, 0, axis))
+        inner_mv = matvec
+        matvec = lambda v: move_in(inner_mv(move_out(v)))
+        b = move_in(b)
+        init = move_in(init) if init is not None else None
+
+    out = spec.fn(matvec, b, init=init, tol=tol, maxiter=maxiter,
+                  ridge=ridge, precond=precond, return_info=return_info,
+                  batch_ndim=1, **solver_kwargs)
+    if axis == 0:
+        return out
+    if return_info:
+        x, info = out
+        return move_out(x), info
+    return move_out(out)

@@ -4,6 +4,9 @@ flash_attention/ — blockwise online-softmax attention (train/prefill)
 rwkv_wkv/        — RWKV-6 WKV chunked recurrence (the SSM hot loop)
 simplex_proj/    — batched simplex projection (the paper's hot operator in
                    the multiclass-SVM experiment), sort-free bisection form
+batched_cg/      — fused batched conjugate gradient over dense small SPD
+                   systems (d ≤ 512), the implicit-diff backward hot path;
+                   per-instance convergence masks, implicit-diff custom VJP
 
 Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 wrapper with the public API) and ref.py (pure-jnp oracle); tests sweep

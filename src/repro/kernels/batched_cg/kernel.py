@@ -1,0 +1,96 @@
+"""Fused batched conjugate-gradient as a Pallas TPU kernel.
+
+The implicit-differentiation hot path (paper §2.1) solves many small,
+independent, dense SPD systems — one per example in a bilevel batch, one per
+dataset in a hyperparameter sweep, one per molecule in a sensitivity scan.
+Launching an XLA while_loop per system wastes the chip on dispatch and HBM
+round-trips; here the whole block of systems lives in VMEM and every CG
+iteration is one fused step:
+
+  * the batched matvec ``A p`` is a single (block_b, d, d) × (block_b, d)
+    contraction on the MXU,
+  * the reductions (α, β, residual norms) are VPU row-reductions,
+  * per-instance ``active`` masks freeze converged systems while stragglers
+    iterate, and the while_loop exits as soon as the whole block converged.
+
+Dense small-system regime: d ≤ 512 (a (8, 512, 512) f32 block of operators is
+8 MB — comfortably VMEM-resident next to the CG vectors).  For larger or
+matrix-free systems use the masked solvers in ``repro.core.linear_solve``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def _batched_cg_kernel(a_ref, b_ref, x_ref, *, tol: float, maxiter: int):
+    # compute in the input precision, floored at f32 (so f64 solves under
+    # jax_enable_x64 keep f64 accuracy instead of silently degrading)
+    dtype = jnp.promote_types(jnp.result_type(a_ref.dtype, b_ref.dtype),
+                              jnp.float32)
+    A = a_ref[...].astype(dtype)                        # (bb, d, d)
+    b = b_ref[...].astype(dtype)                        # (bb, d)
+
+    def matvec(p):                                      # (bb, d) -> (bb, d)
+        return lax.dot_general(
+            A, p,
+            dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=dtype)
+
+    x0 = jnp.zeros_like(b)
+    r0 = b                                              # r = b - A·0
+    p0 = r0
+    rs0 = jnp.sum(r0 * r0, axis=-1)                     # (bb,)
+    b2 = jnp.sum(b * b, axis=-1)
+    atol2 = jnp.maximum(tol * tol * b2, 1e-30)
+
+    def cond(state):
+        _, _, _, rs, k = state
+        return jnp.logical_and(k < maxiter, jnp.any(rs > atol2))
+
+    def body(state):
+        x, r, p, rs, k = state
+        active = rs > atol2                             # (bb,)
+        ap = matvec(p)
+        denom = jnp.sum(p * ap, axis=-1)
+        safe = jnp.where(denom == 0, 1.0, denom)
+        alpha = jnp.where(denom == 0, 0.0, rs / safe)
+        alpha = jnp.where(active, alpha, 0.0)[:, None]  # frozen rows: no-op
+        x = x + alpha * p
+        r = r - alpha * ap
+        rs_new = jnp.sum(r * r, axis=-1)
+        beta = jnp.where(rs == 0, 0.0, rs_new / jnp.where(rs == 0, 1.0, rs))
+        p = jnp.where(active[:, None], r + beta[:, None] * p, p)
+        rs = jnp.where(active, rs_new, rs)
+        return x, r, p, rs, k + 1
+
+    x, _, _, _, _ = lax.while_loop(cond, body, (x0, r0, p0, rs0, 0))
+    x_ref[...] = x.astype(x_ref.dtype)
+
+
+def batched_cg_pallas(A, b, *, tol: float = 1e-6, maxiter: int = 64,
+                      block_b: int = 8, interpret: bool = False):
+    """A: (B, d, d) SPD batch; b: (B, d).  Returns x: (B, d) with A x ≈ b."""
+    B, d, d2 = A.shape
+    assert d == d2, (d, d2)
+    assert b.shape == (B, d), (A.shape, b.shape)
+    block_b = min(block_b, B)
+    assert B % block_b == 0, (B, block_b)
+    kernel = functools.partial(_batched_cg_kernel, tol=tol, maxiter=maxiter)
+    return pl.pallas_call(
+        kernel,
+        grid=(B // block_b,),
+        in_specs=[pl.BlockSpec((block_b, d, d), lambda i: (i, 0, 0)),
+                  pl.BlockSpec((block_b, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_b, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, d), b.dtype),
+        cost_estimate=pl.CostEstimate(   # whole-call totals, worst case
+            flops=2 * maxiter * B * d * d,
+            bytes_accessed=4 * (B * d * d + 2 * B * d),
+            transcendentals=0),
+        interpret=interpret,
+    )(A, b)

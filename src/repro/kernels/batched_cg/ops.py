@@ -1,0 +1,79 @@
+"""Public batched-CG op with implicit-differentiation custom VJP.
+
+Forward: one fused Pallas kernel solves the whole (B, d, d) batch of SPD
+systems (``ref.py`` fallback off-TPU / in tests).  Backward: instead of
+differentiating through the CG iterations, we apply the paper's move at the
+kernel boundary — x = A⁻¹b is implicitly defined by Ax − b = 0, so
+
+    u  = A⁻ᵀ g          (one more batched solve, same kernel)
+    ∂b = u,   ∂A = −u xᵀ
+
+which makes the op exactly as differentiable as a dense solve at the cost of
+one extra batched CG.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.batched_cg.kernel import batched_cg_pallas
+from repro.kernels.batched_cg.ref import batched_cg_ref
+
+
+def _pick_block_b(B: int, block_b: int) -> int:
+    bb = min(block_b, B)
+    while B % bb:
+        bb -= 1
+    return max(bb, 1)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def _solve(A, b, tol, maxiter, block_b, interpret):
+    if interpret is None:      # no TPU: identical masked-CG reference path
+        return batched_cg_ref(A, b, tol=tol, maxiter=maxiter)
+    return batched_cg_pallas(A, b, tol=tol, maxiter=maxiter,
+                             block_b=_pick_block_b(A.shape[0], block_b),
+                             interpret=interpret)
+
+
+def _fwd(A, b, tol, maxiter, block_b, interpret):
+    x = _solve(A, b, tol, maxiter, block_b, interpret)
+    return x, (A, x)
+
+
+def _bwd(tol, maxiter, block_b, interpret, res, g):
+    A, x = res
+    u = _solve(A.transpose(0, 2, 1), g, tol, maxiter, block_b, interpret)
+    dA = -u[:, :, None] * x[:, None, :]
+    return dA, u
+
+
+_solve.defvjp(_fwd, _bwd)
+
+
+def batched_cg(A, b, *, tol: float = 1e-6, maxiter: Optional[int] = None,
+               block_b: int = 8, interpret: Optional[bool] = None):
+    """Solve the batch of SPD systems A[i] x[i] = b[i] in one fused kernel.
+
+    Args:
+      A: (B, d, d) symmetric positive-definite operators, d ≤ 512.
+      b: (B, d) right-hand sides.
+      tol: relative residual tolerance per instance.
+      maxiter: CG iteration cap (default: d, the exact-arithmetic bound).
+      block_b: instances per Pallas program (VMEM tile height).
+      interpret: True forces Pallas interpret mode; None auto-selects the
+        pure-JAX reference path off-TPU and the compiled kernel on TPU.
+
+    Differentiable in A and b via the implicit-diff custom VJP.
+    """
+    B, d, _ = A.shape
+    if maxiter is None:
+        maxiter = d
+    if interpret is None and jax.default_backend() != "tpu":
+        interpret = None   # sentinel: ref path (see _solve)
+    elif interpret is None:
+        interpret = False
+    return _solve(A, b, float(tol), int(maxiter), int(block_b), interpret)

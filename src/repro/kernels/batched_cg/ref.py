@@ -1,0 +1,48 @@
+"""Pure-JAX reference for the fused batched-CG kernel.
+
+Same algorithm as ``kernel.py`` — masked CG over a (B, d) batch inside one
+``lax.while_loop`` — expressed with plain jnp ops.  Used as the correctness
+oracle for kernel parity tests and as the CPU/GPU fallback path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@jax.jit
+def batched_cg_ref(A, b, tol: float = 1e-6, maxiter: int = 64):
+    """A: (B, d, d) SPD batch; b: (B, d).  Returns x: (B, d)."""
+    dtype = jnp.promote_types(jnp.result_type(A.dtype, b.dtype), jnp.float32)
+    out_dtype = b.dtype
+    A = A.astype(dtype)
+    b = b.astype(dtype)
+    x0 = jnp.zeros_like(b)
+    r0 = b
+    p0 = r0
+    rs0 = jnp.sum(r0 * r0, axis=-1)
+    atol2 = jnp.maximum(tol * tol * jnp.sum(b * b, axis=-1), 1e-30)
+
+    def cond(state):
+        _, _, _, rs, k = state
+        return jnp.logical_and(k < maxiter, jnp.any(rs > atol2))
+
+    def body(state):
+        x, r, p, rs, k = state
+        active = rs > atol2
+        ap = jnp.einsum("bij,bj->bi", A, p)
+        denom = jnp.sum(p * ap, axis=-1)
+        safe = jnp.where(denom == 0, 1.0, denom)
+        alpha = jnp.where(denom == 0, 0.0, rs / safe)
+        alpha = jnp.where(active, alpha, 0.0)[:, None]
+        x = x + alpha * p
+        r = r - alpha * ap
+        rs_new = jnp.sum(r * r, axis=-1)
+        beta = jnp.where(rs == 0, 0.0, rs_new / jnp.where(rs == 0, 1.0, rs))
+        p = jnp.where(active[:, None], r + beta[:, None] * p, p)
+        rs = jnp.where(active, rs_new, rs)
+        return x, r, p, rs, k + 1
+
+    x, _, _, _, _ = lax.while_loop(cond, body, (x0, r0, p0, rs0, 0))
+    return x.astype(out_dtype)

@@ -68,7 +68,7 @@ class TestSpecConstruction:
 
     def test_moe_expert_dim_on_model_when_divisible(self):
         # shape-only: AbstractMesh needs no physical devices
-        mesh = jax.sharding.AbstractMesh((1, 16), ("data", "model"))
+        mesh = shd.abstract_mesh((1, 16), ("data", "model"))
         rules = shd.ShardingRules()
         s = shd.param_spec(("blocks", "mlp", "w_gate"), (160, 5120, 1536),
                            rules, mesh)
@@ -93,7 +93,7 @@ class TestSpecConstruction:
     def test_all_archs_specs_constructible(self):
         """Spec construction must succeed for every assigned arch (full-size
         configs — shapes only, no allocation)."""
-        mesh = jax.sharding.AbstractMesh((1, 16), ("data", "model"))
+        mesh = shd.abstract_mesh((1, 16), ("data", "model"))
         from repro.models import model as mdl
         for name in configs.names():
             cfg = configs.get(name)

@@ -6,6 +6,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro import configs
@@ -261,6 +263,7 @@ class TestFaultTolerance:
 # End-to-end training loop (smoke config, real loop with checkpoint/resume)
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 class TestTrainLoopE2E:
 
     def test_loss_decreases_and_resume_is_exact(self, tmp_path):
