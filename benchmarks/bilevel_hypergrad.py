@@ -1,0 +1,75 @@
+"""Batched-vs-looped hypergradients through the solver runtime's ``run()``.
+
+The workload: B independent ridge-regression hyperparameter problems (one
+regularizer θᵢ per dataset).  Each hypergradient needs a full inner SOLVE
+(``GradientDescent.run()``, a masked ``lax.while_loop``) plus one implicit
+backward linear solve.  ``jax.vmap`` turns the whole batch into ONE masked
+forward loop and ONE batched backward solve — this benchmark measures that
+against the python-loop baseline.
+
+Run: PYTHONPATH=src python -m benchmarks.run --only bilevel
+"""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_fn
+from repro.core import GradientDescent
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _make_problems(key, B, m, d):
+    X = jax.random.normal(key, (B, m, d))
+    y = jax.random.normal(jax.random.fold_in(key, 1), (B, m))
+    thetas = jnp.linspace(0.5, 5.0, B)
+    return X, y, thetas
+
+
+def _bench_hypergrad(emit_fn, B=32, m=24, d=12, maxiter=300):
+    X, y, thetas = _make_problems(jax.random.PRNGKey(0), B, m, d)
+    # one conservative stepsize covering the whole batch
+    L = float(max(jnp.linalg.eigvalsh(X[i].T @ X[i]).max()
+                  for i in range(B))) + 5.0
+
+    def hypergrad(Xi, yi, theta):
+        def inner_obj(x, t):
+            r = Xi @ x - yi
+            return 0.5 * jnp.sum(r ** 2) + 0.5 * t * jnp.sum(x ** 2)
+
+        solver = GradientDescent(inner_obj, stepsize=1.0 / L,
+                                 maxiter=maxiter, tol=1e-10, solve="cg")
+        # outer loss: validation-style quadratic in the inner optimum
+        return jnp.sum(solver.run(jnp.zeros(d), theta)[0] ** 2)
+
+    grad_one = jax.jit(jax.grad(hypergrad, argnums=2))
+
+    def looped():
+        return [grad_one(X[i], y[i], thetas[i]) for i in range(B)]
+
+    grad_vmap = jax.jit(jax.vmap(jax.grad(hypergrad, argnums=2)))
+
+    # correctness gate before timing: batched == looped hypergradients
+    g_loop = jnp.stack(looped())
+    g_vmap = grad_vmap(X, y, thetas)
+    err = float(jnp.max(jnp.abs(g_loop - g_vmap)))
+    assert err < 1e-8, f"batched hypergrad drifted from looped: {err}"
+
+    t_loop = time_fn(looped, iters=3)
+    t_vmap = time_fn(lambda: grad_vmap(X, y, thetas), iters=3)
+    emit_fn(f"bilevel_hypergrad_loop_B{B}_d{d}", t_loop, "")
+    emit_fn(f"bilevel_hypergrad_vmap_B{B}_d{d}", t_vmap,
+            f"speedup={t_loop / t_vmap:.1f}x,maxerr={err:.1e}")
+    return t_loop / t_vmap
+
+
+def run(emit_fn, smoke: bool = False):
+    if smoke:
+        _bench_hypergrad(emit_fn, B=16, m=16, d=8, maxiter=200)
+    else:
+        _bench_hypergrad(emit_fn, B=32, m=24, d=12)
+        _bench_hypergrad(emit_fn, B=128, m=24, d=12)
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    run(emit, smoke=True)

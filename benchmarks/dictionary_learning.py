@@ -12,14 +12,12 @@ Claim validated (Table 2's qualitative ordering): task-driven DictL ≥
 unsupervised DictL and is competitive with (or better than) raw-feature
 logreg while using k ≪ p variables.
 """
-import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import emit, time_fn
-from repro.core import custom_fixed_point, optimality, prox, solvers
+from repro.core import LBFGS, ProximalGradient, custom_fixed_point, prox
 
 jax.config.update("jax_enable_x64", True)
 
@@ -56,13 +54,14 @@ def logreg(X, y, l2=1e-2, l1=0.0, iters=400):
         return ll + 0.5 * l2 * jnp.sum(w ** 2)
 
     if l1 == 0.0:
-        return solvers.lbfgs(obj, jnp.zeros(X.shape[1]), maxiter=iters,
-                             stepsize=0.5)
+        return LBFGS(obj, maxiter=iters, stepsize=0.5,
+                     implicit_diff=False).run(jnp.zeros(X.shape[1]))[0]
     L = float(jnp.linalg.eigvalsh(X.T @ X).max()) / len(y) + l2
-    return solvers.proximal_gradient(
-        lambda w, tf: obj(w),
-        lambda v, lam, s: prox.prox_lasso(v, lam, s),
-        jnp.zeros(X.shape[1]), (None, l1), stepsize=1.0 / L, maxiter=iters)
+    solver = ProximalGradient(lambda w, tf: obj(w),
+                              lambda v, lam, s: prox.prox_lasso(v, lam, s),
+                              stepsize=1.0 / L, maxiter=iters,
+                              implicit_diff=False)
+    return solver.run(jnp.zeros(X.shape[1]), (None, l1))[0]
 
 
 def sparse_code(X, D, lam=0.1, gamma=0.1, iters=300):
@@ -74,9 +73,11 @@ def sparse_code(X, D, lam=0.1, gamma=0.1, iters=300):
         return 0.5 * jnp.sum((X - x @ theta) ** 2)
 
     pr = lambda v, tg, s: prox.prox_elastic_net(v, tg, s)
-    return solvers.proximal_gradient(
-        f, pr, jnp.zeros((X.shape[0], D.shape[0])), (D, (lam, gamma)),
-        stepsize=1.0 / L, maxiter=iters, tol=1e-9), f, pr, L
+    solver = ProximalGradient(f, pr, stepsize=1.0 / L, maxiter=iters,
+                              tol=1e-9, implicit_diff=False)
+    codes = solver.run(jnp.zeros((X.shape[0], D.shape[0])),
+                       (D, (lam, gamma)))[0]
+    return codes, f, pr, L
 
 
 def run(emit_fn=emit):

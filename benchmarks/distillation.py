@@ -10,11 +10,9 @@ unrolling-to-convergence (paper reports 4× end-to-end on MNIST-scale);
 (b) outer loss decreases (distillation works); (c) both give the same
 hypergradient direction.
 """
-import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import emit, time_fn
 from repro.core import bilevel
@@ -47,9 +45,10 @@ def run(emit_fn=emit):
 
     def inner_solver(init_x, theta):
         # Newton-ish: LBFGS on the strongly-convex inner problem
-        from repro.core import solvers
-        return solvers.lbfgs(inner_obj, jnp.zeros((p, k)), theta,
-                             maxiter=150, stepsize=0.5, tol=1e-10)
+        from repro.core import LBFGS
+        solver = LBFGS(inner_obj, maxiter=150, stepsize=0.5, tol=1e-10,
+                       implicit_diff=False)
+        return solver.run(jnp.zeros((p, k)), theta)[0]
 
     def outer_loss(x_star, theta):
         scores = Xtr @ x_star

@@ -11,7 +11,6 @@ small residual at the FIRE minimum; (b) differentiating through the unrolled
 FIRE trajectory is orders-of-magnitude less stable across random seeds
 (paper: "typically does not even converge").
 """
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -66,7 +65,6 @@ def fire_minimize(x0, theta, steps=400, dt0=0.02):
 
 
 def run(emit_fn=emit):
-    key = jax.random.PRNGKey(0)
     theta = 0.6
 
     def F(x, theta):           # normalized forces — the optimality root

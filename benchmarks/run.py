@@ -9,17 +9,20 @@ Prints ``name,us_per_call,derived`` CSV rows.
   fig6    molecular-dynamics position sensitivity (implicit JVP)
   kernels micro-benchmarks of the Pallas ops (interpret mode on CPU)
   batched batched-vs-looped linear-solve engine speedups
+  bilevel batched-vs-looped hypergradients through the solver runtime
   roofline per-(arch x shape) terms from the dry-run artifacts
 
-``--smoke`` runs a fast CI subset (kernels + batched) and writes the rows to
-``BENCH_smoke.json`` (override with ``--out``) for artifact upload.
+``--smoke`` runs a fast CI subset (kernels + batched + bilevel) and writes
+the rows to ``BENCH_smoke.json`` (override with ``--out``) for artifact
+upload.
 """
 import argparse
 import sys
 import traceback
 
 
-SMOKE_BENCHES = ["kernels", "batched"]
+SMOKE_BENCHES = ["kernels", "batched", "bilevel"]
+SMOKE_KWARG_BENCHES = {"batched", "bilevel"}   # accept run(emit, smoke=True)
 
 
 def main() -> None:
@@ -32,7 +35,8 @@ def main() -> None:
                     help="JSON report path (with --smoke)")
     args = ap.parse_args()
 
-    from benchmarks import (batched_solve, dictionary_learning, distillation,
+    from benchmarks import (batched_solve, bilevel_hypergrad,
+                            dictionary_learning, distillation,
                             jacobian_precision, kernels_micro,
                             molecular_dynamics, roofline_report,
                             svm_hyperopt)
@@ -45,6 +49,7 @@ def main() -> None:
         "fig6": molecular_dynamics.run,
         "kernels": kernels_micro.run,
         "batched": batched_solve.run,
+        "bilevel": bilevel_hypergrad.run,
         "roofline": roofline_report.run,
     }
     if args.only:
@@ -59,7 +64,7 @@ def main() -> None:
     failed = []
     for name in names:
         try:
-            if args.smoke and name == "batched":
+            if args.smoke and name in SMOKE_KWARG_BENCHES:
                 all_benches[name](emit_fn, smoke=True)
             else:
                 all_benches[name](emit_fn)

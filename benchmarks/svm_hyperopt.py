@@ -10,14 +10,14 @@ Paper claims validated:
       give the same hypergradient (Fig 4c);
   (c) validation losses match across methods (Fig 14).
 """
-import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import emit, time_fn
-from repro.core import custom_fixed_point, optimality, projections, solvers
+from repro.core import (BlockCoordinateDescent, MirrorDescent,
+                        ProjectedGradient, custom_fixed_point, optimality,
+                        projections)
 
 jax.config.update("jax_enable_x64", True)
 
@@ -72,20 +72,21 @@ def run(emit_fn=emit):
 
     # inner solvers (theta-adaptive stepsize: grad_x f is (Lxx/theta)-Lipschitz)
     def solve_pg(init_x, theta):
-        return solvers.projected_gradient(f, proj_e, init_x, (theta, None),
-                                          stepsize=theta / Lxx, maxiter=2000,
-                                          tol=1e-12)
+        pg = ProjectedGradient(f, proj_e, stepsize=theta / Lxx,
+                               maxiter=2000, tol=1e-12, implicit_diff=False)
+        return pg.run(init_x, (theta, None))[0]
 
     def solve_md(init_x, theta):
-        return solvers.mirror_descent(f, proj_kl, init_x, (theta, None),
-                                      stepsize=theta / Lxx * 5.0,
-                                      maxiter=6000, tol=1e-13)
+        md = MirrorDescent(f, proj_kl, stepsize=theta / Lxx * 5.0,
+                           maxiter=6000, tol=1e-13, implicit_diff=False)
+        return md.run(init_x, (theta, None))[0]
 
     def solve_bcd(init_x, theta):
-        return solvers.block_coordinate_descent(
-            f, lambda r, tg, s: projections.projection_simplex(r), init_x,
-            (theta, None), stepsize=theta / Lxx * m / 4, maxiter=100,
-            tol=1e-12)
+        bcd = BlockCoordinateDescent(
+            f, lambda r, tg, s: projections.projection_simplex(r),
+            stepsize=theta / Lxx * m / 4, maxiter=100, tol=1e-12,
+            implicit_diff=False)
+        return bcd.run(init_x, (theta, None))[0]
 
     variants = {
         "md_solver_md_fp": (solve_md, T_md),

@@ -3,9 +3,11 @@ first-class framework feature.
 
 Outer: learn per-domain mixture weights θ (simplex) over two synthetic data
 domains, one clean and one corrupted, to minimize validation loss.
-Inner: ridge-regularized logistic LM-head fit on the θ-weighted data.
-The hypergradient flows through the inner optimum via ``custom_root`` on the
-stationarity condition — no unrolling, one CG solve per outer step.
+Inner: ridge-regularized logistic LM-head fit on the θ-weighted data,
+solved by the state-based runtime's ``LBFGS`` — the solver declares its own
+stationarity condition, so the hypergradient flows through the inner optimum
+automatically (no unrolling, one CG solve per outer step) and the driver
+surfaces the inner solve's ``OptInfo`` diagnostics.
 
 Expected outcome: the learned weights downweight the corrupted domain.
 
@@ -14,7 +16,7 @@ Run: PYTHONPATH=src python examples/bilevel_datareweight.py
 import jax
 import jax.numpy as jnp
 
-from repro.core import bilevel, projections
+from repro.core import LBFGS, bilevel
 
 jax.config.update("jax_enable_x64", True)
 
@@ -48,22 +50,25 @@ def main():
         return (mix[0] * xent(w, Xa, ya) + mix[1] * xent(w, Xb, yb)
                 + 5e-3 * jnp.sum(w ** 2))
 
-    def inner_solver(init_w, lam):
-        from repro.core import solvers
-        return solvers.lbfgs(inner_obj, jnp.zeros((p, k)), lam,
-                             maxiter=200, stepsize=0.5, tol=1e-10)
+    # the runtime solver declares its optimality mapping (stationarity of
+    # inner_obj); solve_bilevel routes its backward solve through "cg".
+    # tol is set where this problem's L-BFGS actually lands within the
+    # iteration budget, so OptInfo reports an honest converged=True
+    inner_solver = LBFGS(inner_obj, maxiter=200, stepsize=0.5, tol=1e-5)
 
     def outer_loss(w, lam):
         return xent(w, Xval, yval)
 
     sol = bilevel.solve_bilevel(
-        outer_loss, inner_solver, jnp.zeros(2), None,
-        inner_objective=inner_obj, outer_steps=30, outer_lr=0.5,
-        momentum=0.9, solve="cg")
+        outer_loss, inner_solver, jnp.zeros(2), jnp.zeros((p, k)),
+        outer_steps=30, outer_lr=0.5, momentum=0.9, solve="cg")
 
     mix = jax.nn.softmax(sol.theta)
     print(f"val loss: {sol.outer_values[0]:.4f} -> "
           f"{sol.outer_values[-1]:.4f}")
+    print(f"last inner solve: converged={bool(sol.inner_info.converged)} "
+          f"in {int(sol.inner_info.iterations)} iters "
+          f"(error {float(sol.inner_info.error):.1e})")
     print(f"learned domain weights: clean={mix[0]:.3f} "
           f"corrupted={mix[1]:.3f}")
     assert mix[0] > 0.7, "expected the clean domain to dominate"

@@ -31,6 +31,14 @@ def main():
         out = x + 0.5 * h
         return out / (1.0 + 0.1 * jnp.linalg.norm(out))
 
+    # the forward solve is a runtime AndersonAcceleration.run(): one masked
+    # while_loop with OptInfo diagnostics, implicit-diff'd automatically
+    z_star, info = deq_fixed_point(cell, jnp.zeros(d), x, w, fwd_iters=100,
+                                   fwd_tol=1e-12, bwd_solve="normal_cg",
+                                   bwd_iters=200, return_info=True)
+    print(f"forward solve: converged={bool(info.converged)} in "
+          f"{int(info.iterations)} iters (residual {float(info.error):.1e})")
+
     def loss_deq(w):
         z = deq_fixed_point(cell, jnp.zeros(d), x, w, fwd_iters=100,
                             fwd_tol=1e-12, bwd_solve="normal_cg",

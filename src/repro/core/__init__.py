@@ -1,14 +1,19 @@
 """repro.core — automatic implicit differentiation (the paper's contribution).
 
 Public API re-exports:
+  solver runtime (state-based, auto implicit diff):
+    IterativeSolver protocol, OptInfo diagnostics, and the solver classes
+    GradientDescent, ProximalGradient, ProjectedGradient, MirrorDescent,
+    BlockCoordinateDescent, Newton, LBFGS, FixedPointIteration,
+    AndersonAcceleration    — repro.core.solver_runtime
   custom_root, custom_fixed_point, custom_root_jvp, custom_fixed_point_jvp,
   root_vjp, root_jvp           — repro.core.implicit_diff
   solve (batched engine entry), SolverSpec registry, SolveInfo,
-  solve_cg / bicgstab / gmres / normal_cg / lu / neumann / pallas_cg
-                               — repro.core.linear_solve
+  solve_cg / bicgstab / gmres / dense_gmres / normal_cg / lu / neumann /
+  pallas_cg                    — repro.core.linear_solve
   optimality-condition catalog — repro.core.optimality
   projections / prox catalogs  — repro.core.projections, repro.core.prox
-  inner solvers                — repro.core.solvers
+  legacy functional solvers    — repro.core.solvers (deprecated shims)
   bilevel driver               — repro.core.bilevel
   DEQ implicit layer           — repro.core.implicit_layer
 """
@@ -16,9 +21,17 @@ from repro.core.implicit_diff import (custom_root, custom_fixed_point,
                                       custom_root_jvp, custom_fixed_point_jvp,
                                       root_vjp, root_jvp)
 from repro.core.linear_solve import (solve, solve_cg, solve_bicgstab,
-                                     solve_gmres, solve_normal_cg, solve_lu,
+                                     solve_gmres, solve_dense_gmres,
+                                     solve_normal_cg, solve_lu,
                                      solve_neumann, SolverSpec, SolveInfo,
                                      register_solver, get_solver, get_spec,
                                      available_solvers, jacobi_preconditioner)
+from repro.core.solver_runtime import (IterativeSolver, OptInfo,
+                                       GradientDescent, ProximalGradient,
+                                       ProjectedGradient, MirrorDescent,
+                                       BlockCoordinateDescent, Newton, LBFGS,
+                                       FixedPointIteration,
+                                       AndersonAcceleration)
 from repro.core import optimality, projections, prox, solvers, bilevel
-from repro.core.implicit_layer import deq_fixed_point, make_deq_block
+from repro.core.implicit_layer import (deq_fixed_point, make_deq_block,
+                                       make_deq_solver)

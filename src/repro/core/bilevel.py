@@ -2,21 +2,29 @@
 
     min_θ  L_outer(x*(θ), θ)   s.t.   x*(θ) = argmin_x  L_inner(x, θ)
 
-The hypergradient ∇θ L_outer flows through x*(θ) via ``custom_root`` on the
-stationarity condition (or a user-supplied fixed point), i.e. one extra
+The hypergradient ∇θ L_outer flows through x*(θ) via implicit
+differentiation of the inner optimality condition, i.e. one extra
 matrix-free linear solve instead of unrolled backprop through the inner run —
 the paper's headline efficiency claim, and what makes bilevel viable when the
 inner problem is a sharded, multi-pod training run.
+
+The preferred inner-solver form is a ``solver_runtime.IterativeSolver``:
+it declares its own optimality mapping, self-wraps with ``custom_root``,
+and reports per-step ``OptInfo`` diagnostics which this driver surfaces
+(``BilevelSolution.inner_info``).  Bare callables with an explicit
+``inner_objective`` / ``fixed_point`` keep working via
+``make_implicit_inner``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import implicit_diff, optimality
+from repro.core.solver_runtime import IterativeSolver, OptInfo
 
 
 @dataclasses.dataclass
@@ -25,57 +33,109 @@ class BilevelSolution:
     x_star: Any
     outer_values: Any      # (steps,) trace of outer loss
     hypergrad_norms: Any   # (steps,)
+    inner_info: Optional[OptInfo] = None   # last inner-solve diagnostics
 
 
-def make_implicit_inner(inner_solver: Callable,
-                        inner_objective: Optional[Callable] = None,
-                        fixed_point: Optional[Callable] = None,
-                        solve: str = "cg", tol: float = 1e-6,
-                        maxiter: int = 1000, ridge: float = 0.0) -> Callable:
-    """Wrap ``inner_solver(init, theta) -> x*`` with implicit derivatives.
+def _make_inner_runner(inner_solver, inner_objective, fixed_point, solve,
+                       tol, maxiter, ridge, precond) -> Callable:
+    """``fn(init, theta) -> (x_star, OptInfo | None)``, implicit-diff'd.
 
-    Provide either ``inner_objective`` (stationarity condition used) or an
-    explicit ``fixed_point`` mapping T(x, theta).
+    ``None`` routing arguments mean "not specified": an ``IterativeSolver``
+    keeps its own configured backward-solve routing for them (never
+    silently clobbered by driver defaults); the bare-callable path falls
+    back to the historical defaults (cg / 1e-6 / 1000 / 0.0).
     """
+    if isinstance(inner_solver, IterativeSolver):
+        if inner_objective is not None or fixed_point is not None:
+            raise ValueError(
+                "an IterativeSolver declares its own optimality mapping; "
+                "drop inner_objective/fixed_point")
+        overrides = {k: v for k, v in [("solve", solve),
+                                       ("linsolve_tol", tol),
+                                       ("linsolve_maxiter", maxiter),
+                                       ("ridge", ridge),
+                                       ("precond", precond)]
+                     if v is not None}
+        solver = dataclasses.replace(inner_solver, implicit_diff=True,
+                                     **overrides)
+        return solver.run
+    solve = "cg" if solve is None else solve
+    tol = 1e-6 if tol is None else tol
+    maxiter = 1000 if maxiter is None else maxiter
+    ridge = 0.0 if ridge is None else ridge
     if (inner_objective is None) == (fixed_point is None):
         raise ValueError("provide exactly one of inner_objective/fixed_point")
     if inner_objective is not None:
         F = optimality.stationary(inner_objective)
         deco = implicit_diff.custom_root(F, solve=solve, tol=tol,
-                                         maxiter=maxiter, ridge=ridge)
+                                         maxiter=maxiter, ridge=ridge,
+                                         precond=precond)
     else:
         deco = implicit_diff.custom_fixed_point(fixed_point, solve=solve,
                                                 tol=tol, maxiter=maxiter,
-                                                ridge=ridge)
-    return deco(inner_solver)
+                                                ridge=ridge, precond=precond)
+    wrapped = deco(inner_solver)
+    return lambda init, *theta: (wrapped(init, *theta), None)
 
 
-def solve_bilevel(outer_loss: Callable, inner_solver: Callable, theta0,
+def make_implicit_inner(inner_solver: Union[Callable, IterativeSolver],
+                        inner_objective: Optional[Callable] = None,
+                        fixed_point: Optional[Callable] = None,
+                        solve: Optional[str] = None,
+                        tol: Optional[float] = None,
+                        maxiter: Optional[int] = None,
+                        ridge: Optional[float] = None,
+                        precond=None) -> Callable:
+    """Return ``fn(init, theta) -> x_star`` with implicit derivatives.
+
+    An ``IterativeSolver`` already knows its optimality mapping AND its
+    backward-solve routing; only the routing arguments you pass explicitly
+    override it.  For a bare callable ``inner_solver(init, theta) -> x*``,
+    provide exactly one of ``inner_objective`` (stationarity condition
+    used) or an explicit ``fixed_point`` mapping T(x, theta); unspecified
+    routing arguments default to cg / 1e-6 / 1000 / 0.0.
+    """
+    runner = _make_inner_runner(inner_solver, inner_objective, fixed_point,
+                                solve, tol, maxiter, ridge, precond)
+    return lambda init, *theta: runner(init, *theta)[0]
+
+
+def solve_bilevel(outer_loss: Callable,
+                  inner_solver: Union[Callable, IterativeSolver], theta0,
                   x_init, *, inner_objective: Optional[Callable] = None,
                   fixed_point: Optional[Callable] = None,
                   outer_steps: int = 100, outer_lr: float = 1e-2,
-                  momentum: float = 0.9, solve: str = "cg",
-                  inner_tol: float = 1e-6, linsolve_maxiter: int = 1000,
-                  ridge: float = 0.0, warm_start: bool = True,
+                  momentum: float = 0.9, solve: Optional[str] = None,
+                  inner_tol: Optional[float] = None,
+                  linsolve_maxiter: Optional[int] = None,
+                  ridge: Optional[float] = None, precond=None,
+                  warm_start: bool = True,
                   jit: bool = True) -> BilevelSolution:
     """Gradient descent (w/ momentum) on the outer problem.
 
     ``outer_loss(x_star, theta) -> scalar``;
-    ``inner_solver(x_init, theta) -> x_star``.
+    ``inner_solver`` is an ``IterativeSolver`` (preferred: its ``run()``
+    carries implicit derivatives and ``OptInfo`` automatically) or a bare
+    callable ``inner_solver(x_init, theta) -> x_star`` plus
+    ``inner_objective`` / ``fixed_point``.
+    ``solve`` / ``inner_tol`` / ``linsolve_maxiter`` / ``ridge`` /
+    ``precond`` route the backward linear solve; left ``None``, an
+    ``IterativeSolver`` keeps its own configuration while the callable
+    path uses cg / 1e-6 / 1000 / 0.0.
     ``warm_start`` reuses the previous inner solution as init (the standard
     trick that makes the inner solves cheap along the outer trajectory).
     """
-    implicit_solver = make_implicit_inner(
-        inner_solver, inner_objective=inner_objective,
-        fixed_point=fixed_point, solve=solve, tol=inner_tol,
-        maxiter=linsolve_maxiter, ridge=ridge)
+    implicit_solver = _make_inner_runner(
+        inner_solver, inner_objective, fixed_point, solve, inner_tol,
+        linsolve_maxiter, ridge, precond)
 
     def outer_value_and_grad(theta, x_init):
         def obj(theta):
-            x_star = implicit_solver(x_init, theta)
-            return outer_loss(x_star, theta), x_star
-        (val, x_star), g = jax.value_and_grad(obj, has_aux=True)(theta)
-        return val, g, x_star
+            x_star, info = implicit_solver(x_init, theta)
+            return outer_loss(x_star, theta), (x_star, info)
+        (val, (x_star, info)), g = jax.value_and_grad(
+            obj, has_aux=True)(theta)
+        return val, g, x_star, info
 
     if jit:
         outer_value_and_grad = jax.jit(outer_value_and_grad)
@@ -84,8 +144,9 @@ def solve_bilevel(outer_loss: Callable, inner_solver: Callable, theta0,
     vel = jax.tree_util.tree_map(jnp.zeros_like, theta)
     xs = x_init
     vals, gnorms = [], []
+    x_star, info = x_init, None   # survive outer_steps=0
     for _ in range(outer_steps):
-        val, g, x_star = outer_value_and_grad(theta, xs)
+        val, g, x_star, info = outer_value_and_grad(theta, xs)
         vel = jax.tree_util.tree_map(
             lambda v, gi: momentum * v + gi, vel, g)
         theta = jax.tree_util.tree_map(
@@ -97,7 +158,8 @@ def solve_bilevel(outer_loss: Callable, inner_solver: Callable, theta0,
             jnp.vdot(x, x).real for x in jax.tree_util.tree_leaves(g)))))
     return BilevelSolution(theta=theta, x_star=x_star,
                            outer_values=jnp.asarray(vals),
-                           hypergrad_norms=jnp.asarray(gnorms))
+                           hypergrad_norms=jnp.asarray(gnorms),
+                           inner_info=info)
 
 
 # ---------------------------------------------------------------------------

@@ -15,6 +15,13 @@ Public API (mirrors the paper):
                                        to an arbitrary solver function
   * ``@custom_fixed_point(T)``       — same, for fixed points x* = T(x*, θ)
 
+Most users never call the decorators directly anymore: the state-based
+runtime (``repro.core.solver_runtime``) self-wraps each solver's ``run()``
+with ``custom_root`` on the solver's declared optimality mapping, so
+implicit derivatives and the registry-routed backward solve (``solve=``,
+``precond=``, ``ridge=``) come for free.  The decorators remain the
+low-level composition point for hand-written solvers.
+
 Conventions: the decorated solver has signature ``solver(init, *theta)`` and
 returns ``x*``.  ``F`` has signature ``F(x, *theta)`` returning a pytree of the
 same structure as ``x``.  ``theta`` may be any number of pytree arguments;

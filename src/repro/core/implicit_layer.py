@@ -1,50 +1,63 @@
 """DEQ-style implicit (fixed-point) layers with implicit-diff backward.
 
 A deep-equilibrium block solves z* = f(z*, x; w) in the forward pass and
-backpropagates through the equilibrium with the paper's machinery
-(``custom_fixed_point``), so memory is O(1) in solver depth — the property
-that makes implicit layers attractive inside large sharded models.
+backpropagates through the equilibrium with the paper's machinery, so memory
+is O(1) in solver depth — the property that makes implicit layers attractive
+inside large sharded models.
 
-The layer is model-agnostic: ``cell(z, x, w) -> z`` may be any JAX function
-(e.g. a transformer block); the solver is Anderson acceleration or plain
-iteration, and the backward linear solve is Neumann (cheap, approximate) or
-normal-CG (exact) — selectable, mirroring the trade-offs in the implicit-deep-
-nets literature the paper cites [8, 43, 44].
+The layer rides the state-based solver runtime: the forward solve is an
+``AndersonAcceleration`` or ``FixedPointIteration`` ``run()`` (one masked
+``lax.while_loop``; ``jax.vmap`` over a batch of layer inputs executes ONE
+batched solve), and implicit differentiation is automatic — the solver
+declares the fixed-point mapping and routes its backward linear solve
+through the ``SolverSpec`` registry: Neumann (cheap, approximate) or
+normal-CG (exact), mirroring the trade-offs in the implicit-deep-nets
+literature the paper cites [8, 43, 44].
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
-import jax
 import jax.numpy as jnp
 
-from repro.core import implicit_diff, solvers
+from repro.core.solver_runtime import (AndersonAcceleration,
+                                       FixedPointIteration)
+
+
+def make_deq_solver(cell: Callable, *, fwd_solver: str = "anderson",
+                    fwd_iters: int = 30, fwd_tol: float = 1e-5,
+                    bwd_solve: str = "neumann", bwd_iters: int = 12,
+                    ridge: float = 0.0, precond=None):
+    """Build the runtime solver for z* = cell(z*, x, w).
+
+    Returns an ``IterativeSolver`` whose ``run(z0, x, w)`` yields
+    ``(z_star, OptInfo)`` with gradients flowing to ``x`` and ``w``.
+    """
+    kw = dict(maxiter=fwd_iters, tol=fwd_tol, solve=bwd_solve,
+              linsolve_maxiter=bwd_iters, ridge=ridge, precond=precond)
+    if fwd_solver == "anderson":
+        return AndersonAcceleration(cell, **kw)
+    if fwd_solver == "iteration":
+        return FixedPointIteration(cell, **kw)
+    raise ValueError(f"unknown fwd_solver {fwd_solver!r}; "
+                     "expected 'anderson' or 'iteration'")
 
 
 def deq_fixed_point(cell: Callable, z_init, x, w, *,
                     fwd_solver: str = "anderson", fwd_iters: int = 30,
                     fwd_tol: float = 1e-5, bwd_solve: str = "neumann",
-                    bwd_iters: int = 12):
+                    bwd_iters: int = 12, return_info: bool = False):
     """Solve z* = cell(z*, x, w) and register implicit derivatives wrt x, w.
 
-    Returns z*.  Gradients flow to both ``x`` (previous activations) and
-    ``w`` (the block's weights); ``z_init`` gets zero gradient.
+    Returns z* (and the solve's ``OptInfo`` when ``return_info=True``).
+    Gradients flow to both ``x`` (previous activations) and ``w`` (the
+    block's weights); ``z_init`` gets zero gradient.
     """
-
-    def T(z, x, w):
-        return cell(z, x, w)
-
-    def solver(z0, x, w):
-        if fwd_solver == "anderson":
-            return solvers.anderson_acceleration(
-                T, z0, x, w, maxiter=fwd_iters, tol=fwd_tol)
-        return solvers.fixed_point_iteration(
-            T, z0, x, w, maxiter=fwd_iters, tol=fwd_tol)
-
-    wrapped = implicit_diff.custom_fixed_point(
-        T, solve=bwd_solve, maxiter=bwd_iters)(solver)
-    return wrapped(z_init, x, w)
+    solver = make_deq_solver(cell, fwd_solver=fwd_solver,
+                             fwd_iters=fwd_iters, fwd_tol=fwd_tol,
+                             bwd_solve=bwd_solve, bwd_iters=bwd_iters)
+    z_star, info = solver.run(z_init, x, w)
+    return (z_star, info) if return_info else z_star
 
 
 def make_deq_block(cell: Callable, **kw) -> Callable:

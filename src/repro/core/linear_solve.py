@@ -13,6 +13,8 @@ Registry (``SolverSpec``; see ``available_solvers()``):
                     needs ``rmatvec`` or builds it via linear transpose)
   * ``bicgstab``  — BiCGSTAB (general square A)
   * ``gmres``     — restarted GMRES (general square A; left-preconditioned)
+  * ``dense_gmres`` — batched GMRES on materialized per-instance operators
+                    (the nonsymmetric dense small-system regime, d ≤ 512)
   * ``lu``        — dense direct solve (materializes A; small systems)
   * ``neumann``   — truncated Neumann series for I - M with ||M|| < 1
                     (the "Jacobian-free"/unrolled-free approximation)
@@ -206,13 +208,18 @@ def diagonal_of_matvec(matvec: Callable, b, batch_ndim: int = 0):
     return view.to_tree(diag)
 
 
-def _resolve_precond(precond, matvec, b, batch_ndim: int):
-    """None | callable | "jacobi" -> callable M⁻¹ (or None)."""
+def _resolve_precond(precond, matvec, b, batch_ndim: int, diag=None):
+    """None | callable | "jacobi" -> callable M⁻¹ (or None).
+
+    ``diag`` short-circuits the operator probing for ``"jacobi"`` when the
+    caller already holds the diagonal (e.g. off a materialized operator).
+    """
     if precond is None or callable(precond):
         return precond
     if precond == "jacobi":
-        return jacobi_preconditioner(
-            diagonal_of_matvec(matvec, b, batch_ndim))
+        if diag is None:
+            diag = diagonal_of_matvec(matvec, b, batch_ndim)
+        return jacobi_preconditioner(diag)
     raise ValueError(f"unknown preconditioner {precond!r}; "
                      "expected None, a callable M⁻¹, or 'jacobi'")
 
@@ -235,6 +242,13 @@ class SolveInfo(NamedTuple):
 
 def _maybe_info(x, info: Optional[SolveInfo], return_info: bool):
     return (x, info) if return_info else x
+
+
+def _squeeze_info(info: SolveInfo) -> SolveInfo:
+    """Collapse the internal B=1 batch axis for unbatched calls — the one
+    place the flat-core solvers' per-instance diagnostics lose their
+    synthetic leading axis."""
+    return SolveInfo(*(jnp.asarray(leaf).reshape(-1)[0] for leaf in info))
 
 
 # ---------------------------------------------------------------------------
@@ -409,41 +423,30 @@ def solve_bicgstab(matvec: Callable, b, *, init=None, tol: float = 1e-6,
 # GMRES (restarted; flat (B, d) core, masked restarts)
 # ---------------------------------------------------------------------------
 
-def solve_gmres(matvec: Callable, b, *, init=None, tol: float = 1e-6,
-                restart: int = 20, maxiter: int = 1000, ridge: float = 0.0,
-                precond=None, return_info: bool = False, batch_ndim: int = 0):
-    """Restarted GMRES.  Flattens instances to run batched Arnoldi cycles.
+def _flat_init(init, b_flat, batch_ndim: int):
+    """Flatten an init pytree to the (B, d) layout (zeros when None)."""
+    if init is None:
+        return jnp.zeros_like(b_flat)
+    if batch_ndim == 0:
+        return jax.flatten_util.ravel_pytree(init)[0][None]
+    return jax.vmap(lambda t: jax.flatten_util.ravel_pytree(t)[0])(init)
 
-    ``maxiter`` is the total matvec budget, like the other iterative
-    solvers; the cycle cap is ``ceil(maxiter / restart)`` (so the uniform
-    engine default of 1000 means ~50 restart cycles, not 1000).
-    ``precond`` applies as a left preconditioner; the loop iterates on the
-    preconditioned residual, but ``SolveInfo`` always reports the TRUE
-    residual.  Converged instances skip further cycles via per-instance
-    masks.
+
+def _gmres_flat(mv: Callable, b_flat, x0, *, tol: float, restart: int,
+                maxiter: int):
+    """Shared restarted-GMRES core on the flat (B, d) layout.
+
+    Runs batched Arnoldi cycles in one masked while_loop; returns
+    ``(x, rn, it, atol)`` with per-instance residuals/iteration counts.
+    ``maxiter`` is the total matvec budget; the cycle cap is
+    ``ceil(maxiter / restart)``.
     """
-    matvec = _damped(matvec, ridge)
-    matvec0, b0 = matvec, b
-    M = _resolve_precond(precond, matvec, b, batch_ndim)
-    if M is not None:
-        inner = matvec
-        matvec = lambda v: M(inner(v))
-        b = M(b)
-
-    view = _flat_view(matvec, b, batch_ndim)
-    mv, b_flat = view.mv, view.b
     B, d = b_flat.shape
     m = min(restart, d)
     max_cycles = max(1, -(-maxiter // m))       # ceil: total matvec budget
 
     b_norm = jnp.linalg.norm(b_flat, axis=-1)                    # (B,)
     atol = jnp.maximum(tol * b_norm, 1e-30)
-    if init is None:
-        x0 = jnp.zeros_like(b_flat)
-    elif batch_ndim == 0:
-        x0 = jax.flatten_util.ravel_pytree(init)[0][None]
-    else:
-        x0 = jax.vmap(lambda t: jax.flatten_util.ravel_pytree(t)[0])(init)
 
     def arnoldi_cycle(x):
         r = b_flat - mv(x)                                       # (B, d)
@@ -497,6 +500,34 @@ def solve_gmres(matvec: Callable, b, *, init=None, tol: float = 1e-6,
 
     x, rn, it, _, done = lax.while_loop(cond, body,
                                         (x0, rn0, it0, 0, done0))
+    return x, rn, it, atol
+
+
+def solve_gmres(matvec: Callable, b, *, init=None, tol: float = 1e-6,
+                restart: int = 20, maxiter: int = 1000, ridge: float = 0.0,
+                precond=None, return_info: bool = False, batch_ndim: int = 0):
+    """Restarted GMRES.  Flattens instances to run batched Arnoldi cycles.
+
+    ``maxiter`` is the total matvec budget, like the other iterative
+    solvers; the cycle cap is ``ceil(maxiter / restart)`` (so the uniform
+    engine default of 1000 means ~50 restart cycles, not 1000).
+    ``precond`` applies as a left preconditioner; the loop iterates on the
+    preconditioned residual, but ``SolveInfo`` always reports the TRUE
+    residual.  Converged instances skip further cycles via per-instance
+    masks.
+    """
+    matvec = _damped(matvec, ridge)
+    matvec0, b0 = matvec, b
+    M = _resolve_precond(precond, matvec, b, batch_ndim)
+    if M is not None:
+        inner = matvec
+        matvec = lambda v: M(inner(v))
+        b = M(b)
+
+    view = _flat_view(matvec, b, batch_ndim)
+    x0 = _flat_init(init, view.b, batch_ndim)
+    x, rn, it, atol = _gmres_flat(view.mv, view.b, x0, tol=tol,
+                                  restart=restart, maxiter=maxiter)
     x_tree = view.to_tree(x)
     if not return_info:
         return x_tree
@@ -506,7 +537,67 @@ def solve_gmres(matvec: Callable, b, *, init=None, tol: float = 1e-6,
         cutoff = jnp.maximum(tol * _tree_l2(b0, batch_ndim), 1e-30)
     info = SolveInfo(iterations=it, residual=rn, converged=rn <= cutoff)
     if batch_ndim == 0:
-        info = SolveInfo(*(jnp.asarray(leaf).reshape(-1)[0] for leaf in info))
+        info = _squeeze_info(info)
+    return x_tree, info
+
+
+def solve_dense_gmres(matvec: Callable, b, *, init=None, tol: float = 1e-6,
+                      restart: int = 20, maxiter: int = 1000,
+                      ridge: float = 0.0, precond=None,
+                      return_info: bool = False, batch_ndim: int = 0):
+    """Batched preconditioned GMRES for the nonsymmetric *dense* regime.
+
+    The nonsymmetric sibling of ``pallas_cg``'s regime: materializes the
+    per-instance operators once (d probing matvecs for the whole batch,
+    d ≤ ``MAX_DENSE_DIM``) and then runs the shared restarted-Arnoldi core
+    with each matvec as one batched (B, d, d) × (B, d) contraction — no
+    re-tracing of the user's matvec closure inside the cycles.  ``"jacobi"``
+    preconditioning reads the diagonal straight off the materialized
+    operator (no extra probing); a callable ``precond`` is applied on the
+    flat (instance-shaped) vectors as a left preconditioner.  ``SolveInfo``
+    always reports the TRUE residual.
+    """
+    matvec = _damped(matvec, ridge)
+    view = _flat_view(matvec, b, batch_ndim)
+    d = view.b.shape[-1]
+    if d > MAX_DENSE_DIM:   # guard BEFORE the d-matvec dense materialization
+        raise ValueError(
+            f"dense_gmres materializes dense systems; d={d} exceeds "
+            f"MAX_DENSE_DIM={MAX_DENSE_DIM} — use method='gmres' instead")
+    A, _ = materialize_batched(matvec, b, batch_ndim, view=view)
+
+    def dense_mv(vf):                                   # (B, d) -> (B, d)
+        return jnp.einsum("bij,bj->bi", A, vf)
+
+    # "jacobi" reads the diagonal straight off the materialized operator
+    # (no extra probing); validation and the safe-diagonal threshold live
+    # in _resolve_precond/jacobi_preconditioner, shared with all solvers.
+    M_tree = _resolve_precond(
+        precond, matvec, b, batch_ndim,
+        diag=view.to_tree(jnp.diagonal(A, axis1=-2, axis2=-1)))
+    if M_tree is None:
+        M_flat = None
+    else:
+        flat1 = lambda t: jax.flatten_util.ravel_pytree(t)[0]
+        if view.batched:
+            M_flat = lambda vf: jax.vmap(flat1)(M_tree(view.to_tree(vf)))
+        else:
+            M_flat = lambda vf: flat1(M_tree(view.to_tree(vf)))[None]
+
+    mv = dense_mv if M_flat is None else (lambda vf: M_flat(dense_mv(vf)))
+    b_flat = view.b if M_flat is None else M_flat(view.b)
+    x0 = _flat_init(init, view.b, batch_ndim)
+    x, rn, it, atol = _gmres_flat(mv, b_flat, x0, tol=tol, restart=restart,
+                                  maxiter=maxiter)
+    x_tree = view.to_tree(x)
+    if not return_info:
+        return x_tree
+    if M_flat is not None:   # report the true residual, not M(b - A x)
+        rn = jnp.linalg.norm(view.b - dense_mv(x), axis=-1)
+        atol = jnp.maximum(tol * jnp.linalg.norm(view.b, axis=-1), 1e-30)
+    info = SolveInfo(iterations=it, residual=rn, converged=rn <= atol)
+    if batch_ndim == 0:
+        info = _squeeze_info(info)
     return x_tree, info
 
 
@@ -529,7 +620,7 @@ def solve_lu(matvec: Callable, b, *, init=None, tol: float = 1e-6,
         # rn <= atol is False for NaN residuals (singular A) — reported honestly
         info = SolveInfo(iterations=it, residual=rn, converged=rn <= atol)
         if batch_ndim == 0:
-            info = SolveInfo(*(leaf[0] for leaf in info))
+            info = _squeeze_info(info)
         return view.to_tree(x), info
     return view.to_tree(x)
 
@@ -622,7 +713,7 @@ def solve_pallas_cg(matvec: Callable, b, *, init=None, tol: float = 1e-6,
         info = SolveInfo(iterations=jnp.full_like(rn, -1, dtype=jnp.int32),
                          residual=rn, converged=rn <= atol)
         if batch_ndim == 0:
-            info = SolveInfo(*(leaf[0] for leaf in info))
+            info = _squeeze_info(info)
         return view.to_tree(x), info
     return view.to_tree(x)
 
@@ -679,6 +770,10 @@ register_solver("bicgstab", solve_bicgstab, supports_precond=True,
                 description="BiCGSTAB (general square A)")
 register_solver("gmres", solve_gmres, supports_precond=True,
                 description="restarted GMRES (general square A)")
+register_solver("dense_gmres", solve_dense_gmres, supports_precond=True,
+                matrix_free=False,
+                description="batched dense GMRES (materializes A; "
+                            "nonsymmetric, d<=512)")
 register_solver("lu", solve_lu, matrix_free=False,
                 description="dense direct solve (materializes A)")
 register_solver("neumann", solve_neumann,

@@ -1,0 +1,601 @@
+"""Unified state-based solver runtime with automatic implicit differentiation.
+
+The paper's core claim is modularity: *any* solver plus *any* optimality
+mapping F yields automatic implicit derivatives.  This module makes the solver
+layer itself the modular unit:
+
+  * ``IterativeSolver`` protocol — ``init_state(params, *theta) -> state``,
+    ``update(params, state, *theta) -> (params, state)``, plus a declared
+    optimality mapping (``optimality_fun`` for root form, ``fixed_point_fun``
+    for fixed-point form, both drawn from ``repro.core.optimality``).
+  * a shared jit/vmap-safe ``run()`` driver: ONE ``lax.while_loop`` with
+    per-instance convergence masks (like the PR-1 linear-solve engine), so
+    ``jax.vmap`` of a whole inner *solve* runs as one batched masked loop —
+    converged instances freeze while stragglers iterate.
+  * ``OptInfo`` diagnostics mirroring ``SolveInfo``: per-instance iteration
+    counts, final error, and an honest NaN-aware ``converged`` flag
+    (``error <= tol`` is False for NaN — a diverged solve never reports
+    success).
+  * automatic implicit differentiation: ``run()`` self-wraps with
+    ``custom_root`` on the solver's optimality mapping, routing the backward
+    solve through the linear-solve ``SolverSpec`` registry (``solve=``,
+    ``precond=``, ``ridge=`` flow end-to-end).  A ``jax.vmap`` of the
+    gradient therefore dispatches ONE batched masked backward solve.
+
+Solvers: ``GradientDescent``, ``ProximalGradient`` (FISTA momentum opt-out),
+``ProjectedGradient``, ``MirrorDescent``, ``BlockCoordinateDescent``,
+``Newton``, ``LBFGS``, ``FixedPointIteration``, ``AndersonAcceleration``.
+
+The old functional factories in ``repro.core.solvers`` remain as thin
+deprecation shims over these classes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Union
+
+import jax
+import jax.flatten_util
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import implicit_diff, optimality
+# tree math shared with the linear-solve engine (instance-shaped: the
+# runtime never carries an explicit batch axis — vmap supplies it)
+from repro.core.linear_solve import _tree_l2, _tree_sub
+
+
+# ---------------------------------------------------------------------------
+# pytree helpers
+# ---------------------------------------------------------------------------
+
+def _tree_axpy(x, g, alpha):
+    """x + alpha * g, leaf-wise (alpha a per-instance scalar)."""
+    return jax.tree_util.tree_map(lambda xi, gi: xi + alpha * gi, x, g)
+
+
+def _tree_where(done, old, new):
+    """Freeze converged instances: where(done, old, new) leaf-wise.
+
+    ``done`` is a per-instance boolean scalar (batched under ``jax.vmap``),
+    which broadcasts against every leaf.
+    """
+    return jax.tree_util.tree_map(
+        lambda o, n: jnp.where(done, o, n), old, new)
+
+
+def _inf_like(params):
+    """An +inf error scalar with the dtype ``_tree_l2(params)`` will have,
+    so the while_loop carry dtype is stable from the first iteration."""
+    return jnp.full((), jnp.inf, dtype=_tree_l2(params).dtype)
+
+
+# ---------------------------------------------------------------------------
+# diagnostics
+# ---------------------------------------------------------------------------
+
+class OptInfo(NamedTuple):
+    """Per-instance solve diagnostics (batch-shaped under ``jax.vmap``).
+
+    Mirrors ``linear_solve.SolveInfo``: ``converged`` is ``error <= tol``,
+    which is False for NaN errors — a diverged/NaN run is never reported as
+    converged (honest-convergence semantics).
+    """
+    iterations: jnp.ndarray    # update() steps actually spent per instance
+    error: jnp.ndarray         # solver-specific final error per instance
+    converged: jnp.ndarray     # error <= tol per instance (NaN-aware False)
+
+
+# ---------------------------------------------------------------------------
+# the protocol + shared run() driver
+# ---------------------------------------------------------------------------
+
+def _kw(default):
+    return dataclasses.field(default=default, kw_only=True)
+
+
+@dataclasses.dataclass(eq=False)
+class IterativeSolver:
+    """State-based iterative solver protocol with a shared masked driver.
+
+    Subclasses implement
+      * ``init_state(params, *theta) -> state`` — a NamedTuple whose first
+        two fields are ``iter_num`` (int scalar) and ``error`` (float
+        scalar, ``inf`` initially);
+      * ``update(params, state, *theta) -> (params, state)`` — one step;
+      * the optimality mapping: either override ``optimality_fun`` (root
+        form, eq. 4/6) or provide ``fixed_point_fun`` (eq. 3: the residual
+        ``T(x) - x`` is derived automatically) — as a method or, for
+        wrapper solvers, a dataclass field holding the user's ``T``.
+
+    ``run(init_params, *theta) -> (params, OptInfo)`` then drives the solve
+    in one ``lax.while_loop`` with per-instance convergence masks and, when
+    ``implicit_diff=True`` (default), attaches implicit derivatives via
+    ``custom_root`` on the declared optimality mapping.  The backward linear
+    solve goes through the ``SolverSpec`` registry: ``solve`` names the
+    registry solver (or is a callable), and ``precond`` / ``ridge`` /
+    ``linsolve_tol`` / ``linsolve_maxiter`` are forwarded to it.
+    """
+    maxiter: int = _kw(1000)
+    tol: float = _kw(1e-8)
+    implicit_diff: bool = _kw(True)
+    solve: Union[str, Callable] = _kw("normal_cg")
+    linsolve_tol: float = _kw(1e-6)
+    linsolve_maxiter: int = _kw(1000)
+    ridge: float = _kw(0.0)
+    precond: Any = _kw(None)
+
+    # -- protocol ----------------------------------------------------------
+    def init_state(self, params, *theta):
+        raise NotImplementedError
+
+    def update(self, params, state, *theta):
+        raise NotImplementedError
+
+    def optimality_fun(self, params, *theta):
+        """Root residual F(x, θ); default derives it from the fixed point."""
+        T = self.fixed_point_fun   # property/method, or a field holding T
+        return _tree_sub(T(params, *theta), params)
+
+    def fixed_point_fun(self, params, *theta):
+        # plain method (not a property) so wrapper solvers may shadow it
+        # with a dataclass field holding the user's T
+        raise NotImplementedError(
+            f"{type(self).__name__} declares neither optimality_fun nor "
+            "fixed_point_fun")
+
+    # -- shared driver -----------------------------------------------------
+    def _continuing(self, state):
+        """Per-instance 'still iterating' flag.  NaN error compares False
+        against tol on both sides, so a NaN instance stops immediately and
+        is reported unconverged."""
+        return jnp.logical_and(state.iter_num < self.maxiter,
+                               state.error > self.tol)
+
+    def _iterate(self, init_params, *theta):
+        """The raw masked loop: no implicit diff attached."""
+        state0 = self.init_state(init_params, *theta)
+
+        def cond(carry):
+            _, state = carry
+            return self._continuing(state)
+
+        def body(carry):
+            params, state = carry
+            done = jnp.logical_not(self._continuing(state))
+            new_params, new_state = self.update(params, state, *theta)
+            # freeze instances that were already done at loop entry (under
+            # vmap the loop runs until the last straggler; masked instances
+            # must hold their solo-run result exactly)
+            return (_tree_where(done, params, new_params),
+                    _tree_where(done, state, new_state))
+
+        params, state = lax.while_loop(cond, body, (init_params, state0))
+        info = OptInfo(iterations=state.iter_num, error=state.error,
+                       converged=state.error <= self.tol)
+        return params, info
+
+    def run(self, init_params, *theta):
+        """Solve from ``init_params``; returns ``(params, OptInfo)``.
+
+        Differentiable in every ``theta`` argument via implicit
+        differentiation of the declared optimality mapping (``init_params``
+        gets zero gradient; ``OptInfo`` is non-differentiable aux).
+        ``jax.vmap`` over ``run`` (or its gradient) batches the forward loop
+        AND the backward linear solve — each is one masked while_loop.
+        """
+        if not self.implicit_diff:
+            return self._iterate(init_params, *theta)
+        deco = implicit_diff.custom_root(
+            self.optimality_fun, solve=self.solve, tol=self.linsolve_tol,
+            maxiter=self.linsolve_maxiter, ridge=self.ridge,
+            precond=self.precond, has_aux=True)
+        return deco(self._iterate)(init_params, *theta)
+
+    def l2_optimality_error(self, params, *theta):
+        """‖F(x, θ)‖ — a solver-independent certificate of optimality."""
+        return _tree_l2(self.optimality_fun(params, *theta))
+
+
+# ---------------------------------------------------------------------------
+# Gradient descent (fixed step or backtracking line search)
+# ---------------------------------------------------------------------------
+
+class GradientDescentState(NamedTuple):
+    iter_num: jnp.ndarray
+    error: jnp.ndarray
+
+
+@dataclasses.dataclass(eq=False)
+class GradientDescent(IterativeSolver):
+    """min f(x, θ) by x ← x − η∇f; optimality = stationarity (eq. 4).
+
+    ``error`` is ``‖Δx‖`` for the fixed-step variant (matching the legacy
+    ``fixed_point_iteration`` semantics) and ``‖∇f‖`` with backtracking.
+    The backtracking inner loop is itself masked, so a vmapped solve keeps
+    per-instance step sizes.
+    """
+    fun: Callable = None
+    stepsize: float = 1e-2
+    linesearch: bool = False
+
+    def optimality_fun(self, params, *theta):
+        return jax.grad(self.fun, argnums=0)(params, *theta)
+
+    def init_state(self, params, *theta):
+        return GradientDescentState(jnp.asarray(0), _inf_like(params))
+
+    def update(self, params, state, *theta):
+        if not self.linesearch:
+            g = jax.grad(self.fun, argnums=0)(params, *theta)
+            new_params = _tree_axpy(params, g, -self.stepsize)
+            error = _tree_l2(_tree_sub(new_params, params))
+            return new_params, GradientDescentState(state.iter_num + 1, error)
+
+        v, g = jax.value_and_grad(self.fun, argnums=0)(params, *theta)
+        gnorm2 = sum(jnp.vdot(gi, gi).real
+                     for gi in jax.tree_util.tree_leaves(g))
+
+        def needs_shrink(eta):
+            x_try = _tree_axpy(params, g, -eta)
+            return jnp.logical_and(
+                self.fun(x_try, *theta) > v - 0.5 * eta * gnorm2,
+                eta > 1e-12)
+
+        # masked backtracking, one objective evaluation per halving: the
+        # carried shrink flag is the predicate, so instances whose Armijo
+        # test already passes hold their eta while stragglers keep halving
+        def ls_body(carry):
+            eta, shrink = carry
+            eta = jnp.where(shrink, 0.5 * eta, eta)
+            return eta, jnp.logical_and(shrink, needs_shrink(eta))
+
+        eta0 = jnp.asarray(self.stepsize)
+        eta, _ = lax.while_loop(lambda c: c[1], ls_body,
+                                (eta0, needs_shrink(eta0)))
+        new_params = _tree_axpy(params, g, -eta)
+        return new_params, GradientDescentState(state.iter_num + 1,
+                                                jnp.sqrt(gnorm2))
+
+
+# ---------------------------------------------------------------------------
+# Proximal gradient / FISTA (and projected gradient as a special case)
+# ---------------------------------------------------------------------------
+
+class ProximalGradientState(NamedTuple):
+    iter_num: jnp.ndarray
+    error: jnp.ndarray
+    z: Any                     # momentum iterate (= params when accel off)
+    t: jnp.ndarray             # FISTA momentum scalar
+
+
+@dataclasses.dataclass(eq=False)
+class ProximalGradient(IterativeSolver):
+    """min f(x, θf) + g(x, θg); run signature ``run(init, (θf, θg))``.
+
+    FISTA momentum is on by default (``accel=False`` gives plain ISTA).
+    Optimality mapping: the prox-grad fixed point (paper eq. 7).
+    """
+    fun: Callable = None
+    prox: Callable = None      # prox(y, theta_g, scaling) -> pytree
+    stepsize: float = 1e-2
+    accel: bool = True
+
+    @property
+    def fixed_point_fun(self):
+        return optimality.proximal_gradient_fp(self.fun, self.prox,
+                                               self.stepsize)
+
+    def _pg_step(self, x, theta):
+        theta_f, theta_g = theta
+        y = _tree_axpy(x, jax.grad(self.fun, argnums=0)(x, theta_f),
+                       -self.stepsize)
+        return self.prox(y, theta_g, self.stepsize)
+
+    def init_state(self, params, theta):
+        return ProximalGradientState(jnp.asarray(0), _inf_like(params),
+                                     z=params, t=jnp.asarray(1.0))
+
+    def update(self, params, state, theta):
+        if not self.accel:
+            new_params = self._pg_step(params, theta)
+            error = _tree_l2(_tree_sub(new_params, params))
+            return new_params, ProximalGradientState(
+                state.iter_num + 1, error, z=new_params, t=state.t)
+        new_params = self._pg_step(state.z, theta)
+        t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * state.t * state.t))
+        mom = (state.t - 1.0) / t_new
+        z_new = jax.tree_util.tree_map(
+            lambda a, b: a + mom * (a - b), new_params, params)
+        error = _tree_l2(_tree_sub(new_params, params))
+        return new_params, ProximalGradientState(state.iter_num + 1, error,
+                                                 z=z_new, t=t_new)
+
+
+def ProjectedGradient(fun: Callable, proj: Callable, **kw) -> ProximalGradient:
+    """Projected gradient = proximal gradient with an indicator prox
+    (paper eq. 9); run signature ``run(init, (θf, θproj))``."""
+    def prox(y, theta_proj, scaling):
+        del scaling
+        return proj(y, theta_proj)
+
+    return ProximalGradient(fun, prox, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Mirror descent (KL geometry default)
+# ---------------------------------------------------------------------------
+
+class MirrorDescentState(NamedTuple):
+    iter_num: jnp.ndarray
+    error: jnp.ndarray
+
+
+@dataclasses.dataclass(eq=False)
+class MirrorDescent(IterativeSolver):
+    """Mirror descent with Bregman projection; ``run(init, (θf, θproj))``.
+
+    Optimality mapping: the mirror-descent fixed point (paper eq. 13);
+    the η decay schedule only affects the forward iteration.
+    """
+    fun: Callable = None
+    proj_bregman: Callable = None          # proj(y, theta_proj) in dual space
+    phi_grad: Callable = optimality.kl_phi_grad
+    stepsize: float = 1.0
+    sqrt_decay_after: int = 100
+
+    @property
+    def fixed_point_fun(self):
+        return optimality.mirror_descent_fp(self.fun, self.proj_bregman,
+                                            self.phi_grad, self.stepsize)
+
+    def init_state(self, params, theta):
+        return MirrorDescentState(jnp.asarray(0), _inf_like(params))
+
+    def update(self, params, state, theta):
+        theta_f, theta_proj = theta
+        k = state.iter_num
+        eta = self.stepsize * jnp.where(
+            k < self.sqrt_decay_after, 1.0,
+            jnp.sqrt(self.sqrt_decay_after / jnp.maximum(k, 1)))
+        y = _tree_axpy(self.phi_grad(params),
+                       jax.grad(self.fun, argnums=0)(params, theta_f), -eta)
+        new_params = self.proj_bregman(y, theta_proj)
+        error = _tree_l2(_tree_sub(new_params, params))
+        return new_params, MirrorDescentState(state.iter_num + 1, error)
+
+
+# ---------------------------------------------------------------------------
+# Block coordinate descent (cyclic over rows)
+# ---------------------------------------------------------------------------
+
+class BlockCDState(NamedTuple):
+    iter_num: jnp.ndarray
+    error: jnp.ndarray
+
+
+@dataclasses.dataclass(eq=False)
+class BlockCoordinateDescent(IterativeSolver):
+    """Cyclic block CD; x has shape (m, k), blocks are rows;
+    ``run(init, (θf, θg))``.  One update = one Gauss-Seidel sweep; the
+    optimality mapping is the (Jacobi) row-wise prox fixed point — both
+    share the same fixed points (paper eq. 15)."""
+    fun: Callable = None
+    block_prox: Callable = None        # block_prox(row, theta_g, stepsize)
+    stepsize: float = 1.0
+
+    def fixed_point_fun(self, x, theta):
+        theta_f, theta_g = theta
+        y = x - self.stepsize * jax.grad(self.fun, argnums=0)(x, theta_f)
+        return jax.vmap(
+            lambda row: self.block_prox(row, theta_g, self.stepsize))(y)
+
+    def init_state(self, params, theta):
+        return BlockCDState(jnp.asarray(0), _inf_like(params))
+
+    def update(self, params, state, theta):
+        theta_f, theta_g = theta
+        grad = jax.grad(self.fun, argnums=0)
+
+        def row_update(x, i):
+            g = grad(x, theta_f)            # full grad; row i slice used
+            row = x[i] - self.stepsize * g[i]
+            x = x.at[i].set(self.block_prox(row, theta_g, self.stepsize))
+            return x, None
+
+        new_params, _ = lax.scan(row_update, params,
+                                 jnp.arange(params.shape[0]))
+        error = _tree_l2(new_params - params)
+        return new_params, BlockCDState(state.iter_num + 1, error)
+
+
+# ---------------------------------------------------------------------------
+# Newton's method (optimization)
+# ---------------------------------------------------------------------------
+
+class NewtonState(NamedTuple):
+    iter_num: jnp.ndarray
+    error: jnp.ndarray
+
+
+@dataclasses.dataclass(eq=False)
+class Newton(IterativeSolver):
+    """Damped Newton on a flat-array iterate; optimality = stationarity.
+
+    ``error`` is ‖∇f‖ at the pre-step iterate (the loop exits one step
+    after the gradient passes tol, like the legacy implementation)."""
+    fun: Callable = None
+    stepsize: float = 1.0
+
+    def optimality_fun(self, params, *theta):
+        return jax.grad(self.fun, argnums=0)(params, *theta)
+
+    def init_state(self, params, *theta):
+        return NewtonState(jnp.asarray(0), _inf_like(params))
+
+    def update(self, params, state, *theta):
+        g = jax.grad(self.fun, argnums=0)(params, *theta)
+        H = jax.hessian(self.fun, argnums=0)(params, *theta)
+        new_params = params - self.stepsize * jnp.linalg.solve(H, g)
+        return new_params, NewtonState(state.iter_num + 1, _tree_l2(g))
+
+
+# ---------------------------------------------------------------------------
+# L-BFGS (two-loop recursion, fixed step)
+# ---------------------------------------------------------------------------
+
+class LbfgsState(NamedTuple):
+    iter_num: jnp.ndarray
+    error: jnp.ndarray
+    S: jnp.ndarray             # (history, d) step differences
+    Y: jnp.ndarray             # (history, d) gradient differences
+    rho: jnp.ndarray           # (history,)
+
+
+@dataclasses.dataclass(eq=False)
+class LBFGS(IterativeSolver):
+    """L-BFGS with fixed step on the raveled iterate; optimality =
+    stationarity.  ``error`` is ‖∇f‖ at the post-step iterate."""
+    fun: Callable = None
+    history: int = 10
+    stepsize: float = 1.0
+
+    def optimality_fun(self, params, *theta):
+        return jax.grad(self.fun, argnums=0)(params, *theta)
+
+    def init_state(self, params, *theta):
+        x0, _ = jax.flatten_util.ravel_pytree(params)
+        d, m = x0.shape[0], self.history
+        return LbfgsState(jnp.asarray(0), _inf_like(params),
+                          S=jnp.zeros((m, d), x0.dtype),
+                          Y=jnp.zeros((m, d), x0.dtype),
+                          rho=jnp.zeros((m,), x0.dtype))
+
+    def update(self, params, state, *theta):
+        x, unravel = jax.flatten_util.ravel_pytree(params)
+        grad = jax.grad(lambda v: self.fun(unravel(v), *theta))
+        S, Y, rho, k = state.S, state.Y, state.rho, state.iter_num
+        m = self.history
+
+        def two_loop(g):
+            n = jnp.minimum(k, m)
+            q = g
+            alphas = jnp.zeros((m,), x.dtype)
+
+            def bwd(i, qa):
+                q, alphas = qa
+                j = (k - 1 - i) % m
+                valid = i < n
+                a = jnp.where(valid, rho[j] * jnp.dot(S[j], q), 0.0)
+                q = q - a * Y[j] * valid
+                alphas = alphas.at[j].set(a)
+                return q, alphas
+
+            q, alphas = lax.fori_loop(0, m, bwd, (q, alphas))
+            j_last = (k - 1) % m
+            ys = jnp.dot(S[j_last], Y[j_last])
+            yy = jnp.dot(Y[j_last], Y[j_last])
+            gamma = jnp.where(jnp.logical_and(k > 0, yy > 0), ys / yy, 1.0)
+            r = gamma * q
+
+            def fwd(i, r):
+                j = (k - n + i) % m
+                valid = i < n
+                b = jnp.where(valid, rho[j] * jnp.dot(Y[j], r), 0.0)
+                return r + (alphas[j] - b) * S[j] * valid
+
+            return lax.fori_loop(0, m, fwd, r)
+
+        g = grad(x)
+        p = two_loop(g)
+        x_new = x - self.stepsize * p
+        g_new = grad(x_new)
+        s, y = x_new - x, g_new - g
+        sy = jnp.dot(s, y)
+        slot = k % m
+        ok = sy > 1e-10
+        S = S.at[slot].set(jnp.where(ok, s, S[slot]))
+        Y = Y.at[slot].set(jnp.where(ok, y, Y[slot]))
+        rho = rho.at[slot].set(jnp.where(ok, 1.0 / jnp.where(ok, sy, 1.0),
+                                         rho[slot]))
+        new_state = LbfgsState(k + 1, jnp.linalg.norm(g_new), S=S, Y=Y,
+                               rho=rho)
+        return unravel(x_new), new_state
+
+
+# ---------------------------------------------------------------------------
+# Fixed-point iteration + Anderson acceleration
+# ---------------------------------------------------------------------------
+
+class FixedPointState(NamedTuple):
+    iter_num: jnp.ndarray
+    error: jnp.ndarray
+
+
+@dataclasses.dataclass(eq=False)
+class FixedPointIteration(IterativeSolver):
+    """x ← T(x, θ) until ‖T(x) − x‖ ≤ tol; implicit diff via eq. (3)."""
+    fixed_point_fun: Callable = None     # T(x, *theta)
+
+    def init_state(self, params, *theta):
+        return FixedPointState(jnp.asarray(0), _inf_like(params))
+
+    def update(self, params, state, *theta):
+        new_params = self.fixed_point_fun(params, *theta)
+        error = _tree_l2(_tree_sub(new_params, params))
+        return new_params, FixedPointState(state.iter_num + 1, error)
+
+
+class AndersonState(NamedTuple):
+    iter_num: jnp.ndarray
+    error: jnp.ndarray
+    X: jnp.ndarray             # (history, d) iterate history (raveled)
+    F: jnp.ndarray             # (history, d) residual history g(x) = T(x) − x
+
+
+@dataclasses.dataclass(eq=False)
+class AndersonAcceleration(IterativeSolver):
+    """Type-II Anderson acceleration of x = T(x, θ) on the raveled iterate.
+
+    ``aa_ridge`` regularizes the least-squares mixing system (distinct from
+    the inherited ``ridge``, which damps the *backward* linear solve).
+    ``error`` is the residual ‖T(x) − x‖ at the pre-mixing iterate.
+    """
+    fixed_point_fun: Callable = None     # T(x, *theta)
+    history: int = 5
+    aa_ridge: float = 1e-8
+    beta: float = 1.0
+
+    def init_state(self, params, *theta):
+        x0, _ = jax.flatten_util.ravel_pytree(params)
+        d, m = x0.shape[0], self.history
+        return AndersonState(jnp.asarray(0), _inf_like(params),
+                             X=jnp.zeros((m, d), x0.dtype),
+                             F=jnp.zeros((m, d), x0.dtype))
+
+    def update(self, params, state, *theta):
+        x, unravel = jax.flatten_util.ravel_pytree(params)
+        m = self.history
+
+        def T_flat(v):
+            out, _ = jax.flatten_util.ravel_pytree(
+                self.fixed_point_fun(unravel(v), *theta))
+            return out
+
+        k = state.iter_num
+        gx = T_flat(x) - x
+        slot = k % m
+        X = state.X.at[slot].set(x)
+        Fh = state.F.at[slot].set(gx)
+        n = jnp.minimum(k + 1, m)
+        # solve min_alpha ||alpha^T Fh||, sum alpha = 1 via normal equations
+        G = Fh @ Fh.T + self.aa_ridge * jnp.eye(m, dtype=x.dtype)
+        mask = (jnp.arange(m) < n).astype(x.dtype)
+        G = G * mask[:, None] * mask[None, :] + \
+            jnp.diag(1.0 - mask)  # inactive rows → identity
+        alpha = jnp.linalg.solve(G, mask)
+        alpha = alpha * mask
+        alpha = alpha / jnp.sum(alpha)
+        x_new = alpha @ (X + self.beta * Fh)
+        error = jnp.linalg.norm(gx)
+        return unravel(x_new), AndersonState(k + 1, error, X=X, F=Fh)

@@ -1,346 +1,140 @@
-"""Inner solvers.
+"""Inner solvers — DEPRECATED functional shims.
 
-The paper's point is that implicit differentiation composes with *any* solver.
-We provide the solvers used in its experiments — gradient descent (with
-optional backtracking), proximal gradient / FISTA, mirror descent, block
-coordinate descent, Newton, Anderson acceleration, L-BFGS — all jit-safe
-(``lax.while_loop`` / ``lax.scan``) and all returning plain ``x*`` so they can
-be wrapped with ``@custom_root`` / ``@custom_fixed_point``.
+The solver layer now lives in ``repro.core.solver_runtime`` as state-based
+``IterativeSolver`` classes with a shared jit/vmap-safe ``run()`` driver,
+``OptInfo`` diagnostics, and *automatic* implicit differentiation (each
+solver declares its optimality mapping and ``run()`` self-wraps with
+``custom_root`` / ``custom_fixed_point``).
 
-All solvers share the signature ``solver(init_x, *theta)`` expected by the
-decorators, via factories that capture f/g/projections.
+These factories keep the pre-runtime signatures working: they build the
+matching runtime solver with ``implicit_diff=False`` (call sites of this era
+hand-wrapped the decorators themselves) and return the bare ``x*``.  New code
+should construct the classes directly::
+
+    from repro.core import GradientDescent
+    solver = GradientDescent(f, stepsize=1e-2, maxiter=1000, tol=1e-8)
+    x_star, info = solver.run(x0, theta)     # gradients flow through x_star
+
+Migration map:
+  fixed_point_iteration     -> FixedPointIteration
+  anderson_acceleration     -> AndersonAcceleration
+  gradient_descent          -> GradientDescent
+  proximal_gradient         -> ProximalGradient
+  projected_gradient        -> ProjectedGradient
+  mirror_descent            -> MirrorDescent
+  block_coordinate_descent  -> BlockCoordinateDescent
+  newton                    -> Newton
+  lbfgs                     -> LBFGS
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, Optional
-
-import jax
-import jax.flatten_util
-import jax.numpy as jnp
-from jax import lax
+import warnings
+from typing import Callable
 
 from repro.core import optimality
+from repro.core.solver_runtime import (AndersonAcceleration,
+                                       BlockCoordinateDescent,
+                                       FixedPointIteration, GradientDescent,
+                                       LBFGS, MirrorDescent, Newton,
+                                       ProximalGradient, ProjectedGradient)
+
+__all__ = [
+    "fixed_point_iteration", "anderson_acceleration", "gradient_descent",
+    "proximal_gradient", "projected_gradient", "mirror_descent",
+    "block_coordinate_descent", "newton", "lbfgs",
+]
 
 
-def _tree_sub(a, b):
-    return jax.tree_util.tree_map(lambda x, y: x - y, a, b)
+def _deprecated(old: str, new: str):
+    warnings.warn(
+        f"repro.core.solvers.{old} is deprecated; use "
+        f"repro.core.solver_runtime.{new} (state-based runtime with "
+        "automatic implicit differentiation) instead",
+        DeprecationWarning, stacklevel=3)
 
-
-def _tree_l2(a):
-    return jnp.sqrt(sum(jnp.vdot(x, x).real
-                        for x in jax.tree_util.tree_leaves(a)))
-
-
-# ---------------------------------------------------------------------------
-# Generic fixed-point iteration + Anderson acceleration
-# ---------------------------------------------------------------------------
 
 def fixed_point_iteration(T: Callable, init, *theta, maxiter: int = 1000,
                           tol: float = 1e-8):
     """Iterate x ← T(x, θ) until ‖T(x) − x‖ ≤ tol."""
-
-    def cond(state):
-        x, k, err = state
-        return jnp.logical_and(k < maxiter, err > tol)
-
-    def body(state):
-        x, k, _ = state
-        x_new = T(x, *theta)
-        err = _tree_l2(_tree_sub(x_new, x))
-        return x_new, k + 1, err
-
-    x, _, _ = lax.while_loop(cond, body, (init, 0, jnp.inf))
-    return x
+    _deprecated("fixed_point_iteration", "FixedPointIteration")
+    solver = FixedPointIteration(T, maxiter=maxiter, tol=tol,
+                                 implicit_diff=False)
+    return solver.run(init, *theta)[0]
 
 
 def anderson_acceleration(T: Callable, init, *theta, history: int = 5,
                           maxiter: int = 200, tol: float = 1e-8,
                           ridge: float = 1e-8, beta: float = 1.0):
-    """Anderson-accelerated fixed-point solve (type-II AA).
+    """Anderson-accelerated fixed-point solve (type-II AA)."""
+    _deprecated("anderson_acceleration", "AndersonAcceleration")
+    solver = AndersonAcceleration(T, history=history, aa_ridge=ridge,
+                                  beta=beta, maxiter=maxiter, tol=tol,
+                                  implicit_diff=False)
+    return solver.run(init, *theta)[0]
 
-    Useful for DEQ-style layers where plain iteration converges slowly.
-    Operates on the raveled vector.
-    """
-    x0_flat, unravel = jax.flatten_util.ravel_pytree(init)
-    d = x0_flat.shape[0]
-    m = history
-
-    def T_flat(v):
-        out, _ = jax.flatten_util.ravel_pytree(T(unravel(v), *theta))
-        return out
-
-    X = jnp.zeros((m, d), x0_flat.dtype)      # iterates
-    Fh = jnp.zeros((m, d), x0_flat.dtype)     # residuals g(x) = T(x) − x
-
-    def body(state):
-        x, X, Fh, k, _ = state
-        gx = T_flat(x) - x
-        slot = k % m
-        X = X.at[slot].set(x)
-        Fh = Fh.at[slot].set(gx)
-        n = jnp.minimum(k + 1, m)
-        # solve min_alpha ||alpha^T Fh||, sum alpha = 1 via normal equations
-        G = Fh @ Fh.T + ridge * jnp.eye(m, dtype=x.dtype)
-        mask = (jnp.arange(m) < n).astype(x.dtype)
-        G = G * mask[:, None] * mask[None, :] + \
-            jnp.diag(1.0 - mask)  # inactive rows → identity
-        rhs = mask
-        alpha = jnp.linalg.solve(G, rhs)
-        alpha = alpha * mask
-        alpha = alpha / jnp.sum(alpha)
-        x_new = alpha @ (X + beta * Fh)
-        err = jnp.linalg.norm(gx)
-        return x_new, X, Fh, k + 1, err
-
-    def cond(state):
-        _, _, _, k, err = state
-        return jnp.logical_and(k < maxiter, err > tol)
-
-    x, _, _, _, _ = lax.while_loop(
-        cond, body, (x0_flat, X, Fh, 0, jnp.inf))
-    return unravel(x)
-
-
-# ---------------------------------------------------------------------------
-# Gradient descent (fixed step or backtracking line search)
-# ---------------------------------------------------------------------------
 
 def gradient_descent(f: Callable, init, *theta, stepsize: float = 1e-2,
                      maxiter: int = 1000, tol: float = 1e-8,
                      linesearch: bool = False):
-    value_and_grad = jax.value_and_grad(f, argnums=0)
+    _deprecated("gradient_descent", "GradientDescent")
+    solver = GradientDescent(f, stepsize=stepsize, linesearch=linesearch,
+                             maxiter=maxiter, tol=tol, implicit_diff=False)
+    return solver.run(init, *theta)[0]
 
-    if not linesearch:
-        T = optimality.gradient_descent_fp(f, stepsize)
-        return fixed_point_iteration(T, init, *theta, maxiter=maxiter,
-                                     tol=tol)
-
-    def body(state):
-        x, k, _ = state
-        v, g = value_and_grad(x, *theta)
-        gnorm2 = sum(jnp.vdot(gi, gi).real
-                     for gi in jax.tree_util.tree_leaves(g))
-
-        def ls_cond(eta):
-            x_try = jax.tree_util.tree_map(lambda xi, gi: xi - eta * gi, x, g)
-            return jnp.logical_and(
-                f(x_try, *theta) > v - 0.5 * eta * gnorm2, eta > 1e-12)
-
-        eta = lax.while_loop(ls_cond, lambda e: e * 0.5,
-                             jnp.asarray(stepsize))
-        x_new = jax.tree_util.tree_map(lambda xi, gi: xi - eta * gi, x, g)
-        return x_new, k + 1, jnp.sqrt(gnorm2)
-
-    def cond(state):
-        _, k, err = state
-        return jnp.logical_and(k < maxiter, err > tol)
-
-    x, _, _ = lax.while_loop(cond, body, (init, 0, jnp.inf))
-    return x
-
-
-# ---------------------------------------------------------------------------
-# Proximal gradient / FISTA
-# ---------------------------------------------------------------------------
 
 def proximal_gradient(f: Callable, prox: Callable, init, theta,
                       stepsize: float = 1e-2, maxiter: int = 1000,
                       tol: float = 1e-8, accel: bool = True):
     """Minimize f(x, θf) + g(x, θg) with θ = (θf, θg); FISTA momentum opt-in."""
-    theta_f, theta_g = theta
-    grad = jax.grad(f, argnums=0)
-
-    def pg_step(x):
-        y = jax.tree_util.tree_map(
-            lambda xi, gi: xi - stepsize * gi, x, grad(x, theta_f))
-        return prox(y, theta_g, stepsize)
-
-    if not accel:
-        return fixed_point_iteration(lambda x: pg_step(x), init,
-                                     maxiter=maxiter, tol=tol)
-
-    def body(state):
-        x, z, t, k, _ = state
-        x_new = pg_step(z)
-        t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
-        mom = (t - 1.0) / t_new
-        z_new = jax.tree_util.tree_map(
-            lambda a, b: a + mom * (a - b), x_new, x)
-        err = _tree_l2(_tree_sub(x_new, x))
-        return x_new, z_new, t_new, k + 1, err
-
-    def cond(state):
-        _, _, _, k, err = state
-        return jnp.logical_and(k < maxiter, err > tol)
-
-    x, _, _, _, _ = lax.while_loop(
-        cond, body, (init, init, jnp.asarray(1.0), 0, jnp.inf))
-    return x
+    _deprecated("proximal_gradient", "ProximalGradient")
+    solver = ProximalGradient(f, prox, stepsize=stepsize, accel=accel,
+                              maxiter=maxiter, tol=tol, implicit_diff=False)
+    return solver.run(init, theta)[0]
 
 
 def projected_gradient(f: Callable, proj: Callable, init, theta,
                        stepsize: float = 1e-2, maxiter: int = 1000,
                        tol: float = 1e-8, accel: bool = True):
-    def prox(y, theta_proj, scaling):
-        del scaling
-        return proj(y, theta_proj)
+    _deprecated("projected_gradient", "ProjectedGradient")
+    solver = ProjectedGradient(f, proj, stepsize=stepsize, accel=accel,
+                               maxiter=maxiter, tol=tol, implicit_diff=False)
+    return solver.run(init, theta)[0]
 
-    return proximal_gradient(f, prox, init, theta, stepsize=stepsize,
-                             maxiter=maxiter, tol=tol, accel=accel)
-
-
-# ---------------------------------------------------------------------------
-# Mirror descent (KL geometry default)
-# ---------------------------------------------------------------------------
 
 def mirror_descent(f: Callable, proj_kl: Callable, init, theta,
                    phi_grad: Callable = optimality.kl_phi_grad,
                    stepsize: float = 1.0, maxiter: int = 1000,
                    tol: float = 1e-8, sqrt_decay_after: int = 100):
-    theta_f, theta_proj = theta
-    grad = jax.grad(f, argnums=0)
+    _deprecated("mirror_descent", "MirrorDescent")
+    solver = MirrorDescent(f, proj_kl, phi_grad=phi_grad, stepsize=stepsize,
+                           sqrt_decay_after=sqrt_decay_after,
+                           maxiter=maxiter, tol=tol, implicit_diff=False)
+    return solver.run(init, theta)[0]
 
-    def body(state):
-        x, k, _ = state
-        eta = stepsize * jnp.where(
-            k < sqrt_decay_after, 1.0,
-            jnp.sqrt(sqrt_decay_after / jnp.maximum(k, 1)))
-        y = phi_grad(x) - eta * grad(x, theta_f)
-        x_new = proj_kl(y, theta_proj)
-        err = _tree_l2(_tree_sub(x_new, x))
-        return x_new, k + 1, err
-
-    def cond(state):
-        _, k, err = state
-        return jnp.logical_and(k < maxiter, err > tol)
-
-    x, _, _ = lax.while_loop(cond, body, (init, 0, jnp.inf))
-    return x
-
-
-# ---------------------------------------------------------------------------
-# Block coordinate descent (cyclic, for row-separable constraints like the
-# product of simplices in the multiclass SVM dual)
-# ---------------------------------------------------------------------------
 
 def block_coordinate_descent(f: Callable, block_prox: Callable, init, theta,
                              stepsize: float = 1.0, maxiter: int = 500,
                              tol: float = 1e-8):
     """x has shape (m, k); blocks are rows.  One sweep = one scan over rows."""
-    theta_f, theta_g = theta
-    grad = jax.grad(f, argnums=0)
+    _deprecated("block_coordinate_descent", "BlockCoordinateDescent")
+    solver = BlockCoordinateDescent(f, block_prox, stepsize=stepsize,
+                                    maxiter=maxiter, tol=tol,
+                                    implicit_diff=False)
+    return solver.run(init, theta)[0]
 
-    def sweep(x):
-        def row_update(x, i):
-            g = grad(x, theta_f)            # full grad; row i slice used
-            row = x[i] - stepsize * g[i]
-            x = x.at[i].set(block_prox(row, theta_g, stepsize))
-            return x, None
-        x, _ = lax.scan(row_update, x, jnp.arange(x.shape[0]))
-        return x
-
-    def body(state):
-        x, k, _ = state
-        x_new = sweep(x)
-        err = _tree_l2(x_new - x)
-        return x_new, k + 1, err
-
-    def cond(state):
-        _, k, err = state
-        return jnp.logical_and(k < maxiter, err > tol)
-
-    x, _, _ = lax.while_loop(cond, body, (init, 0, jnp.inf))
-    return x
-
-
-# ---------------------------------------------------------------------------
-# Newton's method (optimization) and L-BFGS
-# ---------------------------------------------------------------------------
 
 def newton(f: Callable, init, *theta, maxiter: int = 50, tol: float = 1e-10,
            stepsize: float = 1.0):
-    grad = jax.grad(f, argnums=0)
-    hess = jax.hessian(f, argnums=0)
-
-    def body(state):
-        x, k, _ = state
-        g = grad(x, *theta)
-        Hm = hess(x, *theta)
-        x_new = x - stepsize * jnp.linalg.solve(Hm, g)
-        return x_new, k + 1, jnp.linalg.norm(g)
-
-    def cond(state):
-        _, k, err = state
-        return jnp.logical_and(k < maxiter, err > tol)
-
-    x, _, _ = lax.while_loop(cond, body, (init, 0, jnp.inf))
-    return x
+    _deprecated("newton", "Newton")
+    solver = Newton(f, stepsize=stepsize, maxiter=maxiter, tol=tol,
+                    implicit_diff=False)
+    return solver.run(init, *theta)[0]
 
 
 def lbfgs(f: Callable, init, *theta, maxiter: int = 200, tol: float = 1e-8,
           history: int = 10, stepsize: float = 1.0):
-    """L-BFGS with fixed step (sufficient for the well-conditioned inner
-    problems used in the experiments; backtracking available via
-    ``gradient_descent(linesearch=True)`` when needed)."""
-    x0, unravel = jax.flatten_util.ravel_pytree(init)
-    grad = jax.grad(lambda v: f(unravel(v), *theta))
-    d, m = x0.shape[0], history
-
-    S = jnp.zeros((m, d), x0.dtype)
-    Y = jnp.zeros((m, d), x0.dtype)
-    rho = jnp.zeros((m,), x0.dtype)
-
-    def two_loop(g, S, Y, rho, k):
-        n = jnp.minimum(k, m)
-        q = g
-        alphas = jnp.zeros((m,), x0.dtype)
-
-        def bwd(i, qa):
-            q, alphas = qa
-            j = (k - 1 - i) % m
-            valid = i < n
-            a = jnp.where(valid, rho[j] * jnp.dot(S[j], q), 0.0)
-            q = q - a * Y[j] * valid
-            alphas = alphas.at[j].set(a)
-            return q, alphas
-
-        q, alphas = lax.fori_loop(0, m, bwd, (q, alphas))
-        # initial Hessian scaling
-        j_last = (k - 1) % m
-        ys = jnp.dot(S[j_last], Y[j_last])
-        yy = jnp.dot(Y[j_last], Y[j_last])
-        gamma = jnp.where(jnp.logical_and(k > 0, yy > 0), ys / yy, 1.0)
-        r = gamma * q
-
-        def fwd(i, r):
-            j = (k - n + i) % m
-            valid = i < n
-            b = jnp.where(valid, rho[j] * jnp.dot(Y[j], r), 0.0)
-            return r + (alphas[j] - b) * S[j] * valid
-
-        return lax.fori_loop(0, m, fwd, r)
-
-    def body(state):
-        x, S, Y, rho, k, _ = state
-        g = grad(x)
-        p = two_loop(g, S, Y, rho, k)
-        x_new = x - stepsize * p
-        g_new = grad(x_new)
-        s, y = x_new - x, g_new - g
-        sy = jnp.dot(s, y)
-        slot = k % m
-        ok = sy > 1e-10
-        S = S.at[slot].set(jnp.where(ok, s, S[slot]))
-        Y = Y.at[slot].set(jnp.where(ok, y, Y[slot]))
-        rho = rho.at[slot].set(jnp.where(ok, 1.0 / jnp.where(ok, sy, 1.0),
-                                         rho[slot]))
-        return x_new, S, Y, rho, k + 1, jnp.linalg.norm(g_new)
-
-    def cond(state):
-        _, _, _, _, k, err = state
-        return jnp.logical_and(k < maxiter, err > tol)
-
-    x, _, _, _, _, _ = lax.while_loop(
-        cond, body, (x0, S, Y, rho, 0, jnp.inf))
-    return unravel(x)
+    """L-BFGS with fixed step (see ``solver_runtime.LBFGS``)."""
+    _deprecated("lbfgs", "LBFGS")
+    solver = LBFGS(f, history=history, stepsize=stepsize, maxiter=maxiter,
+                   tol=tol, implicit_diff=False)
+    return solver.run(init, *theta)[0]

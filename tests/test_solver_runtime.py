@@ -1,0 +1,441 @@
+"""Tests for the unified state-based solver runtime.
+
+Covers the PR's acceptance criteria:
+  * every solver runs through the shared ``run()`` driver and its implicit
+    gradients match the previous hand-wrapped ``@custom_root`` /
+    ``@custom_fixed_point`` path to machine precision;
+  * ``jax.vmap`` of a full inner solve runs as one batched masked loop with
+    per-instance ``OptInfo`` and produces ONE batched backward linear solve;
+  * honest convergence: ``OptInfo.converged`` is NaN-aware and maxiter-aware.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AndersonAcceleration, BlockCoordinateDescent,
+                        FixedPointIteration, GradientDescent, LBFGS,
+                        MirrorDescent, Newton, ProjectedGradient,
+                        ProximalGradient, custom_fixed_point, custom_root,
+                        optimality, projections, prox)
+from repro.core import linear_solve as ls
+
+
+def _ridge_problem(key, m=20, d=5):
+    kx, ky = jax.random.split(key)
+    X = jax.random.normal(kx, (m, d))
+    y = jax.random.normal(ky, (m,))
+    return X, y
+
+
+def _hand_wrapped_grad(raw_solver, F, init, theta, *, fixed_point=False,
+                       solve="normal_cg", tol=1e-6):
+    """The pre-runtime composition: manual decorator around a bare solver."""
+    deco = (custom_fixed_point if fixed_point else custom_root)(
+        F, solve=solve, tol=tol)
+    wrapped = deco(raw_solver)
+    return jax.grad(lambda t: jnp.sum(wrapped(init, t) ** 2))(theta)
+
+
+def _runtime_grad(solver, init, theta):
+    return jax.grad(lambda t: jnp.sum(solver.run(init, t)[0] ** 2))(theta)
+
+
+class TestGradMatchesHandWrapped:
+    """run()'s self-attached implicit diff == the legacy manual wrap,
+    solver by solver, to machine precision (same F, same linear solve)."""
+
+    def test_gradient_descent(self, rng):
+        X, y = _ridge_problem(rng)
+
+        def f(x, theta):
+            return 0.5 * jnp.sum((X @ x - y) ** 2) + \
+                0.5 * theta * jnp.sum(x ** 2)
+
+        L = float(jnp.linalg.eigvalsh(X.T @ X).max()) + 2.0
+        solver = GradientDescent(f, stepsize=1.0 / L, maxiter=5000,
+                                 tol=1e-13)
+        raw = GradientDescent(f, stepsize=1.0 / L, maxiter=5000, tol=1e-13,
+                              implicit_diff=False)
+        g_rt = _runtime_grad(solver, jnp.zeros(5), 1.0)
+        g_hand = _hand_wrapped_grad(
+            lambda init, t: raw.run(init, t)[0], jax.grad(f, argnums=0),
+            jnp.zeros(5), 1.0)
+        np.testing.assert_allclose(g_rt, g_hand, rtol=1e-14)
+
+    def test_newton_and_lbfgs(self, rng):
+        X, y = _ridge_problem(rng)
+
+        def f(x, theta):
+            return 0.5 * jnp.sum((X @ x - y) ** 2) + \
+                0.5 * theta * jnp.sum(x ** 2)
+
+        F = jax.grad(f, argnums=0)
+        for solver in (Newton(f, maxiter=30, tol=1e-12),
+                       LBFGS(f, maxiter=400, tol=1e-12, stepsize=0.02)):
+            raw_cls = type(solver)
+            kwargs = dict(maxiter=solver.maxiter, tol=solver.tol,
+                          stepsize=solver.stepsize, implicit_diff=False)
+            raw = raw_cls(f, **kwargs)
+            g_rt = _runtime_grad(solver, jnp.zeros(5), 1.0)
+            g_hand = _hand_wrapped_grad(
+                lambda init, t: raw.run(init, t)[0], F, jnp.zeros(5), 1.0)
+            np.testing.assert_allclose(g_rt, g_hand, rtol=1e-14)
+
+    def test_proximal_gradient(self, rng):
+        X, y = _ridge_problem(rng)
+        L = float(jnp.linalg.eigvalsh(X.T @ X).max())
+
+        def f(x, theta_f):
+            del theta_f
+            return 0.5 * jnp.sum((X @ x - y) ** 2)
+
+        pr = lambda v, lam, s: prox.prox_lasso(v, lam, s)
+        solver = ProximalGradient(f, pr, stepsize=1.0 / L, maxiter=20000,
+                                  tol=1e-14)
+        raw = ProximalGradient(f, pr, stepsize=1.0 / L, maxiter=20000,
+                               tol=1e-14, implicit_diff=False)
+        T = optimality.proximal_gradient_fp(f, pr, stepsize=1.0 / L)
+        lam = 0.5
+        g_rt = jax.grad(
+            lambda l: jnp.sum(solver.run(jnp.zeros(5), (None, l))[0] ** 2))(
+                lam)
+        deco = custom_fixed_point(T, solve="normal_cg", tol=1e-6)
+        wrapped = deco(lambda init, th: raw.run(init, th)[0])
+        g_hand = jax.grad(
+            lambda l: jnp.sum(wrapped(jnp.zeros(5), (None, l)) ** 2))(lam)
+        np.testing.assert_allclose(g_rt, g_hand, rtol=1e-14)
+
+    def test_projected_gradient_and_mirror_descent(self, rng):
+        theta0 = jnp.array([0.2, 0.8, 0.4])
+
+        def f(x, theta_f):
+            return 0.5 * jnp.sum((x - theta_f) ** 2)
+
+        proj_e = lambda v, tp: projections.projection_simplex(v)
+        proj_kl = lambda v, tp: projections.projection_simplex_kl(v)
+        init = jnp.ones(3) / 3
+
+        pg = ProjectedGradient(f, proj_e, stepsize=0.5, maxiter=5000,
+                               tol=1e-14)
+        raw_pg = ProjectedGradient(f, proj_e, stepsize=0.5, maxiter=5000,
+                                   tol=1e-14, implicit_diff=False)
+        T_pg = optimality.projected_gradient_fp(f, proj_e, stepsize=0.5)
+        g_rt = jax.grad(
+            lambda t: jnp.sum(pg.run(init, (t, None))[0] ** 2))(theta0)
+        g_hand = _hand_wrapped_grad(
+            lambda i, t: raw_pg.run(i, t)[0], T_pg, init, (theta0, None),
+            fixed_point=True)[0]
+        np.testing.assert_allclose(g_rt, g_hand, rtol=1e-14)
+
+        md = MirrorDescent(f, proj_kl, stepsize=0.9, maxiter=5000, tol=1e-13)
+        raw_md = MirrorDescent(f, proj_kl, stepsize=0.9, maxiter=5000,
+                               tol=1e-13, implicit_diff=False)
+        T_md = optimality.mirror_descent_fp(f, proj_kl,
+                                            optimality.kl_phi_grad,
+                                            stepsize=0.9)
+        g_rt = jax.grad(
+            lambda t: jnp.sum(md.run(init, (t, None))[0] ** 2))(theta0)
+        g_hand = _hand_wrapped_grad(
+            lambda i, t: raw_md.run(i, t)[0], T_md, init, (theta0, None),
+            fixed_point=True)[0]
+        np.testing.assert_allclose(g_rt, g_hand, rtol=1e-13)
+
+    def test_block_coordinate_descent(self, rng):
+        X = jax.random.normal(rng, (12, 4))
+        y = jnp.ones(12)
+        L = float(jnp.linalg.eigvalsh(X.T @ X).max())
+
+        def f(x, theta_f):
+            del theta_f
+            return 0.5 * jnp.sum((X @ x.ravel() - y) ** 2)
+
+        pr = lambda v, lam, s: prox.prox_lasso(v, lam, s)
+        init = jnp.zeros((2, 2))
+        solver = BlockCoordinateDescent(f, pr, stepsize=1.0 / L,
+                                        maxiter=5000, tol=1e-14)
+        raw = BlockCoordinateDescent(f, pr, stepsize=1.0 / L, maxiter=5000,
+                                     tol=1e-14, implicit_diff=False)
+        lam = 0.1
+        g_rt = jax.grad(
+            lambda l: jnp.sum(solver.run(init, (None, l))[0] ** 2))(lam)
+        deco = custom_fixed_point(solver.fixed_point_fun, solve="normal_cg",
+                                  tol=1e-6)
+        wrapped = deco(lambda i, th: raw.run(i, th)[0])
+        g_hand = jax.grad(
+            lambda l: jnp.sum(wrapped(init, (None, l)) ** 2))(lam)
+        np.testing.assert_allclose(g_rt, g_hand, rtol=1e-14)
+
+    def test_fixed_point_and_anderson(self, rng):
+        M = 0.5 * jax.random.orthogonal(rng, 4)
+
+        def T(x, theta):
+            return M @ x + theta
+
+        for solver, raw in [
+                (FixedPointIteration(T, maxiter=500, tol=1e-13),
+                 FixedPointIteration(T, maxiter=500, tol=1e-13,
+                                     implicit_diff=False)),
+                (AndersonAcceleration(T, maxiter=100, tol=1e-13),
+                 AndersonAcceleration(T, maxiter=100, tol=1e-13,
+                                      implicit_diff=False))]:
+            g_rt = _runtime_grad(solver, jnp.zeros(4), jnp.ones(4))
+            g_hand = _hand_wrapped_grad(
+                lambda i, t: raw.run(i, t)[0], T, jnp.zeros(4), jnp.ones(4),
+                fixed_point=True)
+            np.testing.assert_allclose(g_rt, g_hand, rtol=1e-14)
+
+
+class TestVmapFullSolve:
+    """jax.vmap of a whole inner solve: one masked loop, one backward solve."""
+
+    def _make(self, rng, solve="cg"):
+        X, y = _ridge_problem(rng, m=16, d=4)
+
+        def f(x, theta):
+            return 0.5 * jnp.sum((X @ x - y) ** 2) + \
+                0.5 * theta * jnp.sum(x ** 2)
+
+        L = float(jnp.linalg.eigvalsh(X.T @ X).max()) + 4.0
+        solver = GradientDescent(f, stepsize=1.0 / L, maxiter=4000,
+                                 tol=1e-12, solve=solve)
+        loss = lambda t: jnp.sum(solver.run(jnp.zeros(4), t)[0] ** 2)
+        return solver, loss
+
+    def test_one_batched_backward_linear_solve(self, rng):
+        """The acceptance assertion: under vmap the backward pass traces
+        EXACTLY ONE (batched) registry solve, and matches the python loop."""
+        calls = []
+
+        def counting_cg(matvec, b, **kw):
+            calls.append(1)
+            return ls.solve_cg(matvec, b, **kw)
+
+        ls.register_solver("counting_cg", counting_cg, symmetric_only=True,
+                           supports_precond=True)
+        try:
+            _, loss = self._make(rng, solve="counting_cg")
+            thetas = jnp.array([0.5, 1.0, 2.0, 4.0])
+            calls.clear()
+            g_vmap = jax.vmap(jax.grad(loss))(thetas)
+            assert len(calls) == 1, \
+                f"expected ONE batched backward solve, traced {len(calls)}"
+            calls.clear()
+            g_loop = jnp.stack([jax.grad(loss)(t) for t in thetas])
+            assert len(calls) == len(thetas)   # the loop really solves N times
+        finally:
+            ls._REGISTRY.pop("counting_cg", None)
+        np.testing.assert_allclose(g_vmap, g_loop, rtol=1e-12)
+
+    def test_vmap_matches_solo_runs_exactly(self, rng):
+        """Masked freezing: each instance's batched result is its solo run."""
+        solver, _ = self._make(rng)
+        thetas = jnp.array([0.5, 1.0, 8.0])
+        xs, infos = jax.vmap(lambda t: solver.run(jnp.zeros(4), t))(thetas)
+        for i, t in enumerate(thetas):
+            x_solo, info_solo = solver.run(jnp.zeros(4), t)
+            # identical algorithm path (exact iteration counts); values agree
+            # to rounding (batched XLA schedules ops slightly differently)
+            np.testing.assert_allclose(np.asarray(xs[i]), np.asarray(x_solo),
+                                       rtol=1e-14, atol=1e-15)
+            assert int(infos.iterations[i]) == int(info_solo.iterations)
+        # better-conditioned instances converge in fewer masked iterations
+        assert int(infos.iterations[2]) < int(infos.iterations[0])
+
+    def test_vmap_linesearch_matches_solo(self, rng):
+        """The backtracking inner loop is masked too."""
+        Q = jnp.diag(jnp.array([1.0, 50.0]))
+
+        def f(x, theta):
+            return 0.5 * x @ Q @ x - theta @ x
+
+        solver = GradientDescent(f, stepsize=1.0, linesearch=True,
+                                 maxiter=2000, tol=1e-10,
+                                 implicit_diff=False)
+        thetas = jnp.stack([jnp.array([1.0, 2.0]), jnp.array([-3.0, 0.5])])
+        xs, infos = jax.vmap(lambda t: solver.run(jnp.ones(2), t))(thetas)
+        for i in range(2):
+            x_solo, info_solo = solver.run(jnp.ones(2), thetas[i])
+            np.testing.assert_allclose(np.asarray(xs[i]), np.asarray(x_solo),
+                                       rtol=1e-14, atol=1e-15)
+            assert int(infos.iterations[i]) == int(info_solo.iterations)
+
+
+class TestBackwardSolveRouting:
+    """solve= / precond= / ridge= flow from the solver constructor through
+    custom_root to the SolverSpec registry."""
+
+    def test_precond_and_ridge_reach_registry_solver(self, rng):
+        seen = {}
+
+        def spy_cg(matvec, b, **kw):
+            seen.update(kw)
+            return ls.solve_cg(matvec, b, **kw)
+
+        ls.register_solver("spy_cg", spy_cg, symmetric_only=True,
+                           supports_precond=True)
+        try:
+            X, y = _ridge_problem(rng, m=12, d=3)
+
+            def f(x, theta):
+                return 0.5 * jnp.sum((X @ x - y) ** 2) + \
+                    0.5 * theta * jnp.sum(x ** 2)
+
+            L = float(jnp.linalg.eigvalsh(X.T @ X).max()) + 2.0
+            solver = GradientDescent(f, stepsize=1.0 / L, maxiter=2000,
+                                     tol=1e-12, solve="spy_cg",
+                                     precond="jacobi", ridge=1e-10,
+                                     linsolve_tol=1e-9, linsolve_maxiter=77)
+            g = jax.grad(
+                lambda t: jnp.sum(solver.run(jnp.zeros(3), t)[0] ** 2))(1.0)
+            assert jnp.isfinite(g)
+            assert seen["precond"] == "jacobi"
+            assert seen["ridge"] == 1e-10
+            assert seen["tol"] == 1e-9
+            assert seen["maxiter"] == 77
+        finally:
+            ls._REGISTRY.pop("spy_cg", None)
+
+    def test_unsupported_precond_raises(self, rng):
+        solver = FixedPointIteration(lambda x, t: 0.5 * x + t, maxiter=100,
+                                     tol=1e-12, solve="neumann",
+                                     precond="jacobi")
+        with pytest.raises(ValueError, match="precond"):
+            jax.grad(lambda t: jnp.sum(
+                solver.run(jnp.zeros(2), t)[0] ** 2))(jnp.ones(2))
+
+
+class TestOptInfo:
+    """Honest convergence semantics, mirroring SolveInfo."""
+
+    def test_converged_true_within_budget(self, rng):
+        M = 0.3 * jax.random.orthogonal(rng, 4)
+        solver = FixedPointIteration(lambda x: M @ x + 1.0, maxiter=500,
+                                     tol=1e-12, implicit_diff=False)
+        x, info = solver.run(jnp.zeros(4))
+        assert bool(info.converged)
+        assert 0 < int(info.iterations) < 500
+        assert float(info.error) <= 1e-12
+
+    def test_maxiter_exhaustion_reports_unconverged(self, rng):
+        M = 0.99 * jax.random.orthogonal(rng, 4)   # slow contraction
+        solver = FixedPointIteration(lambda x: M @ x + 1.0, maxiter=3,
+                                     tol=1e-12, implicit_diff=False)
+        _, info = solver.run(jnp.zeros(4))
+        assert not bool(info.converged)
+        assert int(info.iterations) == 3
+
+    def test_nan_iteration_is_never_converged(self):
+        """A NaN-producing map must stop AND report converged=False — the
+        legacy loop silently exited with err=NaN looking 'done'."""
+        solver = FixedPointIteration(lambda x: x * jnp.nan, maxiter=100,
+                                     tol=1e-8, implicit_diff=False)
+        x, info = solver.run(jnp.ones(3))
+        assert not bool(info.converged)
+        assert jnp.isnan(info.error)
+        assert int(info.iterations) == 1   # stopped immediately, honestly
+
+    def test_divergent_gd_reports_unconverged(self, rng):
+        X, y = _ridge_problem(rng, m=10, d=3)
+
+        def f(x, theta):
+            return 0.5 * jnp.sum((X @ x - y) ** 2) + \
+                0.5 * theta * jnp.sum(x ** 2)
+
+        solver = GradientDescent(f, stepsize=10.0, maxiter=500, tol=1e-10,
+                                 implicit_diff=False)   # wildly too large
+        _, info = solver.run(jnp.zeros(3), 1.0)
+        assert not bool(info.converged)
+
+    def test_info_is_nondiff_aux(self, rng):
+        X, y = _ridge_problem(rng, m=10, d=3)
+
+        def f(x, theta):
+            return 0.5 * jnp.sum((X @ x - y) ** 2) + \
+                0.5 * theta * jnp.sum(x ** 2)
+
+        L = float(jnp.linalg.eigvalsh(X.T @ X).max()) + 2.0
+        solver = GradientDescent(f, stepsize=1.0 / L, maxiter=2000,
+                                 tol=1e-12)
+        g = jax.grad(lambda t: jnp.sum(solver.run(jnp.zeros(3), t)[0] ** 2))(
+            1.0)
+        assert jnp.isfinite(g)
+
+
+class TestLegacyShims:
+    """The deprecated functional factories still match the runtime classes."""
+
+    def test_shim_equals_class(self, rng):
+        from repro.core import solvers
+        Q = jnp.diag(jnp.array([1.0, 4.0, 9.0]))
+
+        def f(x, theta):
+            return 0.5 * x @ Q @ x - theta @ x
+
+        theta = jnp.array([1.0, 2.0, 3.0])
+        with pytest.deprecated_call():
+            x_shim = solvers.gradient_descent(f, jnp.zeros(3), theta,
+                                              stepsize=0.1, maxiter=5000,
+                                              tol=1e-12)
+        x_cls, _ = GradientDescent(f, stepsize=0.1, maxiter=5000, tol=1e-12,
+                                   implicit_diff=False).run(jnp.zeros(3),
+                                                            theta)
+        np.testing.assert_array_equal(np.asarray(x_shim), np.asarray(x_cls))
+
+    def test_bilevel_accepts_runtime_solver(self, rng):
+        from repro.core import bilevel
+        k1, k2 = jax.random.split(rng)
+        X = jax.random.normal(k1, (20, 4))
+        y = jax.random.normal(k2, (20,))
+
+        def inner_obj(x, lam):
+            return 0.5 * jnp.sum((X @ x - y) ** 2) + \
+                0.5 * jnp.exp(lam) * jnp.sum(x ** 2)
+
+        def outer_loss(x, lam):
+            return jnp.sum(x ** 2)
+
+        L = float(jnp.linalg.eigvalsh(X.T @ X).max()) + 2.0
+        inner = GradientDescent(inner_obj, stepsize=1.0 / L, maxiter=3000,
+                                tol=1e-12)
+        sol = bilevel.solve_bilevel(outer_loss, inner, 0.3, jnp.zeros(4),
+                                    outer_steps=3, outer_lr=0.1)
+        assert sol.inner_info is not None
+        assert bool(sol.inner_info.converged)
+        assert sol.outer_values[-1] <= sol.outer_values[0]
+
+    def test_make_implicit_inner_multi_theta(self, rng):
+        """Regression: the callable path keeps the *theta contract."""
+        from repro.core import bilevel
+        k1, k2 = jax.random.split(rng)
+        X = jax.random.normal(k1, (15, 3))
+        y = jax.random.normal(k2, (15,))
+
+        def obj(x, lam, mu):
+            return 0.5 * jnp.sum((X @ x - y - mu) ** 2) + \
+                0.5 * jnp.exp(lam) * jnp.sum(x ** 2)
+
+        def raw(init, lam, mu):
+            return jnp.linalg.solve(X.T @ X + jnp.exp(lam) * jnp.eye(3),
+                                    X.T @ (y + mu))
+
+        fn = bilevel.make_implicit_inner(raw, inner_objective=obj, tol=1e-12)
+        g_lam, g_mu = jax.grad(
+            lambda a, b: jnp.sum(fn(None, a, b) ** 2),
+            argnums=(0, 1))(0.3, jnp.zeros(15))
+        assert jnp.isfinite(g_lam)
+        assert bool(jnp.isfinite(g_mu).all())
+
+    def test_solve_bilevel_zero_outer_steps(self, rng):
+        """Regression: outer_steps=0 returns the init, not a crash."""
+        from repro.core import bilevel
+
+        def f(x, t):
+            return 0.5 * jnp.sum((x - t) ** 2)
+
+        solver = GradientDescent(f, stepsize=0.5, maxiter=100, tol=1e-10)
+        sol = bilevel.solve_bilevel(lambda x, t: jnp.sum(x ** 2), solver,
+                                    jnp.ones(2), jnp.zeros(2),
+                                    outer_steps=0)
+        assert sol.inner_info is None
+        np.testing.assert_array_equal(np.asarray(sol.x_star), 0.0)
