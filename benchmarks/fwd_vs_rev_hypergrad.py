@@ -1,0 +1,82 @@
+"""Forward-mode vs reverse-mode implicit hypergradients across regimes.
+
+The mode-polymorphic ``implicit_diff`` wrapper makes the Jacobian-shape
+trade-off (Margossian & Betancourt; the paper's MD-sensitivity workload) a
+one-flag choice on ONE wrapped solver: ``jax.jacfwd`` costs one batched
+tangent solve per *parameter* basis vector, ``jax.jacrev`` one batched
+cotangent solve per *output* basis vector.  This benchmark times both
+through the same wrapper on a generalized ridge problem
+
+    F(x, θ) = Xᵀ(Xx − y) + (Pθ) ⊙ x,        x* ∈ R^d,  θ ∈ R^p,
+
+sweeping (n_params=p, n_outputs=d) from JVP-dominant (p ≪ d) to
+VJP-dominant (p ≫ d).  Both directions batch their basis solves into ONE
+masked registry solve, so the measured difference is the p-vs-d system
+count, not dispatch overhead.
+
+Run: PYTHONPATH=src python -m benchmarks.run --only fwdrev
+"""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_fn
+from repro.core import ImplicitDiffSpec, implicit_diff
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _make_wrapped_solver(key, p, d, m):
+    kx, ky, kp = jax.random.split(key, 3)
+    X = jax.random.normal(kx, (m, d))
+    y = jax.random.normal(ky, (m,))
+    # positive mixing: each of the p hyperparameters regularizes a soft
+    # group of coordinates, so d outputs depend on p parameters densely
+    P = jax.random.uniform(kp, (d, p), minval=0.1, maxval=1.0)
+
+    def F(x, theta):
+        return X.T @ (X @ x - y) + (P @ theta) * x
+
+    spec = ImplicitDiffSpec(optimality_fun=F, solve="cg", tol=1e-10)
+
+    @implicit_diff(spec)
+    def solver(init, theta):
+        del init
+        return jnp.linalg.solve(X.T @ X + jnp.diag(P @ theta), X.T @ y)
+
+    return solver
+
+
+def _bench_regime(emit_fn, key, p, d):
+    m = d + 16
+    solver = _make_wrapped_solver(key, p, d, m)
+    theta0 = jnp.ones(p)
+
+    jac_fwd = jax.jit(jax.jacfwd(solver, argnums=1))
+    jac_rev = jax.jit(jax.jacrev(solver, argnums=1))
+
+    # correctness gate before timing: the two modes are the same Jacobian
+    Jf = jac_fwd(None, theta0)
+    Jr = jac_rev(None, theta0)
+    err = float(jnp.max(jnp.abs(Jf - Jr)))
+    assert err < 1e-6, f"jacfwd drifted from jacrev at (p={p}, d={d}): {err}"
+
+    t_fwd = time_fn(lambda: jac_fwd(None, theta0), iters=5)
+    t_rev = time_fn(lambda: jac_rev(None, theta0), iters=5)
+    regime = ("jvp-dominant" if p < d else
+              "vjp-dominant" if p > d else "square")
+    emit_fn(f"fwdrev_jacfwd_p{p}_d{d}", t_fwd, regime)
+    emit_fn(f"fwdrev_jacrev_p{p}_d{d}", t_rev,
+            f"rev/fwd={t_rev / max(t_fwd, 1e-12):.2f}x")
+
+
+def run(emit_fn, smoke: bool = False):
+    key = jax.random.PRNGKey(0)
+    regimes = ([(4, 64), (64, 4)] if smoke
+               else [(4, 128), (32, 32), (128, 4)])
+    for i, (p, d) in enumerate(regimes):
+        _bench_regime(emit_fn, jax.random.fold_in(key, i), p, d)
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    run(emit)

@@ -10,19 +10,21 @@ Prints ``name,us_per_call,derived`` CSV rows.
   kernels micro-benchmarks of the Pallas ops (interpret mode on CPU)
   batched batched-vs-looped linear-solve engine speedups
   bilevel batched-vs-looped hypergradients through the solver runtime
+  fwdrev  JVP-mode vs VJP-mode implicit Jacobians across (p, d) regimes
   roofline per-(arch x shape) terms from the dry-run artifacts
 
-``--smoke`` runs a fast CI subset (kernels + batched + bilevel) and writes
-the rows to ``BENCH_smoke.json`` (override with ``--out``) for artifact
-upload.
+``--smoke`` runs a fast CI subset (kernels + batched + bilevel + fwdrev)
+and writes the rows to ``BENCH_smoke.json`` (override with ``--out``) for
+artifact upload.
 """
 import argparse
 import sys
 import traceback
 
 
-SMOKE_BENCHES = ["kernels", "batched", "bilevel"]
-SMOKE_KWARG_BENCHES = {"batched", "bilevel"}   # accept run(emit, smoke=True)
+SMOKE_BENCHES = ["kernels", "batched", "bilevel", "fwdrev"]
+# accept run(emit, smoke=True)
+SMOKE_KWARG_BENCHES = {"batched", "bilevel", "fwdrev"}
 
 
 def main() -> None:
@@ -37,9 +39,9 @@ def main() -> None:
 
     from benchmarks import (batched_solve, bilevel_hypergrad,
                             dictionary_learning, distillation,
-                            jacobian_precision, kernels_micro,
-                            molecular_dynamics, roofline_report,
-                            svm_hyperopt)
+                            fwd_vs_rev_hypergrad, jacobian_precision,
+                            kernels_micro, molecular_dynamics,
+                            roofline_report, svm_hyperopt)
     from benchmarks.common import Collector, emit
     all_benches = {
         "fig3": jacobian_precision.run,
@@ -50,6 +52,7 @@ def main() -> None:
         "kernels": kernels_micro.run,
         "batched": batched_solve.run,
         "bilevel": bilevel_hypergrad.run,
+        "fwdrev": fwd_vs_rev_hypergrad.run,
         "roofline": roofline_report.run,
     }
     if args.only:

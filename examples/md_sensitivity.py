@@ -2,13 +2,25 @@
 would write it: FIRE minimization + forward-mode implicit differentiation of
 particle positions with respect to particle diameter.
 
+This is the canonical JVP-dominant workload — ONE scalar parameter, many
+outputs (every particle coordinate) — so forward mode needs exactly one
+tangent solve where reverse mode would need one cotangent solve per output.
+Two equivalent routes are shown:
+
+  1. the low-level ``root_jvp`` on the force residual at the FIRE minimum
+     (the original Fig.-6 recipe);
+  2. the solver runtime in forward mode: ``GradientDescent.run(...,
+     mode="jvp")`` polishes the minimum and ``jax.jvp`` flows the diameter
+     tangent through the implicit system automatically — no manual
+     residual plumbing.
+
 Run: PYTHONPATH=src python examples/md_sensitivity.py
 """
 import jax
 import jax.numpy as jnp
 
 from benchmarks.molecular_dynamics import fire_minimize, pair_energy
-from repro.core import root_jvp
+from repro.core import GradientDescent, root_jvp
 
 jax.config.update("jax_enable_x64", True)
 
@@ -32,6 +44,26 @@ def main():
         print(f"  particle {i}: pos=({float(x_star[i,0]):.3f}, "
               f"{float(x_star[i,1]):.3f})  d pos/d θ=({float(dx[i,0]):+.4f},"
               f" {float(dx[i,1]):+.4f})")
+
+    # -- the same sensitivity through the runtime, forward mode ----------
+    # The solver declares its stationarity condition itself; run(mode="jvp")
+    # wraps the solve so jax.jvp drives ONE tangent linear solve.  Warm-
+    # started from the FIRE solution, the polish converges in a few steps.
+    solver = GradientDescent(pair_energy, stepsize=2e-3, maxiter=2000,
+                             tol=1e-10, solve="bicgstab", ridge=1e-8,
+                             linsolve_tol=1e-8)
+
+    def positions(diameter):
+        return solver.run(x_star, diameter, mode="jvp")
+
+    (x_rt, info), (dx_rt, _) = jax.jvp(positions, (theta,), (1.0,))
+    drift = float(jnp.max(jnp.abs(dx_rt - dx)))
+    print(f"runtime polish: converged={bool(info.converged)} in "
+          f"{int(info.iterations)} steps")
+    print(f"runtime forward-mode sensitivity: L1 norm "
+          f"{float(jnp.sum(jnp.abs(dx_rt))):.3f}, "
+          f"max |Δ| vs root_jvp = {drift:.2e}")
+    assert drift < 1e-4, f"runtime JVP drifted from root_jvp: {drift}"
     print("OK")
 
 

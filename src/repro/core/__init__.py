@@ -1,13 +1,17 @@
 """repro.core — automatic implicit differentiation (the paper's contribution).
 
 Public API re-exports:
-  solver runtime (state-based, auto implicit diff):
+  implicit-diff API (mode-polymorphic: one wrapper serves jax.grad/jacrev
+  AND jax.jvp/jacfwd):
+    ImplicitDiffSpec, implicit_diff — repro.core.diff_api
+    custom_root, custom_fixed_point (thin shims over implicit_diff),
+    custom_root_jvp, custom_fixed_point_jvp (deprecated forward-only shims),
+    root_vjp, root_jvp           — repro.core.implicit_diff
+  solver runtime (state-based, auto implicit diff, run(mode=...)):
     IterativeSolver protocol, OptInfo diagnostics, and the solver classes
     GradientDescent, ProximalGradient, ProjectedGradient, MirrorDescent,
     BlockCoordinateDescent, Newton, LBFGS, FixedPointIteration,
     AndersonAcceleration    — repro.core.solver_runtime
-  custom_root, custom_fixed_point, custom_root_jvp, custom_fixed_point_jvp,
-  root_vjp, root_jvp           — repro.core.implicit_diff
   solve (batched engine entry), SolverSpec registry, SolveInfo,
   solve_cg / bicgstab / gmres / dense_gmres / normal_cg / lu / neumann /
   pallas_cg                    — repro.core.linear_solve
@@ -16,6 +20,10 @@ Public API re-exports:
   legacy functional solvers    — repro.core.solvers (deprecated shims)
   bilevel driver               — repro.core.bilevel
   DEQ implicit layer           — repro.core.implicit_layer
+
+Note: ``repro.core.implicit_diff`` the *submodule* is shadowed in this
+namespace by ``implicit_diff`` the *function* (the API entry point);
+``import repro.core.implicit_diff`` still reaches the submodule.
 """
 from repro.core.implicit_diff import (custom_root, custom_fixed_point,
                                       custom_root_jvp, custom_fixed_point_jvp,
@@ -35,3 +43,6 @@ from repro.core.solver_runtime import (IterativeSolver, OptInfo,
 from repro.core import optimality, projections, prox, solvers, bilevel
 from repro.core.implicit_layer import (deq_fixed_point, make_deq_block,
                                        make_deq_solver)
+# imported last: the ``implicit_diff`` FUNCTION shadows the submodule name
+# in this namespace (see module docstring)
+from repro.core.diff_api import ImplicitDiffSpec, implicit_diff

@@ -23,7 +23,8 @@ from typing import Any, Callable, Optional, Union
 import jax
 import jax.numpy as jnp
 
-from repro.core import implicit_diff, optimality
+from repro.core import diff_api, optimality
+from repro.core.diff_api import ImplicitDiffSpec
 from repro.core.solver_runtime import IterativeSolver, OptInfo
 
 
@@ -37,28 +38,82 @@ class BilevelSolution:
 
 
 def _make_inner_runner(inner_solver, inner_objective, fixed_point, solve,
-                       tol, maxiter, ridge, precond) -> Callable:
+                       tol, maxiter, ridge, precond, diff_spec=None,
+                       mode=None) -> Callable:
     """``fn(init, theta) -> (x_star, OptInfo | None)``, implicit-diff'd.
 
-    ``None`` routing arguments mean "not specified": an ``IterativeSolver``
-    keeps its own configured backward-solve routing for them (never
-    silently clobbered by driver defaults); the bare-callable path falls
-    back to the historical defaults (cg / 1e-6 / 1000 / 0.0).
+    ``None`` loose routing arguments mean "not specified": an
+    ``IterativeSolver`` keeps its own configured backward-solve routing for
+    them (never silently clobbered by driver defaults); the bare-callable
+    path falls back to the historical defaults (cg / 1e-6 / 1000 / 0.0).
+
+    ``diff_spec`` (an ``ImplicitDiffSpec``) replaces the loose routing
+    kwargs WHOLESALE — every routing field comes from the spec, including
+    its defaults (to tweak one field of an ``IterativeSolver``'s existing
+    config, pass ``inner_solver.diff_spec().replace(...)``).  A
+    routing-only spec keeps the solver's declared mapping (combine it with
+    ``inner_objective``/``fixed_point`` for bare callables); a spec
+    carrying a mapping supersedes it.  ``mode`` selects the differentiation
+    wrapping (``"auto"``/``"vjp"``/``"jvp"``; ``None`` keeps the solver's
+    own setting, ``"auto"`` for bare callables).
     """
+    loose = dict(solve=solve, tol=tol, maxiter=maxiter, ridge=ridge,
+                 precond=precond)
+    if diff_spec is not None:
+        if any(v is not None for v in loose.values()):
+            raise ValueError("pass the backward-solve routing either via "
+                             "diff_spec or via the loose solve/tol/maxiter/"
+                             "ridge/precond arguments, not both")
+        if not diff_spec.is_routing_only and (
+                inner_objective is not None or fixed_point is not None):
+            raise ValueError("diff_spec already carries the optimality "
+                             "mapping; drop inner_objective/fixed_point")
+
     if isinstance(inner_solver, IterativeSolver):
         if inner_objective is not None or fixed_point is not None:
             raise ValueError(
                 "an IterativeSolver declares its own optimality mapping; "
                 "drop inner_objective/fixed_point")
-        overrides = {k: v for k, v in [("solve", solve),
-                                       ("linsolve_tol", tol),
-                                       ("linsolve_maxiter", maxiter),
-                                       ("ridge", ridge),
-                                       ("precond", precond)]
-                     if v is not None}
+        if diff_spec is not None:
+            overrides = dict(solve=diff_spec.solve, linsolve_tol=diff_spec.tol,
+                             linsolve_maxiter=diff_spec.maxiter,
+                             ridge=diff_spec.ridge, precond=diff_spec.precond)
+        else:
+            overrides = {k: v for k, v in [("solve", solve),
+                                           ("linsolve_tol", tol),
+                                           ("linsolve_maxiter", maxiter),
+                                           ("ridge", ridge),
+                                           ("precond", precond)]
+                         if v is not None}
+        if mode is not None:
+            overrides["mode"] = mode
         solver = dataclasses.replace(inner_solver, implicit_diff=True,
                                      **overrides)
+        if diff_spec is not None and not diff_spec.is_routing_only:
+            # the spec's mapping supersedes the solver's declared one: wrap
+            # the raw masked iteration with it (paper's decoupling promise)
+            deco = diff_api.implicit_diff(diff_spec.replace(has_aux=True),
+                                          mode=solver.mode)
+            return lambda init, *theta: deco(solver._iterate)(init, *theta)
         return solver.run
+
+    mode = "auto" if mode is None else mode
+    if diff_spec is not None:
+        if diff_spec.is_routing_only:
+            # graft the mapping from the loose arguments onto the spec
+            if (inner_objective is None) == (fixed_point is None):
+                raise ValueError(
+                    "a bare-callable inner solver needs an optimality "
+                    "mapping: set optimality_fun/fixed_point_fun on the "
+                    "spec, or pass exactly one of inner_objective/"
+                    "fixed_point alongside the routing-only spec")
+            if inner_objective is not None:
+                diff_spec = diff_spec.replace(
+                    optimality_fun=optimality.stationary(inner_objective))
+            else:
+                diff_spec = diff_spec.replace(fixed_point_fun=fixed_point)
+        wrapped = diff_api.implicit_diff(diff_spec, mode=mode)(inner_solver)
+        return lambda init, *theta: (wrapped(init, *theta), None)
     solve = "cg" if solve is None else solve
     tol = 1e-6 if tol is None else tol
     maxiter = 1000 if maxiter is None else maxiter
@@ -66,15 +121,15 @@ def _make_inner_runner(inner_solver, inner_objective, fixed_point, solve,
     if (inner_objective is None) == (fixed_point is None):
         raise ValueError("provide exactly one of inner_objective/fixed_point")
     if inner_objective is not None:
-        F = optimality.stationary(inner_objective)
-        deco = implicit_diff.custom_root(F, solve=solve, tol=tol,
-                                         maxiter=maxiter, ridge=ridge,
-                                         precond=precond)
+        spec = ImplicitDiffSpec(
+            optimality_fun=optimality.stationary(inner_objective),
+            solve=solve, tol=tol, maxiter=maxiter, ridge=ridge,
+            precond=precond)
     else:
-        deco = implicit_diff.custom_fixed_point(fixed_point, solve=solve,
-                                                tol=tol, maxiter=maxiter,
-                                                ridge=ridge, precond=precond)
-    wrapped = deco(inner_solver)
+        spec = ImplicitDiffSpec(fixed_point_fun=fixed_point, solve=solve,
+                                tol=tol, maxiter=maxiter, ridge=ridge,
+                                precond=precond)
+    wrapped = diff_api.implicit_diff(spec, mode=mode)(inner_solver)
     return lambda init, *theta: (wrapped(init, *theta), None)
 
 
@@ -85,7 +140,9 @@ def make_implicit_inner(inner_solver: Union[Callable, IterativeSolver],
                         tol: Optional[float] = None,
                         maxiter: Optional[int] = None,
                         ridge: Optional[float] = None,
-                        precond=None) -> Callable:
+                        precond=None,
+                        diff_spec: Optional[ImplicitDiffSpec] = None,
+                        mode: Optional[str] = None) -> Callable:
     """Return ``fn(init, theta) -> x_star`` with implicit derivatives.
 
     An ``IterativeSolver`` already knows its optimality mapping AND its
@@ -94,9 +151,18 @@ def make_implicit_inner(inner_solver: Union[Callable, IterativeSolver],
     provide exactly one of ``inner_objective`` (stationarity condition
     used) or an explicit ``fixed_point`` mapping T(x, theta); unspecified
     routing arguments default to cg / 1e-6 / 1000 / 0.0.
+
+    ``diff_spec`` bundles the same configuration as one
+    ``ImplicitDiffSpec`` (mapping + routing; a routing-only spec keeps an
+    ``IterativeSolver``'s own mapping but replaces its routing WHOLESALE —
+    start from ``inner_solver.diff_spec().replace(...)`` to tweak single
+    fields); ``mode`` picks the differentiation wrapping — the default
+    supports both ``jax.grad`` and ``jax.jvp`` through the returned
+    function.
     """
     runner = _make_inner_runner(inner_solver, inner_objective, fixed_point,
-                                solve, tol, maxiter, ridge, precond)
+                                solve, tol, maxiter, ridge, precond,
+                                diff_spec=diff_spec, mode=mode)
     return lambda init, *theta: runner(init, *theta)[0]
 
 
@@ -109,6 +175,8 @@ def solve_bilevel(outer_loss: Callable,
                   inner_tol: Optional[float] = None,
                   linsolve_maxiter: Optional[int] = None,
                   ridge: Optional[float] = None, precond=None,
+                  diff_spec: Optional[ImplicitDiffSpec] = None,
+                  mode: Optional[str] = None,
                   warm_start: bool = True,
                   jit: bool = True) -> BilevelSolution:
     """Gradient descent (w/ momentum) on the outer problem.
@@ -121,13 +189,18 @@ def solve_bilevel(outer_loss: Callable,
     ``solve`` / ``inner_tol`` / ``linsolve_maxiter`` / ``ridge`` /
     ``precond`` route the backward linear solve; left ``None``, an
     ``IterativeSolver`` keeps its own configuration while the callable
-    path uses cg / 1e-6 / 1000 / 0.0.
+    path uses cg / 1e-6 / 1000 / 0.0.  ``diff_spec`` passes the same
+    configuration as one ``ImplicitDiffSpec`` instead of loose kwargs —
+    a WHOLESALE per-call routing override (build it from
+    ``inner_solver.diff_spec().replace(...)`` to keep the solver's other
+    settings); a spec carrying a mapping supersedes the solver's declared
+    one; ``theta`` may be any pytree either way.
     ``warm_start`` reuses the previous inner solution as init (the standard
     trick that makes the inner solves cheap along the outer trajectory).
     """
     implicit_solver = _make_inner_runner(
         inner_solver, inner_objective, fixed_point, solve, inner_tol,
-        linsolve_maxiter, ridge, precond)
+        linsolve_maxiter, ridge, precond, diff_spec=diff_spec, mode=mode)
 
     def outer_value_and_grad(theta, x_init):
         def obj(theta):

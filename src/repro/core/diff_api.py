@@ -1,0 +1,465 @@
+"""One mode-polymorphic implicit-differentiation API.
+
+The paper's promise is that the optimality-condition *spec* is decoupled from
+the differentiation *mechanism*.  This module is the single composition point
+that delivers it:
+
+  * ``ImplicitDiffSpec`` — the declarative spec: an optimality mapping
+    ``F(x, *theta)`` (root form) or fixed-point mapping ``T(x, *theta)``
+    (eq. 3), plus the backward/tangent linear-solve routing (``solve`` /
+    ``precond`` / ``ridge`` / ``tol`` / ``maxiter``), ``has_aux`` and
+    ``nondiff_argnums``.
+  * ``implicit_diff(spec)(solver)`` — one wrapper serving BOTH autodiff
+    modes: the returned function supports ``jax.grad`` / ``jax.jacrev``
+    *and* ``jax.jvp`` / ``jax.jacfwd`` without re-wrapping.
+  * ``root_vjp`` / ``root_jvp`` — the low-level products with the implicit
+    Jacobian (paper §2.1), shared by every mode.
+
+How one wrapper serves both modes
+---------------------------------
+The derivative is registered as a single ``jax.custom_jvp`` rule.  Its
+tangent is the solution of the implicit-function-theorem system
+
+    A dx = B θ̇,      A = -∂₁F(x*, θ),   B = ∂₂F(x*, θ),
+
+and the linear solve is made *reverse-transposable* by expressing it as a
+``lax.custom_linear_solve`` pair: the forward direction routes ``A dx = b``
+through the ``SolverSpec`` registry, and the declared transpose direction
+routes ``Aᵀ u = v`` through the same registry (reusing the forward matvec
+when the routed solver is symmetric-only — see
+``linear_solve.solver_is_symmetric``).  Reverse mode therefore linearizes
+through the JVP rule and transposes into exactly the ``root_vjp`` linear
+system; forward mode uses the tangent solve directly.
+
+Batching: every registry solver is vmap-safe with per-instance convergence
+masks, so ``jax.vmap`` of either mode's derivative executes ONE batched
+masked solve for the whole batch — never N sequential solves.  (Trace-time
+census: ``custom_linear_solve`` stages both direction templates, one
+registry trace per direction, independent of batch size; exactly one
+direction *executes* per derivative.)
+
+Mode selection (``mode=``)
+--------------------------
+  * ``"auto"`` (default) — the mode-polymorphic wrapper above.
+  * ``"jvp"``  — forward-only ``custom_jvp`` (no transpose template is
+    staged; reverse mode raises).  For JVP-dominant workloads: few
+    parameters, many outputs (e.g. the molecular-dynamics sensitivity
+    experiment; see the Jacobian-shape analysis in Margossian &
+    Betancourt).
+  * ``"vjp"``  — reverse-only ``custom_vjp`` (forward mode raises).  For
+    VJP-dominant workloads: many parameters, scalar losses.
+
+Conventions: the wrapped solver has signature ``solver(init, *theta)`` and
+returns ``x*`` (or ``(x*, aux)`` with ``has_aux=True``).  ``F``/``T`` take
+``(x, *theta)`` and return a pytree with the structure of ``x``.  ``init``
+always gets a zero derivative — x*(θ) does not depend on the initialization.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import warnings
+from typing import Any, Callable, Optional, Tuple, Union
+
+import jax
+import jax.flatten_util  # registers jax.flatten_util.ravel_pytree
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import linear_solve as ls
+
+
+# ---------------------------------------------------------------------------
+# one-shot deprecation plumbing (shared with repro.core.solvers)
+# ---------------------------------------------------------------------------
+
+_WARNED: set = set()
+
+
+def warn_once(key: str, message: str, *, stacklevel: int = 3) -> None:
+    """Emit ``DeprecationWarning`` exactly once per ``key`` per process."""
+    if key in _WARNED:
+        return
+    _WARNED.add(key)
+    warnings.warn(message, DeprecationWarning, stacklevel=stacklevel)
+
+
+def reset_deprecation_warnings() -> None:
+    """Forget which one-shot deprecation warnings fired (test hook)."""
+    _WARNED.clear()
+
+
+# ---------------------------------------------------------------------------
+# the spec
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ImplicitDiffSpec:
+    """Declarative spec of an implicitly-differentiated solver.
+
+    Exactly one of ``optimality_fun`` (root form: F(x*, θ) = 0) or
+    ``fixed_point_fun`` (fixed-point form: x* = T(x*, θ); the residual
+    T(x) − x is derived automatically, eq. 3) should be set before the spec
+    is used to wrap a solver.  A spec with neither is a *routing-only* spec
+    — legal to construct and pass around as a bundle of backward-solve
+    settings (e.g. ``bilevel.solve_bilevel(diff_spec=...)`` overriding an
+    ``IterativeSolver``'s own routing), but not wrappable by itself.
+
+    ``solve`` is a ``SolverSpec`` registry name (see
+    ``linear_solve.available_solvers()``) or a callable
+    ``fn(matvec, b, *, tol, maxiter, ridge)``; ``tol`` / ``maxiter`` /
+    ``ridge`` / ``precond`` are forwarded to it for BOTH the tangent system
+    ``A dx = Bθ̇`` and the cotangent system ``Aᵀ u = v``.
+
+    ``has_aux=True`` means the solver returns ``(x_star, aux)``; only
+    ``x_star`` enters the implicit system, ``aux`` gets zero derivatives
+    (both modes — the forward path emits ``float0`` tangents for integer/
+    bool aux leaves).
+
+    ``nondiff_argnums`` are indices into the solver's ``*theta`` arguments
+    (0 = first argument after ``init``) that are static non-array values —
+    Python callables, strings, hashable config.  They are passed through
+    untouched and excluded from differentiation.
+    """
+    optimality_fun: Optional[Callable] = None
+    fixed_point_fun: Optional[Callable] = None
+    solve: Union[str, Callable] = "normal_cg"
+    tol: float = 1e-6
+    maxiter: int = 1000
+    ridge: float = 0.0
+    precond: Any = None
+    has_aux: bool = False
+    nondiff_argnums: Tuple[int, ...] = ()
+
+    def __post_init__(self):
+        if self.optimality_fun is not None and \
+                self.fixed_point_fun is not None:
+            raise ValueError("provide at most one of optimality_fun / "
+                             "fixed_point_fun, not both")
+        nd = tuple(sorted(set(int(i) for i in self.nondiff_argnums)))
+        if any(i < 0 for i in nd):
+            raise ValueError("nondiff_argnums are 0-based indices into the "
+                             f"theta arguments; got {self.nondiff_argnums}")
+        object.__setattr__(self, "nondiff_argnums", nd)
+
+    @property
+    def residual_fun(self) -> Callable:
+        """The root residual F(x, *theta) this spec differentiates through."""
+        if self.optimality_fun is not None:
+            return self.optimality_fun
+        if self.fixed_point_fun is not None:
+            T = self.fixed_point_fun
+
+            def residual(x, *theta):
+                return jax.tree_util.tree_map(
+                    lambda a, b: a - b, T(x, *theta), x)
+
+            return residual
+        raise ValueError(
+            "routing-only ImplicitDiffSpec: set optimality_fun or "
+            "fixed_point_fun before wrapping a solver with it")
+
+    @property
+    def is_routing_only(self) -> bool:
+        return self.optimality_fun is None and self.fixed_point_fun is None
+
+    def replace(self, **changes) -> "ImplicitDiffSpec":
+        """A copy of the spec with ``changes`` applied (per-call overrides)."""
+        return dataclasses.replace(self, **changes)
+
+    def routing_kwargs(self) -> dict:
+        """The backward-solve routing as ``route_solve`` keyword arguments."""
+        return dict(tol=self.tol, maxiter=self.maxiter, ridge=self.ridge,
+                    precond=self.precond)
+
+
+# ---------------------------------------------------------------------------
+# low-level products with the implicit Jacobian (paper §2.1)
+# ---------------------------------------------------------------------------
+
+def root_vjp(F: Callable, x_star, theta_args: tuple, cotangent,
+             solve="normal_cg", tol: float = 1e-6, maxiter: int = 1000,
+             ridge: float = 0.0, precond=None):
+    """VJP through the implicitly-defined root: returns vᵀ ∂x*(θ) per θ arg.
+
+    Solve Aᵀ u = v  (A = -∂₁F),  then  vᵀJ = uᵀB  (B = ∂₂F).
+    One linear solve serves all theta arguments (paper §2.1).
+
+    ``solve`` is a registry name (``linear_solve.available_solvers()``) or a
+    solver callable; ``precond`` is forwarded to registry solvers (``None``,
+    a callable v ↦ M⁻¹v, or ``"jacobi"``).  Because every registry solver is
+    vmap-safe with per-instance convergence masks, a ``jax.vmap`` of this
+    function (or of an ``implicit_diff``-wrapped gradient) runs ONE batched
+    masked solve for the whole batch, not N sequential solves.
+    """
+    def f_of_x(x):
+        return F(x, *theta_args)
+
+    # vjp wrt x gives u ↦ uᵀ ∂₁F;  A = -∂₁F so Aᵀ u = -(∂₁F)ᵀ u.
+    _, vjp_x = jax.vjp(f_of_x, x_star)
+
+    def At_matvec(u):
+        (out,) = vjp_x(u)
+        return jax.tree_util.tree_map(jnp.negative, out)
+
+    u = ls.route_solve(solve, At_matvec, cotangent, tol=tol, maxiter=maxiter,
+                       ridge=ridge, precond=precond)
+
+    # uᵀ B = uᵀ ∂₂F : one more VJP, wrt the theta args.
+    def f_of_theta(*targs):
+        return F(x_star, *targs)
+
+    _, vjp_theta = jax.vjp(f_of_theta, *theta_args)
+    return vjp_theta(u)
+
+
+def root_jvp(F: Callable, x_star, theta_args: tuple, tangents: tuple,
+             solve="normal_cg", tol: float = 1e-6, maxiter: int = 1000,
+             ridge: float = 0.0, precond=None):
+    """JVP through the implicitly-defined root: J · v.
+
+    Solve A (Jv) = B v  with  Bv = ∂₂F · v  computed by one JVP of F in θ.
+    Vmap-safe (see ``root_vjp``): batching dispatches to one masked solve.
+    """
+    def f_of_theta(*targs):
+        return F(x_star, *targs)
+
+    _, Bv = jax.jvp(f_of_theta, theta_args, tangents)
+
+    def f_of_x(x):
+        return F(x, *theta_args)
+
+    def A_matvec(v):
+        _, jv = jax.jvp(f_of_x, (x_star,), (v,))
+        return jax.tree_util.tree_map(jnp.negative, jv)
+
+    return ls.route_solve(solve, A_matvec, Bv, tol=tol, maxiter=maxiter,
+                          ridge=ridge, precond=precond)
+
+
+# ---------------------------------------------------------------------------
+# shared wrapper plumbing
+# ---------------------------------------------------------------------------
+
+def _merge_theta(nondiff_idx: Tuple[int, ...], nondiff_vals, diff_vals):
+    """Reassemble the full ordered theta tuple from its split parts."""
+    nd, dv = iter(nondiff_vals), iter(diff_vals)
+    nondiff_set = set(nondiff_idx)
+    total = len(nondiff_idx) + len(diff_vals)
+    return tuple(next(nd) if i in nondiff_set else next(dv)
+                 for i in range(total))
+
+
+def _zero_tangent(primal):
+    """A zero tangent for ``primal``: zeros for inexact leaves, ``float0``
+    for integer/bool leaves (the tangent dtype JAX mandates for them)."""
+    if jnp.issubdtype(jnp.result_type(primal), jnp.inexact):
+        return jnp.zeros_like(primal)
+    return np.zeros(jnp.shape(primal), jax.dtypes.float0)
+
+
+def _aux_zero_tangents(aux):
+    return jax.tree_util.tree_map(_zero_tangent, aux)
+
+
+def _check_solver_arity(spec: ImplicitDiffSpec, n_theta: int):
+    if spec.nondiff_argnums and spec.nondiff_argnums[-1] >= n_theta:
+        raise ValueError(
+            f"nondiff_argnums {spec.nondiff_argnums} out of range for a "
+            f"solver called with {n_theta} theta argument(s)")
+
+
+def _tangent_root_solve(spec: ImplicitDiffSpec, residual: Callable, x_star,
+                        theta: tuple, nondiff_idx: Tuple[int, ...],
+                        nondiff_vals, diff_theta: tuple, diff_dot: tuple,
+                        *, transposable: bool):
+    """Solve A dx = B θ̇ for the output tangent, optionally staged so that
+    reverse mode can transpose it into the cotangent system Aᵀ u = v."""
+    def F_of_x(x):
+        return residual(x, *theta)
+
+    def F_of_diff_theta(*dts):
+        return residual(x_star, *_merge_theta(nondiff_idx, nondiff_vals, dts))
+
+    # B θ̇ : one JVP of F in the differentiable theta args (linear in θ̇,
+    # built from transposable primitives — reverse mode pulls cotangents
+    # back through it after the transpose solve).
+    _, b = jax.jvp(F_of_diff_theta, tuple(diff_theta), tuple(diff_dot))
+
+    def A_matvec(v):
+        _, jv = jax.jvp(F_of_x, (x_star,), (v,))
+        return jax.tree_util.tree_map(jnp.negative, jv)
+
+    if not transposable:
+        return ls.route_solve(spec.solve, A_matvec, b, **spec.routing_kwargs())
+
+    # The transposable system runs on ONE raveled vector, not the x pytree:
+    # jax's linear_solve transpose rule binds per-leaf cotangents without
+    # instantiating symbolic zeros, so a downstream loss touching only some
+    # x* leaves would feed Zero into the bind.  A single leaf is either
+    # fully skipped (all-zero cotangent) or fully instantiated.
+    flat_b, unravel = jax.flatten_util.ravel_pytree(b)
+
+    def flat_matvec(vf):
+        out = A_matvec(unravel(vf))
+        return jax.flatten_util.ravel_pytree(out)[0]
+
+    routing = spec.routing_kwargs()
+    if callable(routing["precond"]):
+        # user preconditioners keep their x-pytree contract
+        M = routing["precond"]
+        routing["precond"] = lambda vf: jax.flatten_util.ravel_pytree(
+            M(unravel(vf)))[0]
+
+    def registry_solve(matvec, rhs):
+        return ls.route_solve(spec.solve, matvec, rhs, **routing)
+
+    # custom_linear_solve makes the solve reverse-transposable: the declared
+    # transpose direction routes Aᵀu = v through the SAME registry solver.
+    # A symmetric-only routed solver (cg/pallas_cg) certifies A = Aᵀ, so the
+    # transpose template reuses the forward matvec directly.
+    dx_flat = lax.custom_linear_solve(
+        flat_matvec, flat_b, solve=registry_solve,
+        transpose_solve=registry_solve,
+        symmetric=ls.solver_is_symmetric(spec.solve))
+    return unravel(dx_flat)
+
+
+# ---------------------------------------------------------------------------
+# the three wrapping strategies
+# ---------------------------------------------------------------------------
+
+def _wrap_jvp(spec: ImplicitDiffSpec, solver: Callable, *,
+              transposable: bool):
+    """custom_jvp wrapping; ``transposable=True`` is the mode-polymorphic
+    form (forward AND reverse), ``False`` the forward-only form."""
+    residual = spec.residual_fun
+    nondiff_idx = spec.nondiff_argnums
+    jax_nondiff = tuple(i + 1 for i in nondiff_idx)   # shift past ``init``
+
+    @functools.wraps(solver)
+    def solver_like(init, *theta):
+        return solver(init, *theta)
+
+    fun = jax.custom_jvp(solver_like, nondiff_argnums=jax_nondiff)
+
+    def jvp_rule(*args):
+        nondiff_vals = args[:len(nondiff_idx)]
+        primals, tangents = args[len(nondiff_idx):]
+        init, *diff_theta = primals
+        _, *diff_dot = tangents          # init tangent is ignored: x*(θ)
+        theta = _merge_theta(nondiff_idx, nondiff_vals, diff_theta)
+        _check_solver_arity(spec, len(theta))
+        out = solver(init, *theta)
+        x_star = out[0] if spec.has_aux else out
+        dx = _tangent_root_solve(spec, residual, x_star, theta, nondiff_idx,
+                                 nondiff_vals, tuple(diff_theta),
+                                 tuple(diff_dot), transposable=transposable)
+        if spec.has_aux:
+            return out, (dx, _aux_zero_tangents(out[1]))
+        return out, dx
+
+    fun.defjvp(jvp_rule)
+    return fun
+
+
+def _wrap_vjp(spec: ImplicitDiffSpec, solver: Callable):
+    """custom_vjp wrapping (reverse-only)."""
+    residual = spec.residual_fun
+    nondiff_idx = spec.nondiff_argnums
+    jax_nondiff = tuple(i + 1 for i in nondiff_idx)
+
+    @functools.wraps(solver)
+    def solver_like(init, *theta):
+        return solver(init, *theta)
+
+    fun = jax.custom_vjp(solver_like, nondiff_argnums=jax_nondiff)
+
+    def fwd(*args):
+        nondiff_vals = args[:len(nondiff_idx)]
+        init, *diff_theta = args[len(nondiff_idx):]
+        theta = _merge_theta(nondiff_idx, nondiff_vals, tuple(diff_theta))
+        _check_solver_arity(spec, len(theta))
+        out = solver(init, *theta)
+        x_star = out[0] if spec.has_aux else out
+        return out, (init, x_star, tuple(diff_theta))
+
+    def bwd(*args):
+        nondiff_vals = args[:len(nondiff_idx)]
+        res, cotangent = args[len(nondiff_idx):]
+        init, x_star, diff_theta = res
+        ct = cotangent[0] if spec.has_aux else cotangent
+
+        def F_diff(x, *dts):
+            return residual(x, *_merge_theta(nondiff_idx, nondiff_vals, dts))
+
+        grads = root_vjp(F_diff, x_star, diff_theta, ct, solve=spec.solve,
+                         **spec.routing_kwargs())
+        zero_init = jax.tree_util.tree_map(jnp.zeros_like, init)
+        return (zero_init,) + tuple(grads)
+
+    fun.defvjp(fwd, bwd)
+    return fun
+
+
+# ---------------------------------------------------------------------------
+# the entry point
+# ---------------------------------------------------------------------------
+
+MODES = ("auto", "vjp", "jvp")
+
+
+def implicit_diff(spec: Union[ImplicitDiffSpec, Callable, None] = None, *,
+                  mode: str = "auto", **spec_kwargs) -> Callable:
+    """Attach implicit differentiation to a solver, per an ``ImplicitDiffSpec``.
+
+    ``implicit_diff(spec)(solver)`` returns a function with the solver's
+    signature ``(init, *theta)`` whose derivatives in every differentiable
+    ``theta`` argument come from the implicit function theorem on the
+    spec's optimality mapping — never from differentiating through the
+    solver's iterations.  ``init`` gets a zero derivative.
+
+    With the default ``mode="auto"`` the SAME wrapped function supports
+    ``jax.grad`` / ``jax.jacrev`` / ``jax.jvp`` / ``jax.jacfwd`` (and
+    ``jax.vmap`` of any of them batches the linear solve into ONE masked
+    registry solve).  ``mode="jvp"`` / ``mode="vjp"`` force a single-mode
+    wrapping (see module docstring for when to prefer them).
+
+    ``spec`` may be an ``ImplicitDiffSpec``, a bare callable (treated as
+    ``optimality_fun``), or ``None`` with the spec's fields given as
+    keyword arguments; keyword arguments on top of a spec/callable are
+    per-call overrides::
+
+        spec = ImplicitDiffSpec(optimality_fun=F, solve="cg")
+        solver = implicit_diff(spec)(my_solver)             # both modes
+        fast = implicit_diff(spec, solve="neumann", maxiter=8)(my_solver)
+
+        @implicit_diff(jax.grad(f), solve="cg")             # F shorthand
+        def ridge_solver(init, theta): ...
+    """
+    if isinstance(spec, ImplicitDiffSpec):
+        spec = spec.replace(**spec_kwargs) if spec_kwargs else spec
+    elif callable(spec):
+        spec = ImplicitDiffSpec(optimality_fun=spec, **spec_kwargs)
+    elif spec is None:
+        spec = ImplicitDiffSpec(**spec_kwargs)
+    else:
+        raise TypeError("spec must be an ImplicitDiffSpec, a callable "
+                        f"optimality_fun, or None; got {type(spec)!r}")
+    if mode not in MODES:
+        raise ValueError(f"unknown mode {mode!r}; expected one of {MODES}")
+    if spec.is_routing_only:
+        raise ValueError("routing-only ImplicitDiffSpec: set optimality_fun "
+                         "or fixed_point_fun to wrap a solver")
+
+    def wrapper(solver: Callable) -> Callable:
+        if mode == "vjp":
+            fun = _wrap_vjp(spec, solver)
+        else:
+            fun = _wrap_jvp(spec, solver, transposable=(mode == "auto"))
+        fun.spec = spec
+        fun.mode = mode
+        return fun
+
+    return wrapper

@@ -1,140 +1,57 @@
-"""Automatic implicit differentiation (the paper's core contribution).
+"""Decorator-form implicit differentiation — thin shims over ``diff_api``.
 
-Given a user-supplied optimality-condition mapping ``F(x, *theta)`` whose root
-is the solver output ``x*(theta)``, the implicit function theorem gives
+The implementation now lives in ``repro.core.diff_api``: one
+``ImplicitDiffSpec`` plus the mode-polymorphic ``implicit_diff(spec)``
+wrapper serve forward AND reverse mode from a single ``jax.custom_jvp``
+rule whose tangent solve is reverse-transposable.  This module keeps the
+paper-mirroring decorator names working on top of it:
 
-    -∂₁F(x*, θ) · ∂x*(θ) = ∂₂F(x*, θ)        i.e.   A J = B.
+  * ``@custom_root(F)``        — shim over ``implicit_diff(optimality_fun=F)``
+  * ``@custom_fixed_point(T)`` — shim over ``implicit_diff(fixed_point_fun=T)``
+  * ``root_vjp`` / ``root_jvp``— re-exported low-level products
 
-We never materialize A, B or J: JVPs/VJPs of F (obtained by autodiff) feed a
-matrix-free linear solver.
+Unlike their pre-redesign versions, the decorators now return functions
+that support ``jax.grad`` / ``jax.jacrev`` *and* ``jax.jvp`` /
+``jax.jacfwd`` without re-wrapping (they wrap in ``mode="auto"``).
 
-Public API (mirrors the paper):
+``custom_root_jvp`` / ``custom_fixed_point_jvp`` are DEPRECATED: the split
+forward-only wrappers exist only because ``jax.custom_vjp`` functions
+cannot be forward-differentiated; ``implicit_diff`` (or plain
+``custom_root``) now subsumes them.  They emit a one-shot
+``DeprecationWarning`` and gained the ``has_aux`` support they historically
+lacked.
 
-  * ``root_vjp`` / ``root_jvp``      — low-level products with ∂x*(θ)
-  * ``@custom_root(F)``              — decorator attaching implicit derivatives
-                                       to an arbitrary solver function
-  * ``@custom_fixed_point(T)``       — same, for fixed points x* = T(x*, θ)
-
-Most users never call the decorators directly anymore: the state-based
-runtime (``repro.core.solver_runtime``) self-wraps each solver's ``run()``
-with ``custom_root`` on the solver's declared optimality mapping, so
-implicit derivatives and the registry-routed backward solve (``solve=``,
-``precond=``, ``ridge=``) come for free.  The decorators remain the
-low-level composition point for hand-written solvers.
-
-Conventions: the decorated solver has signature ``solver(init, *theta)`` and
-returns ``x*``.  ``F`` has signature ``F(x, *theta)`` returning a pytree of the
-same structure as ``x``.  ``theta`` may be any number of pytree arguments;
-derivatives flow to all of them.
+Conventions: the decorated solver has signature ``solver(init, *theta)``
+and returns ``x*``.  ``F`` has signature ``F(x, *theta)`` returning a
+pytree of the same structure as ``x``.  ``theta`` may be any number of
+pytree arguments; derivatives flow to all of them.
 """
 from __future__ import annotations
 
-import functools
-import inspect
-from typing import Any, Callable, Optional
+from typing import Callable
 
-import jax
-import jax.numpy as jnp
-
-from repro.core import linear_solve as ls
+# Re-exported so ``from repro.core.implicit_diff import root_vjp`` keeps
+# working; the implementation (registry routing included) lives in diff_api.
+from repro.core.diff_api import (ImplicitDiffSpec, implicit_diff,  # noqa: F401
+                                 root_jvp, root_vjp, warn_once)
 
 
-# ---------------------------------------------------------------------------
-# Low-level products with the implicit Jacobian
-# ---------------------------------------------------------------------------
+def _spec(F=None, T=None, solve="normal_cg", tol=1e-6, maxiter=1000,
+          ridge=0.0, has_aux=False, precond=None) -> ImplicitDiffSpec:
+    return ImplicitDiffSpec(optimality_fun=F, fixed_point_fun=T, solve=solve,
+                            tol=tol, maxiter=maxiter, ridge=ridge,
+                            precond=precond, has_aux=has_aux)
 
-def _call_solver(solve, matvec, b, *, tol, maxiter, ridge, precond):
-    """Dispatch to a registry solver (with precond) or a bare callable.
-
-    Mirrors ``linear_solve.solve``'s contract: precond requires a registry
-    solver that supports it — never silently dropped.
-    """
-    if callable(solve):
-        if precond is not None:
-            raise ValueError("precond requires a registry solver name; "
-                             "bake it into the custom solve callable instead")
-        return solve(matvec, b, tol=tol, maxiter=maxiter, ridge=ridge)
-    spec = ls.get_spec(solve)
-    if precond is not None and not spec.supports_precond:
-        raise ValueError(f"solver {spec.name!r} does not support "
-                         "preconditioning; see SolverSpec.supports_precond")
-    kwargs = dict(tol=tol, maxiter=maxiter, ridge=ridge)
-    if precond is not None:
-        kwargs["precond"] = precond
-    return spec.fn(matvec, b, **kwargs)
-
-
-def root_vjp(F: Callable, x_star, theta_args: tuple, cotangent,
-             solve="normal_cg", tol: float = 1e-6, maxiter: int = 1000,
-             ridge: float = 0.0, precond=None):
-    """VJP through the implicitly-defined root: returns vᵀ ∂x*(θ) per θ arg.
-
-    Solve Aᵀ u = v  (A = -∂₁F),  then  vᵀJ = uᵀB  (B = ∂₂F).
-    One linear solve serves all theta arguments (paper §2.1).
-
-    ``solve`` is a registry name (``repro.core.linear_solve.available_solvers``)
-    or a solver callable; ``precond`` is forwarded to registry solvers
-    (``None``, a callable v ↦ M⁻¹v, or ``"jacobi"``).  Because every registry
-    solver is vmap-safe with per-instance convergence masks, a ``jax.vmap``
-    of this function (or of a ``@custom_root`` gradient) runs ONE batched
-    masked solve for the whole batch, not N sequential solves.
-    """
-    def f_of_x(x):
-        return F(x, *theta_args)
-
-    # vjp wrt x gives u ↦ uᵀ ∂₁F;  A = -∂₁F so Aᵀ u = -(∂₁F)ᵀ u.
-    _, vjp_x = jax.vjp(f_of_x, x_star)
-
-    def At_matvec(u):
-        (out,) = vjp_x(u)
-        return jax.tree_util.tree_map(jnp.negative, out)
-
-    u = _call_solver(solve, At_matvec, cotangent, tol=tol, maxiter=maxiter,
-                     ridge=ridge, precond=precond)
-
-    # uᵀ B = uᵀ ∂₂F : one more VJP, wrt the theta args.
-    def f_of_theta(*targs):
-        return F(x_star, *targs)
-
-    _, vjp_theta = jax.vjp(f_of_theta, *theta_args)
-    return vjp_theta(u)
-
-
-def root_jvp(F: Callable, x_star, theta_args: tuple, tangents: tuple,
-             solve="normal_cg", tol: float = 1e-6, maxiter: int = 1000,
-             ridge: float = 0.0, precond=None):
-    """JVP through the implicitly-defined root: J · v.
-
-    Solve A (Jv) = B v  with  Bv = ∂₂F · v  computed by one JVP of F in θ.
-    Vmap-safe (see ``root_vjp``): batching dispatches to one masked solve.
-    """
-    def f_of_theta(*targs):
-        return F(x_star, *targs)
-
-    _, Bv = jax.jvp(f_of_theta, theta_args, tangents)
-
-    def f_of_x(x):
-        return F(x, *theta_args)
-
-    def A_matvec(v):
-        _, jv = jax.jvp(f_of_x, (x_star,), (v,))
-        return jax.tree_util.tree_map(jnp.negative, jv)
-
-    return _call_solver(solve, A_matvec, Bv, tol=tol, maxiter=maxiter,
-                        ridge=ridge, precond=precond)
-
-
-# ---------------------------------------------------------------------------
-# Decorators
-# ---------------------------------------------------------------------------
 
 def custom_root(F: Callable, solve="normal_cg", tol: float = 1e-6,
                 maxiter: int = 1000, ridge: float = 0.0,
                 has_aux: bool = False, precond=None):
     """Decorator: attach implicit differentiation to ``solver(init, *theta)``.
 
-    The returned function is differentiable (reverse mode) in every ``theta``
-    argument; the ``init`` argument is treated as non-differentiable.
+    Shim over ``implicit_diff``: the returned function is differentiable in
+    every ``theta`` argument in BOTH autodiff modes (``jax.grad``/``jacrev``
+    and ``jax.jvp``/``jacfwd``); the ``init`` argument gets zero
+    derivatives.
 
     ``has_aux=True`` means the solver returns ``(x_star, aux)``; only
     ``x_star`` participates in the implicit system, ``aux`` gets zero grads.
@@ -153,33 +70,9 @@ def custom_root(F: Callable, solve="normal_cg", tol: float = 1e-6,
         @custom_root(F)
         def ridge_solver(init_x, theta): ...
     """
-    def wrapper(solver: Callable) -> Callable:
-
-        @functools.wraps(solver)
-        def solver_fwd_like(init, *theta):
-            return solver(init, *theta)
-
-        # ``init`` is a regular (possibly array) argument: it gets a zero
-        # cotangent, since x*(θ) does not depend on the initialization.
-        fun = jax.custom_vjp(solver_fwd_like)
-
-        def fwd(init, *theta):
-            out = solver(init, *theta)
-            x_star = out[0] if has_aux else out
-            return out, (init, x_star, theta)
-
-        def bwd(res, cotangent):
-            init, x_star, theta = res
-            ct = cotangent[0] if has_aux else cotangent
-            grads = root_vjp(F, x_star, theta, ct, solve=solve, tol=tol,
-                             maxiter=maxiter, ridge=ridge, precond=precond)
-            zero_init = jax.tree_util.tree_map(jnp.zeros_like, init)
-            return (zero_init,) + tuple(grads)
-
-        fun.defvjp(fwd, bwd)
-        return fun
-
-    return wrapper
+    return implicit_diff(_spec(F=F, solve=solve, tol=tol, maxiter=maxiter,
+                               ridge=ridge, has_aux=has_aux,
+                               precond=precond))
 
 
 def custom_fixed_point(T: Callable, solve="normal_cg", tol: float = 1e-6,
@@ -187,49 +80,45 @@ def custom_fixed_point(T: Callable, solve="normal_cg", tol: float = 1e-6,
                        has_aux: bool = False, precond=None):
     """Decorator for solvers of fixed points x* = T(x*, θ).
 
-    Reduces to ``custom_root`` with the residual F(x, θ) = T(x, θ) − x (eq. 3).
+    Shim over ``implicit_diff`` with the residual F(x, θ) = T(x, θ) − x
+    (eq. 3); both autodiff modes supported, like ``custom_root``.
     """
-    def F(x, *theta):
-        tx = T(x, *theta)
-        return jax.tree_util.tree_map(lambda a, b: a - b, tx, x)
-
-    return custom_root(F, solve=solve, tol=tol, maxiter=maxiter,
-                       ridge=ridge, has_aux=has_aux, precond=precond)
+    return implicit_diff(_spec(T=T, solve=solve, tol=tol, maxiter=maxiter,
+                               ridge=ridge, has_aux=has_aux,
+                               precond=precond))
 
 
 # ---------------------------------------------------------------------------
-# Forward-mode wrapper: a solver with custom JVP (for jax.jacfwd / jvp use).
-# jax.custom_vjp functions do not support forward mode, so we expose a
-# separate wrapper for JVP-dominant workloads (e.g. few parameters, many
-# outputs — the molecular dynamics sensitivity experiment).
+# DEPRECATED forward-only wrappers (subsumed by implicit_diff / custom_root)
 # ---------------------------------------------------------------------------
 
 def custom_root_jvp(F: Callable, solve="normal_cg", tol: float = 1e-6,
-                    maxiter: int = 1000, ridge: float = 0.0, precond=None):
-    """Like ``custom_root`` but registers a JVP rule (forward mode only)."""
-    def wrapper(solver: Callable) -> Callable:
+                    maxiter: int = 1000, ridge: float = 0.0, precond=None,
+                    has_aux: bool = False):
+    """DEPRECATED: ``custom_root`` (and ``implicit_diff``) now support
+    forward mode directly; this separate wrapper is redundant.
 
-        @jax.custom_jvp
-        def fun(init, *theta):
-            return solver(init, *theta)
-
-        @fun.defjvp
-        def jvp(primals, tangents):
-            init, *theta = primals
-            _, *theta_dot = tangents
-            x_star = solver(init, *theta)
-            dx = root_jvp(F, x_star, tuple(theta), tuple(theta_dot),
-                          solve=solve, tol=tol, maxiter=maxiter, ridge=ridge,
-                          precond=precond)
-            return x_star, dx
-
-        return fun
-
-    return wrapper
+    Kept as a forward-only shim (``mode="jvp"``) preserving its historical
+    contract — a pure ``jax.custom_jvp`` function with no reverse rule —
+    plus the ``has_aux`` support it previously lacked.
+    """
+    warn_once("custom_root_jvp",
+              "repro.core.implicit_diff.custom_root_jvp is deprecated; "
+              "custom_root / implicit_diff now support forward mode "
+              "(jax.jvp / jax.jacfwd) directly")
+    return implicit_diff(_spec(F=F, solve=solve, tol=tol, maxiter=maxiter,
+                               ridge=ridge, has_aux=has_aux,
+                               precond=precond), mode="jvp")
 
 
-def custom_fixed_point_jvp(T: Callable, **kw):
-    def F(x, *theta):
-        tx = T(x, *theta)
-        return jax.tree_util.tree_map(lambda a, b: a - b, tx, x)
-    return custom_root_jvp(F, **kw)
+def custom_fixed_point_jvp(T: Callable, solve="normal_cg", tol: float = 1e-6,
+                           maxiter: int = 1000, ridge: float = 0.0,
+                           precond=None, has_aux: bool = False):
+    """DEPRECATED: see ``custom_root_jvp``; use ``custom_fixed_point``."""
+    warn_once("custom_fixed_point_jvp",
+              "repro.core.implicit_diff.custom_fixed_point_jvp is "
+              "deprecated; custom_fixed_point / implicit_diff now support "
+              "forward mode (jax.jvp / jax.jacfwd) directly")
+    return implicit_diff(_spec(T=T, solve=solve, tol=tol, maxiter=maxiter,
+                               ridge=ridge, has_aux=has_aux,
+                               precond=precond), mode="jvp")

@@ -13,13 +13,21 @@ declares the fixed-point mapping and routes its backward linear solve
 through the ``SolverSpec`` registry: Neumann (cheap, approximate) or
 normal-CG (exact), mirroring the trade-offs in the implicit-deep-nets
 literature the paper cites [8, 43, 44].
+
+Solve routing can also be passed as one ``ImplicitDiffSpec`` (``diff_spec``,
+routing-only: the layer's optimality mapping is always the cell's fixed
+point) instead of loose keyword arguments, and ``mode`` selects the
+differentiation wrapping — the default ``"auto"`` makes the equilibrium
+differentiable in BOTH autodiff modes, so ``jax.jacfwd`` sensitivities of
+z* with respect to a few scalar inputs cost one tangent solve each.
 """
 from __future__ import annotations
 
-from typing import Callable
+from typing import Callable, Optional
 
 import jax.numpy as jnp
 
+from repro.core.diff_api import ImplicitDiffSpec
 from repro.core.solver_runtime import (AndersonAcceleration,
                                        FixedPointIteration)
 
@@ -27,14 +35,32 @@ from repro.core.solver_runtime import (AndersonAcceleration,
 def make_deq_solver(cell: Callable, *, fwd_solver: str = "anderson",
                     fwd_iters: int = 30, fwd_tol: float = 1e-5,
                     bwd_solve: str = "neumann", bwd_iters: int = 12,
-                    ridge: float = 0.0, precond=None):
+                    ridge: float = 0.0, precond=None,
+                    diff_spec: Optional[ImplicitDiffSpec] = None,
+                    mode: Optional[str] = None):
     """Build the runtime solver for z* = cell(z*, x, w).
 
     Returns an ``IterativeSolver`` whose ``run(z0, x, w)`` yields
-    ``(z_star, OptInfo)`` with gradients flowing to ``x`` and ``w``.
+    ``(z_star, OptInfo)`` with derivatives flowing to ``x`` and ``w`` in
+    both autodiff modes.  ``diff_spec`` (routing-only) replaces the loose
+    ``bwd_solve`` / ``bwd_iters`` / ``ridge`` / ``precond`` arguments
+    wholesale; the cell's fixed point is always the optimality mapping.
     """
-    kw = dict(maxiter=fwd_iters, tol=fwd_tol, solve=bwd_solve,
-              linsolve_maxiter=bwd_iters, ridge=ridge, precond=precond)
+    if diff_spec is not None:
+        if not diff_spec.is_routing_only:
+            raise ValueError(
+                "the DEQ layer's optimality mapping is the cell's fixed "
+                "point; pass a routing-only ImplicitDiffSpec (no "
+                "optimality_fun/fixed_point_fun)")
+        kw = dict(maxiter=fwd_iters, tol=fwd_tol, solve=diff_spec.solve,
+                  linsolve_tol=diff_spec.tol,
+                  linsolve_maxiter=diff_spec.maxiter, ridge=diff_spec.ridge,
+                  precond=diff_spec.precond)
+    else:
+        kw = dict(maxiter=fwd_iters, tol=fwd_tol, solve=bwd_solve,
+                  linsolve_maxiter=bwd_iters, ridge=ridge, precond=precond)
+    if mode is not None:
+        kw["mode"] = mode
     if fwd_solver == "anderson":
         return AndersonAcceleration(cell, **kw)
     if fwd_solver == "iteration":
@@ -46,16 +72,20 @@ def make_deq_solver(cell: Callable, *, fwd_solver: str = "anderson",
 def deq_fixed_point(cell: Callable, z_init, x, w, *,
                     fwd_solver: str = "anderson", fwd_iters: int = 30,
                     fwd_tol: float = 1e-5, bwd_solve: str = "neumann",
-                    bwd_iters: int = 12, return_info: bool = False):
+                    bwd_iters: int = 12,
+                    diff_spec: Optional[ImplicitDiffSpec] = None,
+                    mode: Optional[str] = None, return_info: bool = False):
     """Solve z* = cell(z*, x, w) and register implicit derivatives wrt x, w.
 
     Returns z* (and the solve's ``OptInfo`` when ``return_info=True``).
-    Gradients flow to both ``x`` (previous activations) and ``w`` (the
-    block's weights); ``z_init`` gets zero gradient.
+    Derivatives flow to both ``x`` (previous activations) and ``w`` (the
+    block's weights) in both autodiff modes; ``z_init`` gets zero
+    derivatives.  ``diff_spec`` / ``mode`` forward to ``make_deq_solver``.
     """
     solver = make_deq_solver(cell, fwd_solver=fwd_solver,
                              fwd_iters=fwd_iters, fwd_tol=fwd_tol,
-                             bwd_solve=bwd_solve, bwd_iters=bwd_iters)
+                             bwd_solve=bwd_solve, bwd_iters=bwd_iters,
+                             diff_spec=diff_spec, mode=mode)
     z_star, info = solver.run(z_init, x, w)
     return (z_star, info) if return_info else z_star
 

@@ -762,6 +762,48 @@ def get_solver(name_or_fn):
     return get_spec(name_or_fn).fn
 
 
+def solver_is_symmetric(name_or_fn) -> bool:
+    """True when the routed solver asserts a symmetric operator.
+
+    The implicit-diff layer uses this as its transpose hook: for a
+    symmetric-only solver (``cg``, ``pallas_cg``) the tangent system
+    ``A dx = b`` and the cotangent system ``Aᵀ u = v`` share one operator,
+    so the reverse-transposable tangent solve can reuse the forward matvec
+    instead of transposing it.  Custom callables conservatively report
+    False (general A).
+    """
+    if callable(name_or_fn):
+        return False
+    return get_spec(name_or_fn).symmetric_only
+
+
+def route_solve(solve, matvec, b, *, tol: float = 1e-6, maxiter: int = 1000,
+                ridge: float = 0.0, precond=None):
+    """Route one instance-shaped solve to a registry solver or a callable.
+
+    The single dispatch point the differentiation layer calls for both the
+    tangent (``A dx = b``) and cotangent (``Aᵀ u = v``) systems — ``solve``
+    is a registry name or a bare callable ``fn(matvec, b, tol, maxiter,
+    ridge)``.  Mirrors ``solve()``'s contract: ``precond`` requires a
+    registry solver that supports it and is never silently dropped.
+    Vmap-safe like every registry solver: batched tracers dispatch ONE
+    masked solve for the whole batch.
+    """
+    if callable(solve):
+        if precond is not None:
+            raise ValueError("precond requires a registry solver name; "
+                             "bake it into the custom solve callable instead")
+        return solve(matvec, b, tol=tol, maxiter=maxiter, ridge=ridge)
+    spec = get_spec(solve)
+    if precond is not None and not spec.supports_precond:
+        raise ValueError(f"solver {spec.name!r} does not support "
+                         "preconditioning; see SolverSpec.supports_precond")
+    kwargs = dict(tol=tol, maxiter=maxiter, ridge=ridge)
+    if precond is not None:
+        kwargs["precond"] = precond
+    return spec.fn(matvec, b, **kwargs)
+
+
 register_solver("cg", solve_cg, symmetric_only=True, supports_precond=True,
                 description="conjugate gradient (A symmetric PSD)")
 register_solver("normal_cg", solve_normal_cg, supports_precond=True,

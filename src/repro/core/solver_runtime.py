@@ -39,7 +39,7 @@ import jax.flatten_util
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import implicit_diff, optimality
+from repro.core import diff_api, optimality
 # tree math shared with the linear-solve engine (instance-shaped: the
 # runtime never carries an explicit batch axis — vmap supplies it)
 from repro.core.linear_solve import _tree_l2, _tree_sub
@@ -110,15 +110,27 @@ class IterativeSolver:
 
     ``run(init_params, *theta) -> (params, OptInfo)`` then drives the solve
     in one ``lax.while_loop`` with per-instance convergence masks and, when
-    ``implicit_diff=True`` (default), attaches implicit derivatives via
-    ``custom_root`` on the declared optimality mapping.  The backward linear
-    solve goes through the ``SolverSpec`` registry: ``solve`` names the
-    registry solver (or is a callable), and ``precond`` / ``ridge`` /
-    ``linsolve_tol`` / ``linsolve_maxiter`` are forwarded to it.
+    ``implicit_diff=True`` (default), attaches implicit derivatives by
+    self-wrapping with the mode-polymorphic ``diff_api.implicit_diff`` on
+    the declared optimality mapping (see ``diff_spec()``).  The backward/
+    tangent linear solve goes through the ``SolverSpec`` registry:
+    ``solve`` names the registry solver (or is a callable), and ``precond``
+    / ``ridge`` / ``linsolve_tol`` / ``linsolve_maxiter`` are forwarded.
+
+    ``mode`` selects the differentiation wrapping (overridable per call via
+    ``run(..., mode=...)``):
+
+      * ``"auto"`` (default) — one wrapper serving BOTH modes: ``jax.grad``
+        / ``jacrev`` AND ``jax.jvp`` / ``jacfwd`` work on the same
+        ``run()``;
+      * ``"jvp"`` — forward-only (few parameters, many outputs — e.g. the
+        MD sensitivity workload);
+      * ``"vjp"`` — reverse-only (many parameters, scalar outer losses).
     """
     maxiter: int = _kw(1000)
     tol: float = _kw(1e-8)
     implicit_diff: bool = _kw(True)
+    mode: str = _kw("auto")
     solve: Union[str, Callable] = _kw("normal_cg")
     linsolve_tol: float = _kw(1e-6)
     linsolve_maxiter: int = _kw(1000)
@@ -175,21 +187,33 @@ class IterativeSolver:
                        converged=state.error <= self.tol)
         return params, info
 
-    def run(self, init_params, *theta):
+    def diff_spec(self) -> diff_api.ImplicitDiffSpec:
+        """The solver's ``ImplicitDiffSpec``: its declared optimality
+        mapping plus its configured backward-solve routing.  ``run()``
+        self-wraps with this; drivers (``bilevel``, the DEQ layer) may
+        override routing fields per call via ``spec.replace(...)``."""
+        return diff_api.ImplicitDiffSpec(
+            optimality_fun=self.optimality_fun, solve=self.solve,
+            tol=self.linsolve_tol, maxiter=self.linsolve_maxiter,
+            ridge=self.ridge, precond=self.precond, has_aux=True)
+
+    def run(self, init_params, *theta, mode: str = None):
         """Solve from ``init_params``; returns ``(params, OptInfo)``.
 
         Differentiable in every ``theta`` argument via implicit
         differentiation of the declared optimality mapping (``init_params``
-        gets zero gradient; ``OptInfo`` is non-differentiable aux).
-        ``jax.vmap`` over ``run`` (or its gradient) batches the forward loop
-        AND the backward linear solve — each is one masked while_loop.
+        gets zero gradient; ``OptInfo`` is non-differentiable aux).  With
+        the default ``mode="auto"`` the same ``run`` supports reverse
+        (``jax.grad``/``jacrev``) AND forward (``jax.jvp``/``jacfwd``)
+        differentiation; ``mode`` (keyword) overrides the instance setting
+        per call.  ``jax.vmap`` over ``run`` (or either mode's derivative)
+        batches the forward loop AND the backward/tangent linear solve —
+        each is one masked while_loop.
         """
         if not self.implicit_diff:
             return self._iterate(init_params, *theta)
-        deco = implicit_diff.custom_root(
-            self.optimality_fun, solve=self.solve, tol=self.linsolve_tol,
-            maxiter=self.linsolve_maxiter, ridge=self.ridge,
-            precond=self.precond, has_aux=True)
+        deco = diff_api.implicit_diff(
+            self.diff_spec(), mode=self.mode if mode is None else mode)
         return deco(self._iterate)(init_params, *theta)
 
     def l2_optimality_error(self, params, *theta):

@@ -28,10 +28,10 @@ Migration map:
 """
 from __future__ import annotations
 
-import warnings
 from typing import Callable
 
 from repro.core import optimality
+from repro.core.diff_api import warn_once
 from repro.core.solver_runtime import (AndersonAcceleration,
                                        BlockCoordinateDescent,
                                        FixedPointIteration, GradientDescent,
@@ -46,11 +46,15 @@ __all__ = [
 
 
 def _deprecated(old: str, new: str):
-    warnings.warn(
+    # one-shot per factory name (see diff_api.warn_once): a training loop
+    # calling a legacy factory every step warns once, not per call.  Tests
+    # asserting the warning reset via diff_api.reset_deprecation_warnings().
+    warn_once(
+        f"solvers.{old}",
         f"repro.core.solvers.{old} is deprecated; use "
         f"repro.core.solver_runtime.{new} (state-based runtime with "
         "automatic implicit differentiation) instead",
-        DeprecationWarning, stacklevel=3)
+        stacklevel=4)
 
 
 def fixed_point_iteration(T: Callable, init, *theta, maxiter: int = 1000,

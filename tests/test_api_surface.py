@@ -1,0 +1,84 @@
+"""Public-API surface snapshot for ``repro.core``.
+
+The implicit-diff API redesign touches every layer of the package; this
+snapshot pins the re-exported surface so an accidental rename, a dropped
+re-export, or an unintended new public name fails CI immediately (the
+fast lane runs this file first).  Update ``EXPECTED_SURFACE`` *explicitly*
+when the public API changes on purpose — the diff then documents the
+change in review.
+"""
+import importlib
+
+import repro.core
+
+
+# Names intentionally re-exported from repro.core (functions/classes), plus
+# the submodules that importing repro.core necessarily binds on the package.
+EXPECTED_SURFACE = {
+    # implicit-diff API (mode-polymorphic)
+    "ImplicitDiffSpec", "implicit_diff",
+    "custom_root", "custom_fixed_point",
+    "custom_root_jvp", "custom_fixed_point_jvp",      # deprecated shims
+    "root_vjp", "root_jvp",
+    # solver runtime
+    "IterativeSolver", "OptInfo",
+    "GradientDescent", "ProximalGradient", "ProjectedGradient",
+    "MirrorDescent", "BlockCoordinateDescent", "Newton", "LBFGS",
+    "FixedPointIteration", "AndersonAcceleration",
+    # batched linear-solve engine
+    "solve", "SolverSpec", "SolveInfo",
+    "register_solver", "get_solver", "get_spec", "available_solvers",
+    "jacobi_preconditioner",
+    "solve_cg", "solve_normal_cg", "solve_bicgstab", "solve_gmres",
+    "solve_dense_gmres", "solve_lu", "solve_neumann",
+    # DEQ layer
+    "deq_fixed_point", "make_deq_block", "make_deq_solver",
+    # submodules bound on the package by importing repro.core
+    "bilevel", "diff_api", "implicit_layer", "linear_solve", "optimality",
+    "projections", "prox", "solver_runtime", "solvers",
+}
+
+
+def test_core_public_surface_matches_snapshot():
+    public = {n for n in dir(repro.core) if not n.startswith("_")}
+    missing = EXPECTED_SURFACE - public
+    unexpected = public - EXPECTED_SURFACE
+    assert not missing, f"public names dropped from repro.core: {missing}"
+    assert not unexpected, \
+        f"new public names on repro.core (extend the snapshot): {unexpected}"
+
+
+def test_implicit_diff_is_the_entry_point_not_the_module():
+    """``repro.core.implicit_diff`` is the mode-polymorphic wrapper function
+    (the submodule of the same name stays importable by full path)."""
+    assert callable(repro.core.implicit_diff)
+    assert not isinstance(repro.core.implicit_diff, type(importlib))
+    module = importlib.import_module("repro.core.implicit_diff")
+    assert module.implicit_diff is repro.core.implicit_diff
+
+
+def test_registry_snapshot():
+    """The built-in linear-solver registry — implicit-diff routing depends
+    on these names (and their symmetry flags feed the transpose hook)."""
+    assert repro.core.available_solvers() == [
+        "bicgstab", "cg", "dense_gmres", "gmres", "lu", "neumann",
+        "normal_cg", "pallas_cg"]
+    from repro.core import linear_solve as ls
+    assert ls.solver_is_symmetric("cg")
+    assert ls.solver_is_symmetric("pallas_cg")
+    assert not ls.solver_is_symmetric("normal_cg")
+    assert not ls.solver_is_symmetric("gmres")
+
+
+def test_runtime_solvers_expose_diff_spec():
+    """Every runtime solver can describe itself as an ImplicitDiffSpec."""
+    import jax.numpy as jnp
+    solver = repro.core.GradientDescent(
+        lambda x, t: jnp.sum((x - t) ** 2), solve="cg", linsolve_tol=1e-9,
+        ridge=1e-12)
+    spec = solver.diff_spec()
+    assert isinstance(spec, repro.core.ImplicitDiffSpec)
+    assert spec.solve == "cg"
+    assert spec.tol == 1e-9
+    assert spec.ridge == 1e-12
+    assert spec.has_aux       # run() returns (params, OptInfo)

@@ -1,0 +1,629 @@
+"""Tests for the mode-polymorphic implicit-diff API (``repro.core.diff_api``).
+
+Covers the redesign's acceptance criteria:
+  * ONE ``implicit_diff``-wrapped solver supports ``jax.grad``,
+    ``jax.jacrev``, ``jax.jvp`` and ``jax.jacfwd`` without re-wrapping,
+    with ``jacfwd``/``jacrev`` agreement on ridge regression and a
+    fixed-point problem;
+  * ``jax.vmap`` of either mode's derivative EXECUTES exactly one batched
+    masked registry solve (counting assertion), matching the python loop;
+  * ``solver_runtime.run(mode="jvp")`` works for every ported solver class
+    (finite-difference checks);
+  * the forward path supports ``has_aux`` (historically missing from
+    ``custom_root_jvp``);
+  * the deprecated names warn exactly once per process;
+  * spec validation, per-call overrides, ``nondiff_argnums``, and the
+    bilevel/DEQ ``diff_spec`` plumbing.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (FixedPointIteration, GradientDescent, ImplicitDiffSpec,
+                        implicit_diff)
+from repro.core import linear_solve as ls
+from repro.core import bilevel, diff_api
+
+
+def _ridge_problem(key, m=20, d=5):
+    kx, ky = jax.random.split(key)
+    X = jax.random.normal(kx, (m, d))
+    y = jax.random.normal(ky, (m,))
+    return X, y
+
+
+def _ridge_closed_form_jac(X, y, theta):
+    d = X.shape[1]
+    A = X.T @ X + theta * jnp.eye(d)
+    return -jnp.linalg.solve(A, jnp.linalg.solve(A, X.T @ y))
+
+
+def _make_wrapped_ridge(X, y, **spec_kw):
+    d = X.shape[1]
+
+    def f(x, theta):
+        r = X @ x - y
+        return (jnp.sum(r ** 2) + theta * jnp.sum(x ** 2)) / 2
+
+    spec = ImplicitDiffSpec(optimality_fun=jax.grad(f, argnums=0),
+                            tol=1e-12, **spec_kw)
+
+    @implicit_diff(spec)
+    def solver(init, theta):
+        del init
+        return jnp.linalg.solve(X.T @ X + theta * jnp.eye(d), X.T @ y)
+
+    return solver
+
+
+class TestModePolymorphic:
+    """The tentpole: one wrapper, all four transforms, no re-wrapping."""
+
+    def test_all_four_transforms_one_wrapper(self, rng):
+        X, y = _ridge_problem(rng)
+        solver = _make_wrapped_ridge(X, y)
+        Jtrue = _ridge_closed_form_jac(X, y, 10.0)
+        x_star = solver(None, 10.0)
+
+        g = jax.grad(lambda t: jnp.sum(solver(None, t) ** 2))(10.0)
+        np.testing.assert_allclose(g, 2 * x_star @ Jtrue, atol=1e-7)
+
+        Jr = jax.jacrev(solver, argnums=1)(None, 10.0)
+        np.testing.assert_allclose(Jr, Jtrue, atol=1e-7)
+
+        Jf = jax.jacfwd(solver, argnums=1)(None, 10.0)
+        np.testing.assert_allclose(Jf, Jtrue, atol=1e-7)
+
+        _, jv = jax.jvp(lambda t: solver(None, t), (10.0,), (1.0,))
+        np.testing.assert_allclose(jv, Jtrue, atol=1e-7)
+
+    def test_jacfwd_jacrev_agree_ridge(self, rng):
+        """Acceptance: forward/reverse agreement to 1e-5 (ridge)."""
+        X, y = _ridge_problem(rng, m=25, d=7)
+        solver = _make_wrapped_ridge(X, y)
+        Jf = jax.jacfwd(solver, argnums=1)(None, 3.0)
+        Jr = jax.jacrev(solver, argnums=1)(None, 3.0)
+        np.testing.assert_allclose(Jf, Jr, atol=1e-5, rtol=1e-5)
+
+    def test_jacfwd_jacrev_agree_fixed_point(self, rng):
+        """Acceptance: forward/reverse agreement to 1e-5 (fixed point)."""
+        M = 0.4 * jax.random.orthogonal(rng, 6)
+
+        def T(x, theta):
+            return M @ x + jnp.tanh(theta)
+
+        spec = ImplicitDiffSpec(fixed_point_fun=T, tol=1e-12)
+
+        @implicit_diff(spec)
+        def solver(init, theta):
+            return jnp.linalg.solve(jnp.eye(6) - M, jnp.tanh(theta))
+
+        theta = jnp.linspace(-1.0, 1.0, 6)
+        Jf = jax.jacfwd(solver, argnums=1)(jnp.zeros(6), theta)
+        Jr = jax.jacrev(solver, argnums=1)(jnp.zeros(6), theta)
+        np.testing.assert_allclose(Jf, Jr, atol=1e-5, rtol=1e-5)
+        Jtrue = jnp.linalg.inv(jnp.eye(6) - M) @ jnp.diag(
+            1.0 / jnp.cosh(theta) ** 2)
+        np.testing.assert_allclose(Jf, Jtrue, atol=1e-7)
+
+    def test_jit_and_zero_init_grad(self, rng):
+        X, y = _ridge_problem(rng)
+        solver = _make_wrapped_ridge(X, y)
+        g = jax.jit(jax.grad(lambda t: jnp.sum(solver(None, t) ** 2)))(10.0)
+        assert jnp.isfinite(g)
+        gi = jax.grad(lambda i: jnp.sum(solver(i, 10.0) + 0.0 * i))(
+            jnp.ones(X.shape[1]))
+        np.testing.assert_allclose(gi, 0.0, atol=1e-12)
+
+    def test_pytree_theta_partial_output_use(self, rng):
+        """Regression: a loss touching only SOME x* leaves must not feed
+        symbolic-zero cotangents into the transpose (the raveled-system
+        guarantee), and forward mode must agree."""
+        def F(x, theta):
+            return {"a": 2.0 * x["a"] - theta["p"],
+                    "b": 3.0 * x["b"] - theta["q"]}
+
+        @implicit_diff(F, tol=1e-12)
+        def solver(init, theta):
+            return {"a": theta["p"] / 2.0, "b": theta["q"] / 3.0}
+
+        theta = {"p": jnp.ones(3), "q": jnp.ones(2)}
+        g = jax.grad(lambda t: jnp.sum(solver(None, t)["a"]))(theta)
+        np.testing.assert_allclose(g["p"], 0.5, atol=1e-9)
+        np.testing.assert_allclose(g["q"], 0.0, atol=1e-9)
+        _, jv = jax.jvp(lambda t: solver(None, t),
+                        (theta,), ({"p": jnp.ones(3), "q": jnp.zeros(2)},))
+        np.testing.assert_allclose(jv["a"], 0.5, atol=1e-9)
+        np.testing.assert_allclose(jv["b"], 0.0, atol=1e-9)
+
+
+class TestVmapCounting:
+    """Acceptance: vmap of either mode's derivative executes ONE batched
+    masked solve through the registry — never N per-instance solves."""
+
+    def _counting_ridge(self, rng, traced, executed):
+        X, y = _ridge_problem(rng, m=16, d=4)
+
+        def counting_cg(matvec, b, **kw):
+            traced.append(1)
+            jax.debug.callback(lambda _: executed.append(1), jnp.zeros(()))
+            return ls.solve_cg(matvec, b, **kw)
+
+        ls.register_solver("counting_cg_api", counting_cg,
+                           symmetric_only=True, supports_precond=True)
+        return _make_wrapped_ridge(X, y, solve="counting_cg_api")
+
+    def test_vmap_grad_executes_one_batched_solve(self, rng):
+        traced, executed = [], []
+        solver = self._counting_ridge(rng, traced, executed)
+        try:
+            loss = lambda t: jnp.sum(solver(None, t) ** 2)
+            thetas = jnp.array([0.5, 1.0, 2.0, 4.0])
+            executed.clear()
+            g_vmap = jax.vmap(jax.grad(loss))(thetas)
+            jax.effects_barrier()
+            assert len(executed) == 1, \
+                f"expected ONE batched backward solve, ran {len(executed)}"
+            # trace census: one staged template per direction, constant in B
+            assert len(traced) == 2
+            executed.clear()
+            g_loop = jnp.stack([jax.grad(loss)(t) for t in thetas])
+            jax.effects_barrier()
+            assert len(executed) == len(thetas)
+        finally:
+            ls._REGISTRY.pop("counting_cg_api", None)
+        np.testing.assert_allclose(g_vmap, g_loop, rtol=1e-12)
+
+    def test_vmap_jvp_executes_one_batched_solve(self, rng):
+        traced, executed = [], []
+        solver = self._counting_ridge(rng, traced, executed)
+        try:
+            deriv = lambda t: jax.jvp(lambda tt: solver(None, tt),
+                                      (t,), (1.0,))[1]
+            thetas = jnp.array([0.5, 1.0, 2.0, 4.0])
+            executed.clear()
+            jv_vmap = jax.vmap(deriv)(thetas)
+            jax.effects_barrier()
+            assert len(executed) == 1, \
+                f"expected ONE batched tangent solve, ran {len(executed)}"
+            executed.clear()
+            jv_loop = jnp.stack([deriv(t) for t in thetas])
+            jax.effects_barrier()
+            assert len(executed) == len(thetas)
+        finally:
+            ls._REGISTRY.pop("counting_cg_api", None)
+        np.testing.assert_allclose(jv_vmap, jv_loop, rtol=1e-12)
+
+
+class TestForcedModes:
+    """mode="jvp"/"vjp" force single-mode wrappings with the historical
+    contracts (the other transform raises)."""
+
+    def test_jvp_mode_forward_only(self, rng):
+        X, y = _ridge_problem(rng)
+        solver = _make_wrapped_ridge(X, y)
+        fwd_only = implicit_diff(solver.spec, mode="jvp")(
+            lambda init, t: jnp.linalg.solve(
+                X.T @ X + t * jnp.eye(X.shape[1]), X.T @ y))
+        Jf = jax.jacfwd(fwd_only, argnums=1)(None, 3.0)
+        np.testing.assert_allclose(Jf, _ridge_closed_form_jac(X, y, 3.0),
+                                   atol=1e-7)
+        # the forward-only wrapping has no transpose path: reverse mode
+        # fails on the non-transposable registry while_loop
+        with pytest.raises((TypeError, ValueError)):
+            jax.grad(lambda t: jnp.sum(fwd_only(None, t) ** 2))(3.0)
+
+    def test_vjp_mode_reverse_only(self, rng):
+        X, y = _ridge_problem(rng)
+        spec = ImplicitDiffSpec(
+            optimality_fun=jax.grad(
+                lambda x, t: 0.5 * jnp.sum((X @ x - y) ** 2)
+                + 0.5 * t * jnp.sum(x ** 2), argnums=0), tol=1e-12)
+        rev_only = implicit_diff(spec, mode="vjp")(
+            lambda init, t: jnp.linalg.solve(
+                X.T @ X + t * jnp.eye(X.shape[1]), X.T @ y))
+        Jr = jax.jacrev(rev_only, argnums=1)(None, 3.0)
+        np.testing.assert_allclose(Jr, _ridge_closed_form_jac(X, y, 3.0),
+                                   atol=1e-7)
+        with pytest.raises(TypeError):
+            jax.jvp(lambda t: rev_only(None, t), (3.0,), (1.0,))
+
+
+class TestHasAuxForward:
+    """Satellite: the forward-mode path supports has_aux (historically
+    missing from custom_root_jvp / custom_fixed_point_jvp)."""
+
+    def _aux_solver(self, X, y, mode):
+        def f(x, t):
+            return 0.5 * jnp.sum((X @ x - y) ** 2) + 0.5 * t * jnp.sum(x ** 2)
+
+        spec = ImplicitDiffSpec(optimality_fun=jax.grad(f, argnums=0),
+                                tol=1e-12, has_aux=True)
+
+        @implicit_diff(spec, mode=mode)
+        def solver(init, theta):
+            d = X.shape[1]
+            x = jnp.linalg.solve(X.T @ X + theta * jnp.eye(d), X.T @ y)
+            return x, {"iters": jnp.asarray(3), "resid": jnp.asarray(0.5)}
+
+        return solver
+
+    @pytest.mark.parametrize("mode", ["auto", "jvp"])
+    def test_jacfwd_with_aux(self, rng, mode):
+        X, y = _ridge_problem(rng)
+        solver = self._aux_solver(X, y, mode)
+        Jf = jax.jacfwd(lambda t: solver(None, t)[0])(10.0)
+        np.testing.assert_allclose(Jf, _ridge_closed_form_jac(X, y, 10.0),
+                                   atol=1e-7)
+        (x, aux), (dx, daux) = jax.jvp(lambda t: solver(None, t),
+                                       (10.0,), (1.0,))
+        assert int(aux["iters"]) == 3
+        # aux tangents are zero: float0 for ints, 0.0 for floats
+        assert daux["iters"].dtype == jax.dtypes.float0
+        np.testing.assert_allclose(daux["resid"], 0.0)
+
+    def test_auto_mode_aux_reverse_too(self, rng):
+        X, y = _ridge_problem(rng)
+        solver = self._aux_solver(X, y, "auto")
+        g = jax.grad(lambda t: jnp.sum(solver(None, t)[0] ** 2))(10.0)
+        x_star = solver(None, 10.0)[0]
+        Jtrue = _ridge_closed_form_jac(X, y, 10.0)
+        np.testing.assert_allclose(g, 2 * x_star @ Jtrue, atol=1e-7)
+
+    def test_custom_root_jvp_shim_has_aux(self, rng):
+        from repro.core import custom_root_jvp
+        X, y = _ridge_problem(rng)
+        F = jax.grad(lambda x, t: 0.5 * jnp.sum((X @ x - y) ** 2)
+                     + 0.5 * t * jnp.sum(x ** 2), argnums=0)
+
+        @custom_root_jvp(F, tol=1e-12, has_aux=True)
+        def solver(init, theta):
+            d = X.shape[1]
+            x = jnp.linalg.solve(X.T @ X + theta * jnp.eye(d), X.T @ y)
+            return x, jnp.asarray(7)
+
+        Jf = jax.jacfwd(lambda t: solver(None, t)[0])(10.0)
+        np.testing.assert_allclose(Jf, _ridge_closed_form_jac(X, y, 10.0),
+                                   atol=1e-7)
+
+
+class TestSpecValidation:
+
+    def test_both_mappings_rejected(self):
+        with pytest.raises(ValueError, match="at most one"):
+            ImplicitDiffSpec(optimality_fun=lambda x: x,
+                             fixed_point_fun=lambda x: x)
+
+    def test_routing_only_spec_cannot_wrap(self):
+        spec = ImplicitDiffSpec(solve="cg", tol=1e-9)
+        assert spec.is_routing_only
+        with pytest.raises(ValueError, match="routing-only"):
+            implicit_diff(spec)
+
+    def test_unknown_mode_rejected(self):
+        with pytest.raises(ValueError, match="mode"):
+            implicit_diff(lambda x, t: x - t, mode="sideways")
+
+    def test_negative_nondiff_argnums_rejected(self):
+        with pytest.raises(ValueError, match="nondiff_argnums"):
+            ImplicitDiffSpec(optimality_fun=lambda x, t: x - t,
+                             nondiff_argnums=(-1,))
+
+    def test_per_call_override(self, rng):
+        X, y = _ridge_problem(rng)
+        base = ImplicitDiffSpec(
+            optimality_fun=jax.grad(
+                lambda x, t: 0.5 * jnp.sum((X @ x - y) ** 2)
+                + 0.5 * t * jnp.sum(x ** 2), argnums=0), solve="cg")
+        wrapped = implicit_diff(base, solve="bicgstab", tol=1e-11)(
+            lambda init, t: jnp.linalg.solve(
+                X.T @ X + t * jnp.eye(X.shape[1]), X.T @ y))
+        assert wrapped.spec.solve == "bicgstab"
+        assert wrapped.spec.tol == 1e-11
+        assert base.solve == "cg"          # the original spec is untouched
+        Jf = jax.jacfwd(wrapped, argnums=1)(None, 3.0)
+        np.testing.assert_allclose(Jf, _ridge_closed_form_jac(X, y, 3.0),
+                                   atol=1e-7)
+
+    def test_nondiff_argnums_static_callable(self, rng):
+        """A callable theta argument (a link function) rides along as a
+        static nondiff arg; derivatives flow to the array args only."""
+        X, y = _ridge_problem(rng)
+        d = X.shape[1]
+
+        def F(x, link, theta):
+            return X.T @ (X @ x - y) + link(theta) * x
+
+        spec = ImplicitDiffSpec(optimality_fun=F, tol=1e-12,
+                                nondiff_argnums=(0,))
+
+        @implicit_diff(spec)
+        def solver(init, link, theta):
+            return jnp.linalg.solve(X.T @ X + link(theta) * jnp.eye(d),
+                                    X.T @ y)
+
+        link = jnp.exp
+        Jf = jax.jacfwd(solver, argnums=2)(None, link, 1.5)
+        Jr = jax.jacrev(solver, argnums=2)(None, link, 1.5)
+        # chain rule vs the plain-theta closed form
+        Jtrue = _ridge_closed_form_jac(X, y, jnp.exp(1.5)) * jnp.exp(1.5)
+        np.testing.assert_allclose(Jf, Jtrue, atol=1e-7)
+        np.testing.assert_allclose(Jr, Jtrue, atol=1e-7)
+
+
+class TestRuntimeModes:
+    """Acceptance: run(mode="jvp") works for EVERY ported solver class."""
+
+    def _fd_check(self, run_scalar, s0, jv, eps=1e-6, rtol=2e-3, atol=1e-6):
+        fd = (run_scalar(s0 + eps) - run_scalar(s0 - eps)) / (2 * eps)
+        np.testing.assert_allclose(jv, fd, rtol=rtol, atol=atol)
+
+    @pytest.mark.parametrize("name", [
+        "gradient_descent", "proximal_gradient", "projected_gradient",
+        "mirror_descent", "block_cd", "newton", "lbfgs", "fixed_point",
+        "anderson"])
+    def test_run_jvp_mode_finite_difference(self, rng, name):
+        from repro.core import (AndersonAcceleration, BlockCoordinateDescent,
+                                LBFGS, MirrorDescent, Newton,
+                                ProjectedGradient, ProximalGradient,
+                                projections, prox)
+        X, y = _ridge_problem(rng, m=12, d=3)
+        L = float(jnp.linalg.eigvalsh(X.T @ X).max()) + 3.0
+
+        def ridge(x, t):
+            return 0.5 * jnp.sum((X @ x - y) ** 2) + 0.5 * t * jnp.sum(x ** 2)
+
+        def quad(x, t):
+            return 0.5 * jnp.sum((x - t) ** 2)
+
+        M = 0.5 * jax.random.orthogonal(rng, 3)
+        kw = dict(maxiter=4000, tol=1e-12)
+        cases = {
+            "gradient_descent": (
+                GradientDescent(ridge, stepsize=1.0 / L, **kw),
+                jnp.zeros(3), lambda s: s, 1.0),
+            "proximal_gradient": (
+                ProximalGradient(lambda x, tf: 0.5 * jnp.sum((X @ x - y) ** 2),
+                                 lambda v, lam, st: prox.prox_lasso(v, lam, st),
+                                 stepsize=1.0 / L, **kw),
+                jnp.zeros(3), lambda s: (None, s), 0.2),
+            "projected_gradient": (
+                ProjectedGradient(quad,
+                                  lambda v, tp: projections.projection_simplex(v),
+                                  stepsize=0.4, **kw),
+                jnp.ones(3) / 3, lambda s: (jnp.array([0.2, 0.9, 0.4]) * s,
+                                            None), 1.0),
+            "mirror_descent": (
+                MirrorDescent(quad,
+                              lambda v, tp: projections.projection_simplex_kl(v),
+                              stepsize=0.8, maxiter=4000, tol=1e-12),
+                jnp.ones(3) / 3, lambda s: (jnp.array([0.2, 0.9, 0.4]) * s,
+                                            None), 1.0),
+            "block_cd": (
+                BlockCoordinateDescent(
+                    lambda x, tf: 0.5 * jnp.sum((X @ x.ravel() - y) ** 2),
+                    lambda v, lam, st: prox.prox_lasso(v, lam, st),
+                    stepsize=1.0 / L, **kw),
+                jnp.zeros((3, 1)), lambda s: (None, s), 0.1),
+            "newton": (Newton(ridge, maxiter=40, tol=1e-12),
+                       jnp.zeros(3), lambda s: s, 1.0),
+            "lbfgs": (LBFGS(ridge, stepsize=0.02, maxiter=2000, tol=1e-12),
+                      jnp.zeros(3), lambda s: s, 1.0),
+            "fixed_point": (
+                FixedPointIteration(lambda x, t: M @ x + t, maxiter=2000,
+                                    tol=1e-13),
+                jnp.zeros(3), lambda s: s * jnp.ones(3), 1.0),
+            "anderson": (
+                AndersonAcceleration(lambda x, t: M @ x + t, maxiter=200,
+                                     tol=1e-13),
+                jnp.zeros(3), lambda s: s * jnp.ones(3), 1.0),
+        }
+        solver, init, theta_of_s, s0 = cases[name]
+
+        def run_scalar(s):
+            return float(jnp.sum(
+                solver.run(init, theta_of_s(s), mode="jvp")[0] ** 2))
+
+        def fwd(s):
+            return jnp.sum(solver.run(init, theta_of_s(s), mode="jvp")[0] ** 2)
+
+        _, jv = jax.jvp(fwd, (s0,), (1.0,))
+        assert jnp.isfinite(jv) and abs(float(jv)) > 1e-12
+        self._fd_check(run_scalar, s0, float(jv))
+
+    def test_run_auto_supports_both_modes(self, rng):
+        """The default run() serves jacfwd AND jacrev from one wrapping."""
+        X, y = _ridge_problem(rng, m=16, d=4)
+        L = float(jnp.linalg.eigvalsh(X.T @ X).max()) + 2.0
+
+        def f(x, t):
+            return 0.5 * jnp.sum((X @ x - y) ** 2) + 0.5 * t * jnp.sum(x ** 2)
+
+        solver = GradientDescent(f, stepsize=1.0 / L, maxiter=6000, tol=1e-13)
+        run = lambda t: solver.run(jnp.zeros(4), t)[0]
+        Jf = jax.jacfwd(run)(1.0)
+        Jr = jax.jacrev(run)(1.0)
+        np.testing.assert_allclose(Jf, Jr, atol=1e-5, rtol=1e-5)
+        np.testing.assert_allclose(Jf, _ridge_closed_form_jac(X, y, 1.0),
+                                   atol=1e-6)
+
+    def test_run_vjp_mode_matches_auto(self, rng):
+        X, y = _ridge_problem(rng, m=16, d=4)
+        L = float(jnp.linalg.eigvalsh(X.T @ X).max()) + 2.0
+
+        def f(x, t):
+            return 0.5 * jnp.sum((X @ x - y) ** 2) + 0.5 * t * jnp.sum(x ** 2)
+
+        solver = GradientDescent(f, stepsize=1.0 / L, maxiter=6000, tol=1e-13)
+        loss_auto = lambda t: jnp.sum(solver.run(jnp.zeros(4), t)[0] ** 2)
+        loss_vjp = lambda t: jnp.sum(
+            solver.run(jnp.zeros(4), t, mode="vjp")[0] ** 2)
+        np.testing.assert_allclose(jax.grad(loss_auto)(1.0),
+                                   jax.grad(loss_vjp)(1.0), rtol=1e-12)
+
+
+class TestDeprecationOneShot:
+    """Satellite: legacy names warn exactly once per process."""
+
+    def test_solvers_factory_warns_exactly_once(self, rng):
+        from repro.core import solvers
+        Q = jnp.diag(jnp.array([1.0, 2.0]))
+
+        def f(x, theta):
+            return 0.5 * x @ Q @ x - theta @ x
+
+        diff_api.reset_deprecation_warnings()
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            solvers.newton(f, jnp.zeros(2), jnp.ones(2), maxiter=10)
+            solvers.newton(f, jnp.zeros(2), jnp.ones(2), maxiter=10)
+        dep = [w for w in rec if issubclass(w.category, DeprecationWarning)
+               and "newton" in str(w.message)]
+        assert len(dep) == 1, f"expected exactly one warning, got {len(dep)}"
+
+    def test_jvp_decorator_warns_exactly_once(self, rng):
+        from repro.core import custom_root_jvp
+        F = lambda x, t: x - t
+        diff_api.reset_deprecation_warnings()
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            custom_root_jvp(F)
+            custom_root_jvp(F)
+        dep = [w for w in rec if issubclass(w.category, DeprecationWarning)
+               and "custom_root_jvp" in str(w.message)]
+        assert len(dep) == 1, f"expected exactly one warning, got {len(dep)}"
+
+
+class TestBilevelSpec:
+    """diff_spec plumbing through the bilevel driver."""
+
+    def _problem(self, rng):
+        k1, k2 = jax.random.split(rng)
+        X = jax.random.normal(k1, (20, 4))
+        y = jax.random.normal(k2, (20,))
+
+        def inner_obj(x, lam):
+            return 0.5 * jnp.sum((X @ x - y) ** 2) + \
+                0.5 * jnp.exp(lam) * jnp.sum(x ** 2)
+
+        return X, y, inner_obj
+
+    def test_routing_only_spec_overrides_solver(self, rng):
+        X, y, inner_obj = self._problem(rng)
+        seen = {}
+
+        def spy_cg(matvec, b, **kw):
+            seen.update(kw)
+            return ls.solve_cg(matvec, b, **kw)
+
+        ls.register_solver("spy_cg_bilevel", spy_cg, symmetric_only=True,
+                           supports_precond=True)
+        try:
+            L = float(jnp.linalg.eigvalsh(X.T @ X).max()) + 2.0
+            inner = GradientDescent(inner_obj, stepsize=1.0 / L, maxiter=3000,
+                                    tol=1e-12, solve="normal_cg")
+            spec = ImplicitDiffSpec(solve="spy_cg_bilevel", tol=1e-9,
+                                    maxiter=55, ridge=1e-11)
+            sol = bilevel.solve_bilevel(lambda x, lam: jnp.sum(x ** 2), inner,
+                                        0.3, jnp.zeros(4), outer_steps=2,
+                                        outer_lr=0.1, diff_spec=spec)
+            assert bool(sol.inner_info.converged)
+            assert seen["tol"] == 1e-9
+            assert seen["maxiter"] == 55
+            assert seen["ridge"] == 1e-11
+        finally:
+            ls._REGISTRY.pop("spy_cg_bilevel", None)
+
+    def test_spec_and_loose_kwargs_conflict(self, rng):
+        X, y, inner_obj = self._problem(rng)
+        inner = GradientDescent(inner_obj, stepsize=1e-2, maxiter=10)
+        with pytest.raises(ValueError, match="not both"):
+            bilevel.make_implicit_inner(inner, diff_spec=ImplicitDiffSpec(),
+                                        solve="cg")
+
+    def test_callable_inner_with_mapping_spec(self, rng):
+        X, y, inner_obj = self._problem(rng)
+        d = X.shape[1]
+
+        def raw(init, lam):
+            return jnp.linalg.solve(X.T @ X + jnp.exp(lam) * jnp.eye(d),
+                                    X.T @ y)
+
+        spec = ImplicitDiffSpec(
+            optimality_fun=jax.grad(inner_obj, argnums=0), tol=1e-12)
+        fn = bilevel.make_implicit_inner(raw, diff_spec=spec)
+        # both modes work through the bilevel-wrapped callable
+        g = jax.grad(lambda lam: jnp.sum(fn(None, lam) ** 2))(0.3)
+        _, jv = jax.jvp(lambda lam: jnp.sum(fn(None, lam) ** 2),
+                        (0.3,), (1.0,))
+        np.testing.assert_allclose(g, jv, rtol=1e-8)
+
+    def test_routing_only_spec_with_callable_and_objective(self, rng):
+        """A bare callable + routing-only spec + inner_objective composes:
+        the spec supplies the routing, the objective the mapping."""
+        X, y, inner_obj = self._problem(rng)
+        d = X.shape[1]
+
+        def raw(init, lam):
+            return jnp.linalg.solve(X.T @ X + jnp.exp(lam) * jnp.eye(d),
+                                    X.T @ y)
+
+        spec = ImplicitDiffSpec(solve="cg", tol=1e-12)
+        fn = bilevel.make_implicit_inner(raw, inner_objective=inner_obj,
+                                         diff_spec=spec)
+        g = jax.grad(lambda lam: jnp.sum(fn(None, lam) ** 2))(0.3)
+        fn_loose = bilevel.make_implicit_inner(raw, inner_objective=inner_obj,
+                                               solve="cg", tol=1e-12)
+        g_loose = jax.grad(lambda lam: jnp.sum(fn_loose(None, lam) ** 2))(0.3)
+        np.testing.assert_allclose(g, g_loose, rtol=1e-12)
+        # with neither mapping source, the error says how to fix it
+        with pytest.raises(ValueError, match="optimality mapping"):
+            bilevel.make_implicit_inner(raw, diff_spec=spec)
+
+    def test_mapping_spec_supersedes_solver_mapping(self, rng):
+        """An IterativeSolver + a spec carrying a mapping: the spec's
+        mapping wins (the paper's decoupling promise)."""
+        X, y, inner_obj = self._problem(rng)
+        L = float(jnp.linalg.eigvalsh(X.T @ X).max()) + 2.0
+        inner = GradientDescent(inner_obj, stepsize=1.0 / L, maxiter=3000,
+                                tol=1e-12)
+        spec = ImplicitDiffSpec(
+            optimality_fun=jax.grad(inner_obj, argnums=0), tol=1e-12)
+        fn = bilevel.make_implicit_inner(inner, diff_spec=spec)
+        fn_default = bilevel.make_implicit_inner(inner)
+        x0 = jnp.zeros(4)
+        g_spec = jax.grad(lambda lam: jnp.sum(fn(x0, lam) ** 2))(0.3)
+        g_default = jax.grad(
+            lambda lam: jnp.sum(fn_default(x0, lam) ** 2))(0.3)
+        np.testing.assert_allclose(g_spec, g_default, rtol=1e-6)
+
+
+class TestDEQSpec:
+
+    def test_deq_forward_mode_sensitivity(self, rng):
+        from repro.core import deq_fixed_point
+        W = 0.3 * jax.random.orthogonal(rng, 4)
+
+        def cell(z, x, w):
+            return jnp.tanh(W @ z * w + x)
+
+        x = jax.random.normal(jax.random.fold_in(rng, 2), (4,))
+        spec = ImplicitDiffSpec(solve="normal_cg", tol=1e-11)
+        z_of_w = lambda w: deq_fixed_point(cell, jnp.zeros(4), x, w,
+                                           fwd_tol=1e-12, diff_spec=spec)
+        # forward-mode sensitivity wrt the scalar weight: one tangent solve
+        Jf = jax.jacfwd(z_of_w)(0.7)
+        Jr = jax.jacrev(z_of_w)(0.7)
+        np.testing.assert_allclose(Jf, Jr, atol=1e-5, rtol=1e-5)
+        eps = 1e-6
+        fd = (z_of_w(0.7 + eps) - z_of_w(0.7 - eps)) / (2 * eps)
+        np.testing.assert_allclose(Jf, fd, rtol=1e-3, atol=1e-6)
+
+    def test_deq_rejects_mapping_spec(self):
+        from repro.core import make_deq_solver
+        spec = ImplicitDiffSpec(fixed_point_fun=lambda z: z)
+        with pytest.raises(ValueError, match="routing-only"):
+            make_deq_solver(lambda z, x, w: z, diff_spec=spec)
