@@ -1,0 +1,71 @@
+"""Matrix-free vs auto-materialized dense crossover for operator routing.
+
+``solve(A, b, method="auto")`` dispatches on the ``LinearOperator``'s
+structure and size: below ``MAX_DENSE_DIM`` the batch of systems is
+materialized once (d probing matvecs — or O(1) for structured operators)
+and solved by the fused dense kernels (``pallas_cg`` / ``dense_gmres``);
+above it the solve stays matrix-free (``cg`` / ``normal_cg``).  This
+benchmark sweeps the instance dimension ``d`` at fixed batch ``B`` and
+times both regimes for a matrix-free SPD ``FunctionOperator``, locating
+the crossover the auto heuristic is betting on:
+
+  * matrix-free — batched masked-CG through the operator's matvec,
+  * dense       — materialize (d probing matvecs) + fused batched-CG.
+
+Small d: materialization is nearly free and the fused kernel wins.  Large
+d: the d probing matvecs and the (B, d, d) memory dominate and matrix-free
+wins.  Rows report the ratio (``dense/mf``: > 1 means matrix-free won).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import linear_solve as ls
+from repro.core import operators as ops
+
+
+def _spd_factors(key, B, d):
+    """Per-instance SPD operators given implicitly by factors: A = CᵀC + I,
+    applied matrix-free as Cᵀ(Cv) + v (never formed densely)."""
+    C = jax.random.normal(key, (B, d, d)) / jnp.sqrt(d)
+
+    def matvec(v):                                    # (B, d) -> (B, d)
+        return jnp.einsum("bji,bj->bi", C,
+                          jnp.einsum("bij,bj->bi", C, v)) + v
+
+    return matvec
+
+
+def _bench_crossover(emit_fn, B=16, dims=(8, 32, 128), tol=1e-6):
+    key = jax.random.PRNGKey(0)
+    rows = {}
+    for d in dims:
+        matvec = _spd_factors(jax.random.fold_in(key, d), B, d)
+        b = jax.random.normal(jax.random.fold_in(key, d + 1), (B, d))
+        A = ops.FunctionOperator(matvec, jnp.zeros((B, d)), batch_ndim=1,
+                                 positive_definite=True)
+
+        mf = jax.jit(functools.partial(ls.solve, A, method="cg",
+                                       tol=tol, maxiter=4 * d))
+        dense = jax.jit(functools.partial(ls.solve, A, method="pallas_cg",
+                                          tol=tol))
+        t_mf = time_fn(lambda: mf(b), iters=3)
+        t_dense = time_fn(lambda: dense(b), iters=3)
+        ratio = t_dense / t_mf
+        auto = ls._resolve_auto(A, b[0])
+        emit_fn(f"oproute_mf_B{B}_d{d}", t_mf, f"auto={auto}")
+        emit_fn(f"oproute_dense_B{B}_d{d}", t_dense,
+                f"dense/mf={ratio:.2f}x")
+        rows[d] = ratio
+    return rows
+
+
+def run(emit_fn=emit, smoke: bool = False):
+    dims = (8, 32) if smoke else (8, 32, 128, 256)
+    _bench_crossover(emit_fn, B=16, dims=dims)
+
+
+if __name__ == "__main__":
+    run()

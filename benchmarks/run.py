@@ -11,20 +11,21 @@ Prints ``name,us_per_call,derived`` CSV rows.
   batched batched-vs-looped linear-solve engine speedups
   bilevel batched-vs-looped hypergradients through the solver runtime
   fwdrev  JVP-mode vs VJP-mode implicit Jacobians across (p, d) regimes
+  oproute matrix-free vs auto-materialized dense operator-routing crossover
   roofline per-(arch x shape) terms from the dry-run artifacts
 
-``--smoke`` runs a fast CI subset (kernels + batched + bilevel + fwdrev)
-and writes the rows to ``BENCH_smoke.json`` (override with ``--out``) for
-artifact upload.
+``--smoke`` runs a fast CI subset (kernels + batched + bilevel + fwdrev +
+oproute) and writes the rows to ``BENCH_smoke.json`` (override with
+``--out``) for artifact upload.
 """
 import argparse
 import sys
 import traceback
 
 
-SMOKE_BENCHES = ["kernels", "batched", "bilevel", "fwdrev"]
+SMOKE_BENCHES = ["kernels", "batched", "bilevel", "fwdrev", "oproute"]
 # accept run(emit, smoke=True)
-SMOKE_KWARG_BENCHES = {"batched", "bilevel", "fwdrev"}
+SMOKE_KWARG_BENCHES = {"batched", "bilevel", "fwdrev", "oproute"}
 
 
 def main() -> None:
@@ -41,7 +42,7 @@ def main() -> None:
                             dictionary_learning, distillation,
                             fwd_vs_rev_hypergrad, jacobian_precision,
                             kernels_micro, molecular_dynamics,
-                            roofline_report, svm_hyperopt)
+                            operator_routing, roofline_report, svm_hyperopt)
     from benchmarks.common import Collector, emit
     all_benches = {
         "fig3": jacobian_precision.run,
@@ -53,6 +54,7 @@ def main() -> None:
         "batched": batched_solve.run,
         "bilevel": bilevel_hypergrad.run,
         "fwdrev": fwd_vs_rev_hypergrad.run,
+        "oproute": operator_routing.run,
         "roofline": roofline_report.run,
     }
     if args.only:

@@ -175,7 +175,6 @@ def _dot_flops(ins: Instr) -> float:
     # robust route: K = numel(lhs) * numel(rhs) / (out * numel(batch dims)²)
     # simpler: parse lhs_contracting_dims
     mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.line)
-    mb = re.search(r"lhs_batch_dims=\{([0-9,]*)\}", ins.line)
     lhs = ins.operand_shapes[0][1]
     k = 1
     if mc:

@@ -1,6 +1,11 @@
 """repro.core — automatic implicit differentiation (the paper's contribution).
 
 Public API re-exports:
+  pytree-native linear operators (the shared matvec abstraction under the
+  solve registry, the diff API, the runtime and the kernels):
+    LinearOperator protocol, JacobianOperator, DenseOperator, RidgeShifted,
+    BlockDiagonal, ComposedOperator, as_operator
+                               — repro.core.operators
   implicit-diff API (mode-polymorphic: one wrapper serves jax.grad/jacrev
   AND jax.jvp/jacfwd):
     ImplicitDiffSpec, implicit_diff — repro.core.diff_api
@@ -25,6 +30,9 @@ Note: ``repro.core.implicit_diff`` the *submodule* is shadowed in this
 namespace by ``implicit_diff`` the *function* (the API entry point);
 ``import repro.core.implicit_diff`` still reaches the submodule.
 """
+from repro.core.operators import (LinearOperator, JacobianOperator,
+                                  DenseOperator, RidgeShifted, BlockDiagonal,
+                                  ComposedOperator, as_operator)
 from repro.core.implicit_diff import (custom_root, custom_fixed_point,
                                       custom_root_jvp, custom_fixed_point_jvp,
                                       root_vjp, root_jvp)

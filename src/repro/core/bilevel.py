@@ -6,7 +6,12 @@ The hypergradient ∇θ L_outer flows through x*(θ) via implicit
 differentiation of the inner optimality condition, i.e. one extra
 matrix-free linear solve instead of unrolled backprop through the inner run —
 the paper's headline efficiency claim, and what makes bilevel viable when the
-inner problem is a sharded, multi-pod training run.
+inner problem is a sharded, multi-pod training run.  That solve runs against
+a first-class ``operators.JacobianOperator`` of the inner optimality mapping
+(built by the diff API), so routing here is pure configuration: the
+``diff_spec``/loose kwargs pick the registry solver (``solve="auto"``
+dispatches on the operator's structure) and ``precond="jacobi"`` /
+``"block_jacobi"`` derive from the operator's diagonal/leaf blocks.
 
 The preferred inner-solver form is a ``solver_runtime.IterativeSolver``:
 it declares its own optimality mapping, self-wraps with ``custom_root``,

@@ -22,12 +22,14 @@ tangent is the solution of the implicit-function-theorem system
 
     A dx = B θ̇,      A = -∂₁F(x*, θ),   B = ∂₂F(x*, θ),
 
-and the linear solve is made *reverse-transposable* by expressing it as a
+where ``A`` is built as one first-class ``operators.JacobianOperator`` per
+direction (matvec = JVP, rmatvec = VJP, symmetry certified at construction
+when the routed solver is symmetric-only), and the linear solve is made
+*reverse-transposable* by expressing the operator's raveled view as a
 ``lax.custom_linear_solve`` pair: the forward direction routes ``A dx = b``
 through the ``SolverSpec`` registry, and the declared transpose direction
-routes ``Aᵀ u = v`` through the same registry (reusing the forward matvec
-when the routed solver is symmetric-only — see
-``linear_solve.solver_is_symmetric``).  Reverse mode therefore linearizes
+routes ``Aᵀ u = v`` through the same registry (a symmetric operator reuses
+the forward matvec — ``A.T is A``).  Reverse mode therefore linearizes
 through the JVP rule and transposes into exactly the ``root_vjp`` linear
 system; forward mode uses the tangent solve directly.
 
@@ -62,12 +64,12 @@ import warnings
 from typing import Any, Callable, Optional, Tuple, Union
 
 import jax
-import jax.flatten_util  # registers jax.flatten_util.ravel_pytree
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
 from repro.core import linear_solve as ls
+from repro.core import operators as ops
 
 
 # ---------------------------------------------------------------------------
@@ -107,10 +109,15 @@ class ImplicitDiffSpec:
     ``IterativeSolver``'s own routing), but not wrappable by itself.
 
     ``solve`` is a ``SolverSpec`` registry name (see
-    ``linear_solve.available_solvers()``) or a callable
+    ``linear_solve.available_solvers()``), ``"auto"`` (structure-driven
+    dispatch on the implicit system's ``LinearOperator`` — dense small
+    systems auto-materialize), or a callable
     ``fn(matvec, b, *, tol, maxiter, ridge)``; ``tol`` / ``maxiter`` /
     ``ridge`` / ``precond`` are forwarded to it for BOTH the tangent system
-    ``A dx = Bθ̇`` and the cotangent system ``Aᵀ u = v``.
+    ``A dx = Bθ̇`` and the cotangent system ``Aᵀ u = v``.  ``precond`` may
+    be a callable ``v ↦ M⁻¹v`` (x-pytree contract), ``"jacobi"``, or
+    ``"block_jacobi"`` — the named ones derive from the system operator's
+    ``diagonal()`` / leaf-block structure.
 
     ``has_aux=True`` means the solver returns ``(x_star, aux)``; only
     ``x_star`` enters the implicit system, ``aux`` gets zero derivatives
@@ -178,6 +185,22 @@ class ImplicitDiffSpec:
 # low-level products with the implicit Jacobian (paper §2.1)
 # ---------------------------------------------------------------------------
 
+def _implicit_system_operator(F: Callable, x_star, theta_args: tuple,
+                              solve) -> ops.JacobianOperator:
+    """``A = -∂₁F(x*, θ)`` as a ``JacobianOperator``.
+
+    The symmetry flag is set at construction — routing a symmetric-only
+    solver (``cg``/``pallas_cg``) certifies ``A = Aᵀ`` — and every
+    downstream consumer (transpose reuse, ``custom_linear_solve``'s
+    ``symmetric=``, route validation, preconditioner derivation) reads it
+    off the operator.
+    """
+    certified = solve != "auto" and ls.solver_is_symmetric(solve)
+    return ops.JacobianOperator(
+        lambda x: F(x, *theta_args), x_star, negate=True,
+        symmetric=True if certified else None)
+
+
 def root_vjp(F: Callable, x_star, theta_args: tuple, cotangent,
              solve="normal_cg", tol: float = 1e-6, maxiter: int = 1000,
              ridge: float = 0.0, precond=None):
@@ -188,22 +211,17 @@ def root_vjp(F: Callable, x_star, theta_args: tuple, cotangent,
 
     ``solve`` is a registry name (``linear_solve.available_solvers()``) or a
     solver callable; ``precond`` is forwarded to registry solvers (``None``,
-    a callable v ↦ M⁻¹v, or ``"jacobi"``).  Because every registry solver is
-    vmap-safe with per-instance convergence masks, a ``jax.vmap`` of this
-    function (or of an ``implicit_diff``-wrapped gradient) runs ONE batched
-    masked solve for the whole batch, not N sequential solves.
+    a callable v ↦ M⁻¹v, ``"jacobi"``, or ``"block_jacobi"``).  Because
+    every registry solver is vmap-safe with per-instance convergence masks,
+    a ``jax.vmap`` of this function (or of an ``implicit_diff``-wrapped
+    gradient) runs ONE batched masked solve for the whole batch, not N
+    sequential solves.
     """
-    def f_of_x(x):
-        return F(x, *theta_args)
-
-    # vjp wrt x gives u ↦ uᵀ ∂₁F;  A = -∂₁F so Aᵀ u = -(∂₁F)ᵀ u.
-    _, vjp_x = jax.vjp(f_of_x, x_star)
-
-    def At_matvec(u):
-        (out,) = vjp_x(u)
-        return jax.tree_util.tree_map(jnp.negative, out)
-
-    u = ls.route_solve(solve, At_matvec, cotangent, tol=tol, maxiter=maxiter,
+    # A = -∂₁F(x*, θ) as a first-class operator: matvec is a JVP, rmatvec a
+    # VJP, and choosing a symmetric-only solver certifies A = Aᵀ (so A.T is
+    # A and the cotangent solve reuses the forward matvec).
+    A = _implicit_system_operator(F, x_star, theta_args, solve)
+    u = ls.route_solve(solve, A.T, cotangent, tol=tol, maxiter=maxiter,
                        ridge=ridge, precond=precond)
 
     # uᵀ B = uᵀ ∂₂F : one more VJP, wrt the theta args.
@@ -226,15 +244,8 @@ def root_jvp(F: Callable, x_star, theta_args: tuple, tangents: tuple,
         return F(x_star, *targs)
 
     _, Bv = jax.jvp(f_of_theta, theta_args, tangents)
-
-    def f_of_x(x):
-        return F(x, *theta_args)
-
-    def A_matvec(v):
-        _, jv = jax.jvp(f_of_x, (x_star,), (v,))
-        return jax.tree_util.tree_map(jnp.negative, jv)
-
-    return ls.route_solve(solve, A_matvec, Bv, tol=tol, maxiter=maxiter,
+    A = _implicit_system_operator(F, x_star, theta_args, solve)
+    return ls.route_solve(solve, A, Bv, tol=tol, maxiter=maxiter,
                           ridge=ridge, precond=precond)
 
 
@@ -270,15 +281,24 @@ def _check_solver_arity(spec: ImplicitDiffSpec, n_theta: int):
             f"solver called with {n_theta} theta argument(s)")
 
 
+def _routes_matrix_free(solve, A, b, precond) -> bool:
+    """Whether the routed registry solver touches the system only through
+    matvecs (then named preconditioners must be derived up front from the
+    operator); a materializing solver resolves them off its own dense
+    matrix instead."""
+    if callable(solve):
+        return True     # route_solve rejects string preconds for callables
+    name = ls._resolve_auto(A, b, precond=precond) if solve == "auto" \
+        else solve
+    return ls.get_spec(name).matrix_free
+
+
 def _tangent_root_solve(spec: ImplicitDiffSpec, residual: Callable, x_star,
                         theta: tuple, nondiff_idx: Tuple[int, ...],
                         nondiff_vals, diff_theta: tuple, diff_dot: tuple,
                         *, transposable: bool):
     """Solve A dx = B θ̇ for the output tangent, optionally staged so that
     reverse mode can transpose it into the cotangent system Aᵀ u = v."""
-    def F_of_x(x):
-        return residual(x, *theta)
-
     def F_of_diff_theta(*dts):
         return residual(x_star, *_merge_theta(nondiff_idx, nondiff_vals, dts))
 
@@ -287,43 +307,53 @@ def _tangent_root_solve(spec: ImplicitDiffSpec, residual: Callable, x_star,
     # back through it after the transpose solve).
     _, b = jax.jvp(F_of_diff_theta, tuple(diff_theta), tuple(diff_dot))
 
-    def A_matvec(v):
-        _, jv = jax.jvp(F_of_x, (x_star,), (v,))
-        return jax.tree_util.tree_map(jnp.negative, jv)
+    # One JacobianOperator per direction: A = -∂₁F(x*, θ), with the
+    # symmetry certificate picked up at construction (see
+    # ``_implicit_system_operator``).
+    A = _implicit_system_operator(residual, x_star, theta, spec.solve)
 
     if not transposable:
-        return ls.route_solve(spec.solve, A_matvec, b, **spec.routing_kwargs())
+        return ls.route_solve(spec.solve, A, b, **spec.routing_kwargs())
 
-    # The transposable system runs on ONE raveled vector, not the x pytree:
-    # jax's linear_solve transpose rule binds per-leaf cotangents without
-    # instantiating symbolic zeros, so a downstream loss touching only some
-    # x* leaves would feed Zero into the bind.  A single leaf is either
-    # fully skipped (all-zero cotangent) or fully instantiated.
-    flat_b, unravel = jax.flatten_util.ravel_pytree(b)
-
-    def flat_matvec(vf):
-        out = A_matvec(unravel(vf))
-        return jax.flatten_util.ravel_pytree(out)[0]
-
+    # The transposable system runs on the operator's raveled view, not the
+    # x pytree: jax's linear_solve transpose rule binds per-leaf cotangents
+    # without instantiating symbolic zeros, so a downstream loss touching
+    # only some x* leaves would feed Zero into the bind.  A single leaf is
+    # either fully skipped (all-zero cotangent) or fully instantiated.
+    flat = A.raveled()
     routing = spec.routing_kwargs()
-    if callable(routing["precond"]):
+    precond = routing["precond"]
+    if callable(precond):
         # user preconditioners keep their x-pytree contract
-        M = routing["precond"]
-        routing["precond"] = lambda vf: jax.flatten_util.ravel_pytree(
-            M(unravel(vf)))[0]
+        routing["precond"] = flat.ravel_fn(precond)
+    elif precond in ("jacobi", "block_jacobi") and \
+            _routes_matrix_free(spec.solve, A, b, precond):
+        # matrix-free route: derive ONCE from the operator's structure
+        # (diagonal / leaf blocks) instead of probing inside each
+        # direction's template.  Materializing solvers (dense_gmres) keep
+        # the string — they read diag/blocks off their own dense matrix
+        # for free, so probing here would be redundant work.
+        damped = ops.RidgeShifted(A, routing["ridge"]) if routing["ridge"] \
+            else A
+        make = (ops.jacobi_preconditioner_from if precond == "jacobi"
+                else ops.block_jacobi_preconditioner)
+        routing["precond"] = flat.ravel_fn(make(damped))
 
     def registry_solve(matvec, rhs):
-        return ls.route_solve(spec.solve, matvec, rhs, **routing)
+        # custom_linear_solve hands each direction its own matvec closure;
+        # re-wrap it so the operator's flags travel into routing
+        op = ops.FunctionOperator(matvec, rhs, symmetric=A.symmetric,
+                                  positive_definite=A.positive_definite)
+        return ls.route_solve(spec.solve, op, rhs, **routing)
 
     # custom_linear_solve makes the solve reverse-transposable: the declared
     # transpose direction routes Aᵀu = v through the SAME registry solver.
-    # A symmetric-only routed solver (cg/pallas_cg) certifies A = Aᵀ, so the
-    # transpose template reuses the forward matvec directly.
+    # A symmetric operator (certified by a symmetric-only routed solver —
+    # cg/pallas_cg) lets the transpose template reuse the forward matvec.
     dx_flat = lax.custom_linear_solve(
-        flat_matvec, flat_b, solve=registry_solve,
-        transpose_solve=registry_solve,
-        symmetric=ls.solver_is_symmetric(spec.solve))
-    return unravel(dx_flat)
+        flat.matvec, flat.ravel(b), solve=registry_solve,
+        transpose_solve=registry_solve, symmetric=bool(A.symmetric))
+    return flat.unravel(dx_flat)
 
 
 # ---------------------------------------------------------------------------

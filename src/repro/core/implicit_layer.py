@@ -20,6 +20,12 @@ point) instead of loose keyword arguments, and ``mode`` selects the
 differentiation wrapping — the default ``"auto"`` makes the equilibrium
 differentiable in BOTH autodiff modes, so ``jax.jacfwd`` sensitivities of
 z* with respect to a few scalar inputs cost one tangent solve each.
+
+The backward system I − ∂z f is built by the diff API as a
+``operators.JacobianOperator`` of the declared fixed point, so
+``bwd_solve="auto"`` auto-materializes small equilibria into the dense
+batched kernels and ``precond="jacobi"`` derives from the operator's
+diagonal — no per-layer ravel plumbing.
 """
 from __future__ import annotations
 

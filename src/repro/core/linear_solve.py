@@ -1,10 +1,17 @@
 """Matrix-free linear solvers: the batched solve engine behind implicit diff.
 
-All solvers take ``matvec: pytree -> pytree`` and a pytree right-hand side and
+All solvers take an operator — a ``repro.core.operators.LinearOperator`` or a
+bare ``matvec: pytree -> pytree`` closure — and a pytree right-hand side and
 return a pytree solution.  They are implemented with ``lax.while_loop`` so they
 can live inside jit/scan/custom_vjp bodies, and they only touch the operator
 through matrix-vector products — exactly the contract the paper's implicit
-differentiation needs (access to F only through JVPs/VJPs).
+differentiation needs (access to F only through JVPs/VJPs).  Operators carry
+their structure with them (symmetry/definiteness flags, O(1) ``diagonal``/
+``materialize`` where available, batch awareness): routing validates
+symmetric-only solvers against the flags, ``method="auto"`` picks the regime
+(dense small systems auto-materialize, large ones stay matrix-free), and
+``"jacobi"``/``"block_jacobi"`` preconditioners derive from
+``operator.diagonal()`` instead of probing.
 
 Registry (``SolverSpec``; see ``available_solvers()``):
 
@@ -38,12 +45,15 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Callable, NamedTuple, Optional
 
 import jax
-import jax.flatten_util  # registers jax.flatten_util.ravel_pytree
 import jax.numpy as jnp
 from jax import lax
+
+from repro.core import operators
+from repro.core.operators import (LinearOperator, RavelView, _ravel1,
+                                  jacobi_preconditioner, ravel_view)
 
 
 # ---------------------------------------------------------------------------
@@ -102,11 +112,17 @@ def _tree_freeze(done, old, new, batch_ndim: int = 0):
 def _damped(matvec: Callable, ridge: float) -> Callable:
     if not ridge:
         return matvec
+    if isinstance(matvec, LinearOperator):
+        return operators.RidgeShifted(matvec, ridge)   # keeps flags/structure
     return lambda v: _tree_add(matvec(v), v, ridge)
 
 
 def make_rmatvec(matvec: Callable, example_x):
-    """Build x ↦ Aᵀx from x ↦ Ax via jax.linear_transpose (paper §2.1)."""
+    """Build x ↦ Aᵀx from x ↦ Ax.  ``LinearOperator``s answer directly
+    (symmetric ones reuse the forward matvec); bare closures go through
+    ``jax.linear_transpose`` (paper §2.1)."""
+    if isinstance(matvec, LinearOperator):
+        return matvec.rmatvec
     transpose = jax.linear_transpose(matvec, example_x)
 
     def rmatvec(y):
@@ -116,103 +132,72 @@ def make_rmatvec(matvec: Callable, example_x):
     return rmatvec
 
 
+def _as_probe_operator(matvec, example, batch_ndim: int) -> LinearOperator:
+    """Coerce to an operator with matching batchedness, so the basis-vector
+    probing loops live in ONE place (the ``LinearOperator`` defaults)."""
+    if isinstance(matvec, LinearOperator) and matvec.batch_ndim == batch_ndim:
+        return matvec
+    return operators.FunctionOperator(matvec, example, batch_ndim=batch_ndim)
+
+
 def materialize_matrix(matvec: Callable, example_x) -> jnp.ndarray:
-    """Densify a matvec operating on flat vectors (diagnostics / direct solve)."""
-    flat, unravel = jax.flatten_util.ravel_pytree(example_x)
-    d = flat.shape[0]
+    """Densify a matvec to its (d, d) matrix (diagnostics / direct solve).
 
-    def col(i):
-        e = jnp.zeros(d, flat.dtype).at[i].set(1.0)
-        out, _ = jax.flatten_util.ravel_pytree(matvec(unravel(e)))
-        return out
-
-    return jax.vmap(col)(jnp.arange(d)).T
+    A ``LinearOperator`` materializes itself (O(1) for dense/structured
+    operators); bare closures are probed with basis vectors.
+    """
+    return _as_probe_operator(matvec, example_x, 0).materialize()
 
 
 # ---------------------------------------------------------------------------
 # flat (B, d) view of a batched pytree operator
+#
+# The view itself lives in repro.core.operators (``ravel_view`` — one ravel
+# shim for the whole stack); this layer adds the dense materialization with
+# an operator fast path.
 # ---------------------------------------------------------------------------
 
-class _FlatView(NamedTuple):
-    """Batched flat representation: leaves (B, ...) <-> matrix (B, d)."""
-    mv: Callable          # (B, d) -> (B, d)
-    b: jnp.ndarray        # (B, d)
-    to_tree: Callable     # (B, d) -> batched pytree
-    batched: bool         # whether the original call was batch_ndim == 1
-
-
-def _flat_view(matvec: Callable, b, batch_ndim: int) -> _FlatView:
-    if batch_ndim == 0:
-        b_flat, unravel = jax.flatten_util.ravel_pytree(b)
-
-        def mv(vf):  # (1, d) -> (1, d)
-            out, _ = jax.flatten_util.ravel_pytree(matvec(unravel(vf[0])))
-            return out[None]
-
-        return _FlatView(mv, b_flat[None], lambda xf: unravel(xf[0]), False)
-
-    example = jax.tree_util.tree_map(lambda l: l[0], b)
-    _, unravel = jax.flatten_util.ravel_pytree(example)
-    ravel1 = lambda t: jax.flatten_util.ravel_pytree(t)[0]
-    b_flat = jax.vmap(ravel1)(b)
-
-    def mv(vf):  # (B, d) -> (B, d)
-        return jax.vmap(ravel1)(matvec(jax.vmap(unravel)(vf)))
-
-    return _FlatView(mv, b_flat, jax.vmap(unravel), True)
-
-
 def materialize_batched(matvec: Callable, b, batch_ndim: int = 0,
-                        view: Optional[_FlatView] = None):
+                        view: Optional[RavelView] = None):
     """Densify a (possibly batched) operator to (B, d, d) plus the flat view.
 
-    Probes with basis vectors broadcast across the batch, so the cost is d
-    matvecs regardless of batch size.
+    A ``LinearOperator`` (with matching batchedness) materializes itself —
+    O(1) for ``DenseOperator``/``RidgeShifted`` stacks, which is what makes
+    the dense-regime solvers auto-materialize instead of probing.  Bare
+    closures are probed with basis vectors broadcast across the batch, so
+    the cost is d matvecs regardless of batch size.
     """
     if view is None:
-        view = _flat_view(matvec, b, batch_ndim)
+        view = ravel_view(matvec, b, batch_ndim)
     B, d = view.b.shape
-
-    def col(i):
-        e = jnp.zeros(d, view.b.dtype).at[i].set(1.0)
-        return view.mv(jnp.broadcast_to(e, (B, d)))   # (B, d) = A e_i
-
-    cols = jax.vmap(col)(jnp.arange(d))               # (d, B, d)
-    return cols.transpose(1, 2, 0), view              # A[b][:, i] = cols[i, b]
+    A = _as_probe_operator(matvec, b, batch_ndim).materialize()
+    A = A if batch_ndim else A[None]
+    return jnp.broadcast_to(A, (B, d, d)), view
 
 
 # ---------------------------------------------------------------------------
 # preconditioning hooks
 # ---------------------------------------------------------------------------
 
-def jacobi_preconditioner(diag):
-    """M⁻¹ v = v / diag, elementwise over a pytree of diagonals."""
-    safe = jax.tree_util.tree_map(
-        lambda dg: jnp.where(jnp.abs(dg) > 1e-30, dg, 1.0), diag)
-    return lambda v: jax.tree_util.tree_map(lambda x, dg: x / dg, v, safe)
-
-
 def diagonal_of_matvec(matvec: Callable, b, batch_ndim: int = 0):
-    """Extract diag(A) by probing with basis vectors (d matvecs, vmapped).
+    """Extract diag(A) with the same (possibly batched) structure as ``b``.
 
-    Returns the diagonal with the same (possibly batched) structure as ``b``.
+    A ``LinearOperator`` (with matching batchedness) answers via its own
+    ``diagonal()`` — O(1) for structured operators; bare closures pay d
+    probing matvecs (vmapped across instances).
     """
-    view = _flat_view(matvec, b, batch_ndim)
-    B, d = view.b.shape
-
-    def entry(i):
-        e = jnp.zeros(d, view.b.dtype).at[i].set(1.0)
-        return view.mv(jnp.broadcast_to(e, (B, d)))[:, i]   # (B,)
-
-    diag = jax.vmap(entry)(jnp.arange(d)).T                 # (B, d)
-    return view.to_tree(diag)
+    return _as_probe_operator(matvec, b, batch_ndim).diagonal()
 
 
-def _resolve_precond(precond, matvec, b, batch_ndim: int, diag=None):
-    """None | callable | "jacobi" -> callable M⁻¹ (or None).
+def _resolve_precond(precond, matvec, b, batch_ndim: int, diag=None,
+                     materialized=None):
+    """None | callable | "jacobi" | "block_jacobi" -> callable M⁻¹ (or None).
 
-    ``diag`` short-circuits the operator probing for ``"jacobi"`` when the
-    caller already holds the diagonal (e.g. off a materialized operator).
+    ``diag``/``materialized`` short-circuit the operator probing when the
+    caller already holds the diagonal or the dense matrix (the dense-regime
+    solvers materialize anyway — no second probing pass).  ``"block_jacobi"``
+    needs a ``LinearOperator`` (the domain's pytree leaves — or a
+    ``BlockDiagonal``'s blocks — define the blocks).
     """
     if precond is None or callable(precond):
         return precond
@@ -220,8 +205,15 @@ def _resolve_precond(precond, matvec, b, batch_ndim: int, diag=None):
         if diag is None:
             diag = diagonal_of_matvec(matvec, b, batch_ndim)
         return jacobi_preconditioner(diag)
-    raise ValueError(f"unknown preconditioner {precond!r}; "
-                     "expected None, a callable M⁻¹, or 'jacobi'")
+    if precond == "block_jacobi":
+        if not isinstance(matvec, LinearOperator):
+            raise ValueError("precond='block_jacobi' derives blocks from "
+                             "operator structure; pass a LinearOperator "
+                             "(or use 'jacobi' / a callable M⁻¹)")
+        return operators.block_jacobi_preconditioner(
+            matvec, materialized=materialized)
+    raise ValueError(f"unknown preconditioner {precond!r}; expected None, "
+                     "a callable M⁻¹, 'jacobi', or 'block_jacobi'")
 
 
 # ---------------------------------------------------------------------------
@@ -428,8 +420,8 @@ def _flat_init(init, b_flat, batch_ndim: int):
     if init is None:
         return jnp.zeros_like(b_flat)
     if batch_ndim == 0:
-        return jax.flatten_util.ravel_pytree(init)[0][None]
-    return jax.vmap(lambda t: jax.flatten_util.ravel_pytree(t)[0])(init)
+        return _ravel1(init)[None]
+    return jax.vmap(_ravel1)(init)
 
 
 def _gmres_flat(mv: Callable, b_flat, x0, *, tol: float, restart: int,
@@ -524,7 +516,7 @@ def solve_gmres(matvec: Callable, b, *, init=None, tol: float = 1e-6,
         matvec = lambda v: M(inner(v))
         b = M(b)
 
-    view = _flat_view(matvec, b, batch_ndim)
+    view = ravel_view(matvec, b, batch_ndim)
     x0 = _flat_init(init, view.b, batch_ndim)
     x, rn, it, atol = _gmres_flat(view.mv, view.b, x0, tol=tol,
                                   restart=restart, maxiter=maxiter)
@@ -558,7 +550,7 @@ def solve_dense_gmres(matvec: Callable, b, *, init=None, tol: float = 1e-6,
     always reports the TRUE residual.
     """
     matvec = _damped(matvec, ridge)
-    view = _flat_view(matvec, b, batch_ndim)
+    view = ravel_view(matvec, b, batch_ndim)
     d = view.b.shape[-1]
     if d > MAX_DENSE_DIM:   # guard BEFORE the d-matvec dense materialization
         raise ValueError(
@@ -574,15 +566,14 @@ def solve_dense_gmres(matvec: Callable, b, *, init=None, tol: float = 1e-6,
     # in _resolve_precond/jacobi_preconditioner, shared with all solvers.
     M_tree = _resolve_precond(
         precond, matvec, b, batch_ndim,
-        diag=view.to_tree(jnp.diagonal(A, axis1=-2, axis2=-1)))
+        diag=view.to_tree(jnp.diagonal(A, axis1=-2, axis2=-1)),
+        materialized=A if view.batched else A[0])
     if M_tree is None:
         M_flat = None
+    elif view.batched:
+        M_flat = lambda vf: jax.vmap(_ravel1)(M_tree(view.to_tree(vf)))
     else:
-        flat1 = lambda t: jax.flatten_util.ravel_pytree(t)[0]
-        if view.batched:
-            M_flat = lambda vf: jax.vmap(flat1)(M_tree(view.to_tree(vf)))
-        else:
-            M_flat = lambda vf: flat1(M_tree(view.to_tree(vf)))[None]
+        M_flat = lambda vf: _ravel1(M_tree(view.to_tree(vf)))[None]
 
     mv = dense_mv if M_flat is None else (lambda vf: M_flat(dense_mv(vf)))
     b_flat = view.b if M_flat is None else M_flat(view.b)
@@ -697,7 +688,7 @@ def solve_pallas_cg(matvec: Callable, b, *, init=None, tol: float = 1e-6,
     from repro.kernels.batched_cg.ops import batched_cg  # lazy: avoid cycle
 
     matvec = _damped(matvec, ridge)
-    view = _flat_view(matvec, b, batch_ndim)
+    view = ravel_view(matvec, b, batch_ndim)
     d = view.b.shape[-1]
     if d > MAX_DENSE_DIM:   # guard BEFORE the d-matvec dense materialization
         raise ValueError(
@@ -765,16 +756,50 @@ def get_solver(name_or_fn):
 def solver_is_symmetric(name_or_fn) -> bool:
     """True when the routed solver asserts a symmetric operator.
 
-    The implicit-diff layer uses this as its transpose hook: for a
-    symmetric-only solver (``cg``, ``pallas_cg``) the tangent system
-    ``A dx = b`` and the cotangent system ``Aᵀ u = v`` share one operator,
-    so the reverse-transposable tangent solve can reuse the forward matvec
-    instead of transposing it.  Custom callables conservatively report
-    False (general A).
+    The implicit-diff layer consults this when it *constructs* its
+    ``JacobianOperator``: choosing a symmetric-only solver (``cg``,
+    ``pallas_cg``) certifies ``A = Aᵀ``, so the operator is built with
+    ``symmetric=True`` and the cotangent system ``Aᵀ u = v`` reuses the
+    forward matvec (``A.T is A``).  Downstream, everything reads the flag
+    off the operator, not off this hook.  Custom callables conservatively
+    report False (general A).
     """
     if callable(name_or_fn):
         return False
     return get_spec(name_or_fn).symmetric_only
+
+
+def _check_operator_routing(spec: SolverSpec, A) -> None:
+    """Symmetric-only solvers must never receive an operator that declares
+    itself nonsymmetric (an undeclared ``symmetric=None`` trusts the
+    caller's solver choice, as matvec closures always had to)."""
+    if (isinstance(A, LinearOperator) and spec.symmetric_only
+            and A.symmetric is False):
+        raise ValueError(
+            f"solver {spec.name!r} requires a symmetric operator, but "
+            f"{A!r} declares symmetric=False — route a general solver "
+            "(gmres/bicgstab/normal_cg/dense_gmres) instead")
+
+
+def _resolve_auto(A, example, precond=None, init=None) -> str:
+    """Pick a registry solver from operator structure + system size.
+
+    The dense small-system regime (d ≤ ``MAX_DENSE_DIM``) auto-materializes:
+    SPD operators take the fused ``pallas_cg`` kernel (falling back to the
+    batched ``dense_gmres`` when a preconditioner or a warm start is
+    requested — ``pallas_cg`` supports neither), everything else
+    ``dense_gmres``.  Above the crossover the solve stays matrix-free:
+    ``cg`` only for declared-SPD operators (symmetric alone is not enough —
+    CG on a symmetric *indefinite* system can report convergence with a
+    wrong answer), ``normal_cg`` (general, transpose-capable) otherwise.
+    ``example`` is one instance-shaped right-hand side (sizes the system).
+    """
+    spd = A.positive_definite if isinstance(A, LinearOperator) else False
+    d = _ravel1(example).shape[0]
+    if d <= MAX_DENSE_DIM:
+        plain = precond is None and init is None
+        return "pallas_cg" if spd and plain else "dense_gmres"
+    return "cg" if spd else "normal_cg"
 
 
 def route_solve(solve, matvec, b, *, tol: float = 1e-6, maxiter: int = 1000,
@@ -783,18 +808,27 @@ def route_solve(solve, matvec, b, *, tol: float = 1e-6, maxiter: int = 1000,
 
     The single dispatch point the differentiation layer calls for both the
     tangent (``A dx = b``) and cotangent (``Aᵀ u = v``) systems — ``solve``
-    is a registry name or a bare callable ``fn(matvec, b, tol, maxiter,
-    ridge)``.  Mirrors ``solve()``'s contract: ``precond`` requires a
-    registry solver that supports it and is never silently dropped.
-    Vmap-safe like every registry solver: batched tracers dispatch ONE
-    masked solve for the whole batch.
+    is a registry name, ``"auto"``, or a bare callable ``fn(matvec, b, tol,
+    maxiter, ridge)``.  ``matvec`` may be a ``LinearOperator``: its
+    symmetry flag is validated against the routed solver (symmetric-only
+    solvers never receive a declared-nonsymmetric operator), ``"auto"``
+    dispatches on its structure (dense small systems auto-materialize — see
+    ``_resolve_auto``), and ``"jacobi"``/``"block_jacobi"`` preconditioners
+    derive from ``operator.diagonal()`` instead of probing.  Mirrors
+    ``solve()``'s contract: ``precond`` requires a registry solver that
+    supports it and is never silently dropped.  Vmap-safe like every
+    registry solver: batched tracers dispatch ONE masked solve for the
+    whole batch.
     """
+    if solve == "auto":
+        solve = _resolve_auto(matvec, b, precond)
     if callable(solve):
         if precond is not None:
             raise ValueError("precond requires a registry solver name; "
                              "bake it into the custom solve callable instead")
         return solve(matvec, b, tol=tol, maxiter=maxiter, ridge=ridge)
     spec = get_spec(solve)
+    _check_operator_routing(spec, matvec)
     if precond is not None and not spec.supports_precond:
         raise ValueError(f"solver {spec.name!r} does not support "
                          "preconditioning; see SolverSpec.supports_precond")
@@ -840,24 +874,51 @@ def solve(matvec: Callable, b, *, method="cg", batch_axes: Optional[int] = None,
     """Uniform entry point of the batched linear-solve engine.
 
     Args:
-      matvec: linear operator.  Unbatched: maps an instance pytree to an
-        instance pytree.  With ``batch_axes`` set: maps *batched* pytrees
-        (every leaf carrying the batch axis) to batched pytrees — i.e. the
-        block-diagonal operator over all instances, applied at once.
+      matvec: linear operator — a ``LinearOperator`` or a matvec closure.
+        Unbatched: maps an instance pytree to an instance pytree.  With
+        ``batch_axes`` set: maps *batched* pytrees (every leaf carrying the
+        batch axis) to batched pytrees — i.e. the block-diagonal operator
+        over all instances, applied at once.  A batch-aware operator
+        (``batch_ndim == 1``) implies ``batch_axes=0`` automatically, and
+        its symmetry/definiteness flags drive validation, ``"auto"``
+        dispatch, and preconditioner derivation.
       b: right-hand side pytree (batched along ``batch_axes`` if set).
-      method: registry name (see ``available_solvers()``) or a solver callable
-        ``fn(matvec, b, **kw)``.  Callables cannot be combined with
-        ``batch_axes`` (they would need to handle batching themselves).
+      method: registry name (see ``available_solvers()``), ``"auto"``
+        (structure-driven dispatch: dense small systems auto-materialize to
+        ``pallas_cg``/``dense_gmres``, large ones stay matrix-free), or a
+        solver callable ``fn(matvec, b, **kw)``.  Callables cannot be
+        combined with ``batch_axes`` (they would need to handle batching
+        themselves); a batch-aware *operator* passes to a callable as-is,
+        batching included.
       batch_axes: ``None`` for a single system, or an int axis carried by
         every leaf of ``b``/``init`` along which independent systems stack.
         The whole batch is solved by ONE masked while_loop: converged
         instances freeze while stragglers iterate.
-      precond: ``None``, a callable v ↦ M⁻¹v, or ``"jacobi"`` (builds the
-        diagonal preconditioner by probing the operator).
+      precond: ``None``, a callable v ↦ M⁻¹v, ``"jacobi"`` (diagonal — from
+        ``operator.diagonal()`` when available, else probing), or
+        ``"block_jacobi"`` (``LinearOperator`` only; blocks from the
+        domain's pytree leaves or a ``BlockDiagonal``'s blocks).
       tol / maxiter / ridge / init: the usual solver controls.
       return_info: also return a ``SolveInfo`` with per-instance iteration
         counts, residuals and convergence flags.
     """
+    # a callable method takes the operator as-is (it owns batching); the
+    # batch-axes implication below is for registry solvers only
+    if isinstance(matvec, LinearOperator) and not callable(method):
+        if batch_axes is None and matvec.batch_ndim == 1:
+            batch_axes = 0
+        expected = 0 if batch_axes is None else 1
+        if matvec.batch_ndim != expected or batch_axes not in (None, 0):
+            raise ValueError(
+                f"operator batch_ndim={matvec.batch_ndim} is incompatible "
+                f"with batch_axes={batch_axes}; batch-aware operators carry "
+                "their batch on axis 0")
+    if method == "auto":
+        example = b
+        if batch_axes is not None:
+            example = jax.tree_util.tree_map(
+                lambda l: jnp.take(l, 0, axis=int(batch_axes)), b)
+        method = _resolve_auto(matvec, example, precond, init)
     if callable(method):
         if batch_axes is not None:
             raise ValueError("batch_axes requires a registry solver name; "
@@ -869,6 +930,7 @@ def solve(matvec: Callable, b, *, method="cg", batch_axes: Optional[int] = None,
                       init=init, **solver_kwargs)
 
     spec = get_spec(method)
+    _check_operator_routing(spec, matvec)
     if precond is not None and not spec.supports_precond:
         raise ValueError(f"solver {spec.name!r} does not support "
                          "preconditioning; see SolverSpec.supports_precond")

@@ -59,7 +59,6 @@ def kkt(f: Callable, G: Optional[Callable] = None,
 
     def F(x, theta):
         theta_f = theta[0]
-        idx = 1
         if H is not None and G is not None:
             z, nu, lambd = x
             theta_H, theta_G = theta[1], theta[2]

@@ -7,7 +7,6 @@ Signature convention: ``prox(y, hyperparams, scaling=1.0)`` computes
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 

@@ -43,6 +43,7 @@ from repro.core import diff_api, optimality
 # tree math shared with the linear-solve engine (instance-shaped: the
 # runtime never carries an explicit batch axis — vmap supplies it)
 from repro.core.linear_solve import _tree_l2, _tree_sub
+from repro.core.operators import _ravel1
 
 
 # ---------------------------------------------------------------------------
@@ -68,6 +69,41 @@ def _inf_like(params):
     """An +inf error scalar with the dtype ``_tree_l2(params)`` will have,
     so the while_loop carry dtype is stable from the first iteration."""
     return jnp.full((), jnp.inf, dtype=_tree_l2(params).dtype)
+
+
+# ---------------------------------------------------------------------------
+# raveled-iterate cache (LBFGS / Anderson hot-loop hoist)
+#
+# The iterate is raveled ONCE in init_state; update() carries the flat
+# vector in the state and only needs the unravel closure, cached on the
+# solver instance.  The cache is keyed by pytree structure + leaf shapes so
+# one solver instance reused across problems with different structures
+# safely rebuilds the closure instead of unraveling with the wrong one.
+# ---------------------------------------------------------------------------
+
+def _structure_key(params):
+    return (jax.tree_util.tree_structure(params),
+            tuple((jnp.shape(l), str(jnp.result_type(l)))
+                  for l in jax.tree_util.tree_leaves(params)))
+
+
+def _ravel_iterate(solver, params):
+    """Ravel the iterate (init_state only) and cache the unravel closure."""
+    x0, unravel = jax.flatten_util.ravel_pytree(params)
+    solver._unravel_key = _structure_key(params)
+    solver._unravel = unravel
+    return x0
+
+
+def _unravel_for(solver, params):
+    """The cached unravel closure for ``params``'s structure (no ravel on
+    the hot path; a structure mismatch — new problem on the same instance,
+    or a direct update() call — rebuilds it)."""
+    if getattr(solver, "_unravel_key", None) != _structure_key(params):
+        _, unravel = jax.flatten_util.ravel_pytree(params)
+        solver._unravel_key = _structure_key(params)
+        solver._unravel = unravel
+    return solver._unravel
 
 
 # ---------------------------------------------------------------------------
@@ -114,7 +150,9 @@ class IterativeSolver:
     self-wrapping with the mode-polymorphic ``diff_api.implicit_diff`` on
     the declared optimality mapping (see ``diff_spec()``).  The backward/
     tangent linear solve goes through the ``SolverSpec`` registry:
-    ``solve`` names the registry solver (or is a callable), and ``precond``
+    ``solve`` names the registry solver (``"auto"`` dispatches on the
+    implicit system's ``LinearOperator`` structure, or pass a callable),
+    and ``precond`` (incl. operator-derived ``"jacobi"``/``"block_jacobi"``)
     / ``ridge`` / ``linsolve_tol`` / ``linsolve_maxiter`` are forwarded.
 
     ``mode`` selects the differentiation wrapping (overridable per call via
@@ -471,6 +509,8 @@ class Newton(IterativeSolver):
 class LbfgsState(NamedTuple):
     iter_num: jnp.ndarray
     error: jnp.ndarray
+    x_flat: jnp.ndarray        # (d,) the raveled iterate (ravel hoisted
+                               # out of update(): once, in init_state)
     S: jnp.ndarray             # (history, d) step differences
     Y: jnp.ndarray             # (history, d) gradient differences
     rho: jnp.ndarray           # (history,)
@@ -479,7 +519,16 @@ class LbfgsState(NamedTuple):
 @dataclasses.dataclass(eq=False)
 class LBFGS(IterativeSolver):
     """L-BFGS with fixed step on the raveled iterate; optimality =
-    stationarity.  ``error`` is ‖∇f‖ at the post-step iterate."""
+    stationarity.  ``error`` is ‖∇f‖ at the post-step iterate.
+
+    The iterate is raveled ONCE in ``init_state`` (the flat vector rides in
+    the state, the unravel closure on the instance) — ``update`` never
+    re-ravels the params pytree.  Contract for direct protocol callers:
+    ``state.x_flat`` is the CANONICAL iterate and ``update``'s ``params``
+    argument supplies structure only; to override the iterate mid-run
+    (e.g. a projection step), re-enter via ``init_state`` on the modified
+    params instead of editing them between ``update`` calls.
+    """
     fun: Callable = None
     history: int = 10
     stepsize: float = 1.0
@@ -488,15 +537,16 @@ class LBFGS(IterativeSolver):
         return jax.grad(self.fun, argnums=0)(params, *theta)
 
     def init_state(self, params, *theta):
-        x0, _ = jax.flatten_util.ravel_pytree(params)
+        x0 = _ravel_iterate(self, params)
         d, m = x0.shape[0], self.history
-        return LbfgsState(jnp.asarray(0), _inf_like(params),
+        return LbfgsState(jnp.asarray(0), _inf_like(params), x_flat=x0,
                           S=jnp.zeros((m, d), x0.dtype),
                           Y=jnp.zeros((m, d), x0.dtype),
                           rho=jnp.zeros((m,), x0.dtype))
 
     def update(self, params, state, *theta):
-        x, unravel = jax.flatten_util.ravel_pytree(params)
+        # the flat iterate rides in the state; params supplies structure only
+        x, unravel = state.x_flat, _unravel_for(self, params)
         grad = jax.grad(lambda v: self.fun(unravel(v), *theta))
         S, Y, rho, k = state.S, state.Y, state.rho, state.iter_num
         m = self.history
@@ -542,8 +592,8 @@ class LBFGS(IterativeSolver):
         Y = Y.at[slot].set(jnp.where(ok, y, Y[slot]))
         rho = rho.at[slot].set(jnp.where(ok, 1.0 / jnp.where(ok, sy, 1.0),
                                          rho[slot]))
-        new_state = LbfgsState(k + 1, jnp.linalg.norm(g_new), S=S, Y=Y,
-                               rho=rho)
+        new_state = LbfgsState(k + 1, jnp.linalg.norm(g_new), x_flat=x_new,
+                               S=S, Y=Y, rho=rho)
         return unravel(x_new), new_state
 
 
@@ -573,6 +623,8 @@ class FixedPointIteration(IterativeSolver):
 class AndersonState(NamedTuple):
     iter_num: jnp.ndarray
     error: jnp.ndarray
+    x_flat: jnp.ndarray        # (d,) the raveled iterate (ravel hoisted
+                               # out of update(): once, in init_state)
     X: jnp.ndarray             # (history, d) iterate history (raveled)
     F: jnp.ndarray             # (history, d) residual history g(x) = T(x) − x
 
@@ -584,6 +636,11 @@ class AndersonAcceleration(IterativeSolver):
     ``aa_ridge`` regularizes the least-squares mixing system (distinct from
     the inherited ``ridge``, which damps the *backward* linear solve).
     ``error`` is the residual ‖T(x) − x‖ at the pre-mixing iterate.
+    The iterate is raveled ONCE in ``init_state`` (the flat vector rides in
+    the state, the unravel closure on the instance) — ``update`` never
+    re-ravels the params pytree.  As for ``LBFGS``: ``state.x_flat`` is the
+    canonical iterate; ``update``'s ``params`` supplies structure only
+    (re-enter via ``init_state`` to override the iterate mid-run).
     """
     fixed_point_fun: Callable = None     # T(x, *theta)
     history: int = 5
@@ -591,20 +648,19 @@ class AndersonAcceleration(IterativeSolver):
     beta: float = 1.0
 
     def init_state(self, params, *theta):
-        x0, _ = jax.flatten_util.ravel_pytree(params)
+        x0 = _ravel_iterate(self, params)
         d, m = x0.shape[0], self.history
-        return AndersonState(jnp.asarray(0), _inf_like(params),
+        return AndersonState(jnp.asarray(0), _inf_like(params), x_flat=x0,
                              X=jnp.zeros((m, d), x0.dtype),
                              F=jnp.zeros((m, d), x0.dtype))
 
     def update(self, params, state, *theta):
-        x, unravel = jax.flatten_util.ravel_pytree(params)
+        # the flat iterate rides in the state; params supplies structure only
+        x, unravel = state.x_flat, _unravel_for(self, params)
         m = self.history
 
         def T_flat(v):
-            out, _ = jax.flatten_util.ravel_pytree(
-                self.fixed_point_fun(unravel(v), *theta))
-            return out
+            return _ravel1(self.fixed_point_fun(unravel(v), *theta))
 
         k = state.iter_num
         gx = T_flat(x) - x
@@ -622,4 +678,5 @@ class AndersonAcceleration(IterativeSolver):
         alpha = alpha / jnp.sum(alpha)
         x_new = alpha @ (X + self.beta * Fh)
         error = jnp.linalg.norm(gx)
-        return unravel(x_new), AndersonState(k + 1, error, X=X, F=Fh)
+        return unravel(x_new), AndersonState(k + 1, error, x_flat=x_new,
+                                             X=X, F=Fh)

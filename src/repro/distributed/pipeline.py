@@ -13,7 +13,6 @@ small host mesh.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable
 
 import jax
@@ -40,7 +39,6 @@ def pipeline_forward(block_fn: Callable, params_stacked: Any,
         """Runs on ONE stage. params_local: (L/S, ...); xs: (M, mb, ...)."""
         stage_id = lax.axis_index(stage_axis)
         M = xs.shape[0]
-        L_per = jax.tree_util.tree_leaves(params_local)[0].shape[0]
 
         def run_stage(x):
             def layer(h, p):

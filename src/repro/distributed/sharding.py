@@ -23,10 +23,9 @@ params pytree, so ``jax.jit(in_shardings=...)`` consumes them directly.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -83,7 +82,6 @@ def param_spec(path: Tuple[str, ...], shape: Tuple[int, ...],
     ``path`` is the flattened dict path (used for embedding special-casing);
     ``shape`` EXCLUDES the stacked layer axis (callers strip it).
     """
-    d_model_axis = rules.data if fsdp else None
     n_model = mesh_axis_size(mesh, rules.model)
     n_data = mesh_axis_size(mesh, rules.data)
     name = "/".join(str(p) for p in path)

@@ -17,8 +17,8 @@ import functools
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
+from repro.core.operators import LinearOperator, ravel_view
 from repro.kernels.batched_cg.kernel import batched_cg_pallas
 from repro.kernels.batched_cg.ref import batched_cg_ref
 
@@ -59,16 +59,31 @@ def batched_cg(A, b, *, tol: float = 1e-6, maxiter: Optional[int] = None,
     """Solve the batch of SPD systems A[i] x[i] = b[i] in one fused kernel.
 
     Args:
-      A: (B, d, d) symmetric positive-definite operators, d ≤ 512.
-      b: (B, d) right-hand sides.
+      A: (B, d, d) symmetric positive-definite operators, d ≤ 512 — or a
+        batch-aware SPD ``LinearOperator``, which auto-materializes
+        (O(1) for dense/structured operators, d probing matvecs otherwise)
+        with ``b`` the matching pytree of right-hand sides.
+      b: (B, d) right-hand sides ((batched) pytree for operator input).
       tol: relative residual tolerance per instance.
       maxiter: CG iteration cap (default: d, the exact-arithmetic bound).
       block_b: instances per Pallas program (VMEM tile height).
       interpret: True forces Pallas interpret mode; None auto-selects the
         pure-JAX reference path off-TPU and the compiled kernel on TPU.
 
-    Differentiable in A and b via the implicit-diff custom VJP.
+    Differentiable in A and b via the implicit-diff custom VJP (operator
+    input: in b, through the materialized matrix).
     """
+    if isinstance(A, LinearOperator):
+        if A.symmetric is False:
+            raise ValueError(f"batched_cg requires an SPD operator; {A!r} "
+                             "declares symmetric=False")
+        view = ravel_view(A, b, A.batch_ndim)
+        dense = A.materialize()
+        if A.batch_ndim == 0:
+            dense = dense[None]
+        x = batched_cg(dense, view.b, tol=tol, maxiter=maxiter,
+                       block_b=block_b, interpret=interpret)
+        return view.to_tree(x)
     B, d, _ = A.shape
     if maxiter is None:
         maxiter = d

@@ -20,7 +20,6 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 
 def _simplex_kernel(y_ref, o_ref, *, scale: float, iters: int):

@@ -20,12 +20,11 @@ import traceback
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro import configs
 from repro.analysis import hlo as hlo_an
 from repro.analysis import roofline as rf
-from repro.configs.base import ArchConfig
 from repro.distributed import sharding as shd
 from repro.launch import shapes as shp
 from repro.launch.mesh import make_production_mesh

@@ -15,8 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs
-from repro.models import (decode_step, forward, init_decode_state,
-                          init_params)
+from repro.models import decode_step, init_decode_state, init_params
 
 
 def main():

@@ -13,7 +13,7 @@ Skips (DESIGN.md §Arch-applicability):
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -12,10 +12,8 @@ Fault tolerance: SIGTERM checkpoints and exits; rerunning with the same
 from __future__ import annotations
 
 import argparse
-import os
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import configs

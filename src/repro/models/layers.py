@@ -15,8 +15,6 @@ dry-runs/smoke tests stay kernel-free on CPU.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 import math
 from typing import Any, Dict, Optional, Tuple
 

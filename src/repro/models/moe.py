@@ -13,7 +13,7 @@ experts, and the auxiliary load-balancing loss.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,6 @@ chunked Pallas kernel, with this module's ``wkv_scan_ref`` as its oracle.
 """
 from __future__ import annotations
 
-import math
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -23,7 +22,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.configs.base import ArchConfig
-from repro.models.layers import dense_init, rmsnorm, rmsnorm_init
+from repro.models.layers import dense_init
 
 Params = Dict[str, Any]
 

@@ -19,7 +19,7 @@ when the collective is materialized by GSPMD on the reduced tensor.
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

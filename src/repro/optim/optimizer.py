@@ -8,8 +8,7 @@ what makes optimizer sharding free under GSPMD.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,7 @@ import dataclasses
 import signal
 import threading
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List
 
 import numpy as np
 

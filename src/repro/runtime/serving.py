@@ -21,7 +21,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp

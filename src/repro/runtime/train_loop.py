@@ -13,17 +13,14 @@ backward with the gradient reduction.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
-from repro.distributed import sharding as shd
 from repro.models import model as mdl
 from repro.optim import optimizer as opt
 from repro.optim import grad_compression as gc

@@ -1,3 +1,5 @@
+import os
+
 import jax
 import pytest
 
@@ -8,3 +10,19 @@ jax.config.update("jax_enable_x64", True)
 @pytest.fixture
 def rng():
     return jax.random.PRNGKey(0)
+
+
+def require_hypothesis():
+    """Guard for property-test modules: skip without ``hypothesis`` locally,
+    but HARD-FAIL when ``REPRO_REQUIRE_HYPOTHESIS`` is set (the CI fast lane
+    sets it), so the property tests can never be silently skipped there.
+    """
+    try:
+        import hypothesis  # noqa: F401
+    except ImportError:
+        if os.environ.get("REPRO_REQUIRE_HYPOTHESIS"):
+            pytest.fail(
+                "hypothesis is not installed but REPRO_REQUIRE_HYPOTHESIS "
+                "is set — the property tests must actually run in CI "
+                "(pip install -e .[dev])", pytrace=False)
+        pytest.skip("hypothesis not installed", allow_module_level=True)

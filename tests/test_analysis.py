@@ -2,7 +2,6 @@
 are the §Roofline deliverable, so they get their own unit coverage."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.analysis import hlo, roofline

@@ -15,6 +15,9 @@ import repro.core
 # Names intentionally re-exported from repro.core (functions/classes), plus
 # the submodules that importing repro.core necessarily binds on the package.
 EXPECTED_SURFACE = {
+    # pytree-native linear operators
+    "LinearOperator", "JacobianOperator", "DenseOperator", "RidgeShifted",
+    "BlockDiagonal", "ComposedOperator", "as_operator",
     # implicit-diff API (mode-polymorphic)
     "ImplicitDiffSpec", "implicit_diff",
     "custom_root", "custom_fixed_point",
@@ -34,8 +37,8 @@ EXPECTED_SURFACE = {
     # DEQ layer
     "deq_fixed_point", "make_deq_block", "make_deq_solver",
     # submodules bound on the package by importing repro.core
-    "bilevel", "diff_api", "implicit_layer", "linear_solve", "optimality",
-    "projections", "prox", "solver_runtime", "solvers",
+    "bilevel", "diff_api", "implicit_layer", "linear_solve", "operators",
+    "optimality", "projections", "prox", "solver_runtime", "solvers",
 }
 
 

@@ -5,16 +5,12 @@ where multi-device execution is required (the main test process must keep the
 default 1-device view for everything else).  Pure spec-construction tests run
 in-process against a degenerate mesh.
 """
-import json
 import os
 import subprocess
 import sys
 import textwrap
 
 import jax
-import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from jax.sharding import PartitionSpec as P
 

@@ -81,9 +81,9 @@ print("LOSSES", json.dumps(losses))
 def test_elastic_restart_on_smaller_mesh(tmp_path):
     ckpt = str(tmp_path / "ckpt")
     # phase 1: 8 devices (4x2)
-    out1 = run_subprocess(PHASE.format(mesh_shape=(4, 2), start_step=0,
-                                       num_steps=6, ckpt_dir=ckpt),
-                          devices=8)
+    run_subprocess(PHASE.format(mesh_shape=(4, 2), start_step=0,
+                                num_steps=6, ckpt_dir=ckpt),
+                   devices=8)
     # phase 2: HALF the fleet (2x2) — elastic restore, continue training
     out2 = run_subprocess(PHASE.format(mesh_shape=(2, 2), start_step=6,
                                        num_steps=4, ckpt_dir=ckpt),

@@ -6,7 +6,7 @@ import pytest
 
 from repro.core import (custom_root, custom_fixed_point, custom_root_jvp,
                         custom_fixed_point_jvp, root_vjp, root_jvp,
-                        optimality, projections)
+                        optimality)
 
 
 def _ridge_problem(key, m=20, d=5):

@@ -166,7 +166,6 @@ class TestKernelsInsideModel:
         # interpret=True is plumbed via ops default only in tests: monkey-
         # patch the op to force interpret mode on CPU.
         import repro.kernels.flash_attention.ops as fa_ops
-        import repro.models.layers as mlayers
         orig = fa_ops.flash_attention
         try:
             fa_ops.flash_attention = lambda q, k, v, causal=True: orig(

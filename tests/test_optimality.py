@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import (custom_root, custom_fixed_point, optimality,
                         projections, prox, solvers)

@@ -4,7 +4,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")
+from conftest import require_hypothesis
+
+require_hypothesis()   # hard-fails under REPRO_REQUIRE_HYPOTHESIS (CI)
 from hypothesis import given, settings, strategies as st
 
 from repro.core import projections as P

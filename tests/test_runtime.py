@@ -7,7 +7,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")
+from conftest import require_hypothesis
+
+require_hypothesis()   # hard-fails under REPRO_REQUIRE_HYPOTHESIS (CI)
 from hypothesis import given, settings, strategies as st
 
 from repro import configs
@@ -135,8 +137,6 @@ class TestData:
         np.testing.assert_array_equal(y1, y2)
 
     def test_host_sharding_partitions_batch(self):
-        full = SyntheticLMStream(DataConfig(vocab_size=100, seq_len=8,
-                                            global_batch=8))
         h0 = SyntheticLMStream(DataConfig(vocab_size=100, seq_len=8,
                                           global_batch=8, num_hosts=2,
                                           host_id=0))

@@ -4,8 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (bilevel, custom_fixed_point, deq_fixed_point,
-                        make_deq_block, optimality, projections, prox,
+from repro.core import (bilevel, deq_fixed_point, make_deq_block, prox,
                         solvers)
 
 
