@@ -12,20 +12,24 @@ Prints ``name,us_per_call,derived`` CSV rows.
   bilevel batched-vs-looped hypergradients through the solver runtime
   fwdrev  JVP-mode vs VJP-mode implicit Jacobians across (p, d) regimes
   oproute matrix-free vs auto-materialized dense operator-routing crossover
+  sharded sharded vs single-device hypergradients (device-count scaling;
+          run under XLA_FLAGS=--xla_force_host_platform_device_count=8
+          for the full curve — the CI multi-device lane does)
   roofline per-(arch x shape) terms from the dry-run artifacts
 
 ``--smoke`` runs a fast CI subset (kernels + batched + bilevel + fwdrev +
-oproute) and writes the rows to ``BENCH_smoke.json`` (override with
-``--out``) for artifact upload.
+oproute + sharded) and writes the rows to ``BENCH_smoke.json`` (override
+with ``--out``) for artifact upload.
 """
 import argparse
 import sys
 import traceback
 
 
-SMOKE_BENCHES = ["kernels", "batched", "bilevel", "fwdrev", "oproute"]
+SMOKE_BENCHES = ["kernels", "batched", "bilevel", "fwdrev", "oproute",
+                 "sharded"]
 # accept run(emit, smoke=True)
-SMOKE_KWARG_BENCHES = {"batched", "bilevel", "fwdrev", "oproute"}
+SMOKE_KWARG_BENCHES = {"batched", "bilevel", "fwdrev", "oproute", "sharded"}
 
 
 def main() -> None:
@@ -42,7 +46,8 @@ def main() -> None:
                             dictionary_learning, distillation,
                             fwd_vs_rev_hypergrad, jacobian_precision,
                             kernels_micro, molecular_dynamics,
-                            operator_routing, roofline_report, svm_hyperopt)
+                            operator_routing, roofline_report,
+                            sharded_solve, svm_hyperopt)
     from benchmarks.common import Collector, emit
     all_benches = {
         "fig3": jacobian_precision.run,
@@ -55,6 +60,7 @@ def main() -> None:
         "bilevel": bilevel_hypergrad.run,
         "fwdrev": fwd_vs_rev_hypergrad.run,
         "oproute": operator_routing.run,
+        "sharded": sharded_solve.run,
         "roofline": roofline_report.run,
     }
     if args.only:

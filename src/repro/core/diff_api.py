@@ -128,6 +128,17 @@ class ImplicitDiffSpec:
     (0 = first argument after ``init``) that are static non-array values —
     Python callables, strings, hashable config.  They are passed through
     untouched and excluded from differentiation.
+
+    ``sharding`` (a ``repro.distributed.sharded_operators.SolveSharding``)
+    places the implicit system on a mesh: the ``JacobianOperator`` inherits
+    the primal solution's mesh + PartitionSpecs, the classic solver names
+    upgrade to their distributed variants (``cg`` → ``sharded_cg``, …), and
+    both modes' linear solves execute under ``shard_map`` with no host
+    gather.  The sharded tangent/cotangent solve runs on the native ``x``
+    pytree (the single-device path ravels to one flat leaf to sidestep
+    jax's per-leaf symbolic-zero transpose limitation) — with a multi-leaf
+    sharded ``x*``, reverse mode needs the downstream loss to engage every
+    leaf.
     """
     optimality_fun: Optional[Callable] = None
     fixed_point_fun: Optional[Callable] = None
@@ -138,6 +149,7 @@ class ImplicitDiffSpec:
     precond: Any = None
     has_aux: bool = False
     nondiff_argnums: Tuple[int, ...] = ()
+    sharding: Any = None
 
     def __post_init__(self):
         if self.optimality_fun is not None and \
@@ -186,24 +198,38 @@ class ImplicitDiffSpec:
 # ---------------------------------------------------------------------------
 
 def _implicit_system_operator(F: Callable, x_star, theta_args: tuple,
-                              solve) -> ops.JacobianOperator:
+                              solve, sharding=None) -> ops.LinearOperator:
     """``A = -∂₁F(x*, θ)`` as a ``JacobianOperator``.
 
     The symmetry flag is set at construction — routing a symmetric-only
-    solver (``cg``/``pallas_cg``) certifies ``A = Aᵀ`` — and every
-    downstream consumer (transpose reuse, ``custom_linear_solve``'s
+    solver (``cg``/``pallas_cg``/``sharded_cg``) certifies ``A = Aᵀ`` — and
+    every downstream consumer (transpose reuse, ``custom_linear_solve``'s
     ``symmetric=``, route validation, preconditioner derivation) reads it
     off the operator.
+
+    With ``sharding`` set, the operator is placed on the mesh: the primal
+    point and every theta argument become ``shard_map`` operands (specs
+    from the primal solution / ``theta_specs``), so the Jacobian matvec is
+    a per-shard JVP and the solve registry dispatches the distributed
+    solvers — the backward solve inherits the forward solve's placement.
     """
     certified = solve != "auto" and ls.solver_is_symmetric(solve)
-    return ops.JacobianOperator(
-        lambda x: F(x, *theta_args), x_star, negate=True,
-        symmetric=True if certified else None)
+    sym = True if certified else None
+    if sharding is None:
+        return ops.JacobianOperator(
+            lambda x: F(x, *theta_args), x_star, negate=True, symmetric=sym)
+
+    def jacobian_factory(x_local, *theta_local):
+        return ops.JacobianOperator(
+            lambda x: F(x, *theta_local), x_local, negate=True,
+            symmetric=sym, batch_ndim=sharding.batch_ndim)
+
+    return sharding.wrap(jacobian_factory, (x_star, *theta_args))
 
 
 def root_vjp(F: Callable, x_star, theta_args: tuple, cotangent,
              solve="normal_cg", tol: float = 1e-6, maxiter: int = 1000,
-             ridge: float = 0.0, precond=None):
+             ridge: float = 0.0, precond=None, sharding=None):
     """VJP through the implicitly-defined root: returns vᵀ ∂x*(θ) per θ arg.
 
     Solve Aᵀ u = v  (A = -∂₁F),  then  vᵀJ = uᵀB  (B = ∂₂F).
@@ -219,8 +245,10 @@ def root_vjp(F: Callable, x_star, theta_args: tuple, cotangent,
     """
     # A = -∂₁F(x*, θ) as a first-class operator: matvec is a JVP, rmatvec a
     # VJP, and choosing a symmetric-only solver certifies A = Aᵀ (so A.T is
-    # A and the cotangent solve reuses the forward matvec).
-    A = _implicit_system_operator(F, x_star, theta_args, solve)
+    # A and the cotangent solve reuses the forward matvec).  ``sharding``
+    # places it on a mesh (route_solve then dispatches the shard_map'd
+    # solvers — no host gather).
+    A = _implicit_system_operator(F, x_star, theta_args, solve, sharding)
     u = ls.route_solve(solve, A.T, cotangent, tol=tol, maxiter=maxiter,
                        ridge=ridge, precond=precond)
 
@@ -234,7 +262,7 @@ def root_vjp(F: Callable, x_star, theta_args: tuple, cotangent,
 
 def root_jvp(F: Callable, x_star, theta_args: tuple, tangents: tuple,
              solve="normal_cg", tol: float = 1e-6, maxiter: int = 1000,
-             ridge: float = 0.0, precond=None):
+             ridge: float = 0.0, precond=None, sharding=None):
     """JVP through the implicitly-defined root: J · v.
 
     Solve A (Jv) = B v  with  Bv = ∂₂F · v  computed by one JVP of F in θ.
@@ -244,7 +272,7 @@ def root_jvp(F: Callable, x_star, theta_args: tuple, tangents: tuple,
         return F(x_star, *targs)
 
     _, Bv = jax.jvp(f_of_theta, theta_args, tangents)
-    A = _implicit_system_operator(F, x_star, theta_args, solve)
+    A = _implicit_system_operator(F, x_star, theta_args, solve, sharding)
     return ls.route_solve(solve, A, Bv, tol=tol, maxiter=maxiter,
                           ridge=ridge, precond=precond)
 
@@ -306,6 +334,44 @@ def _tangent_root_solve(spec: ImplicitDiffSpec, residual: Callable, x_star,
     # built from transposable primitives — reverse mode pulls cotangents
     # back through it after the transpose solve).
     _, b = jax.jvp(F_of_diff_theta, tuple(diff_theta), tuple(diff_dot))
+
+    if spec.sharding is not None:
+        # Mesh-placed system: A (and Aᵀ) are ShardedOperators inheriting
+        # the primal solution's specs; the solve runs under shard_map via
+        # the sharded registry variants.  The solve stays on the native x
+        # pytree — the ShardedOperator's spec trees ARE its placement, and
+        # raveling would scramble them (see the spec docstring for the
+        # resulting multi-leaf cotangent caveat).  custom_linear_solve
+        # hands each direction a re-derived matvec closure; both directions
+        # route the ORIGINAL operator (forward) / its declared transpose
+        # instead, so the placement and flags travel into routing intact.
+        def F_diff(x, *dts):
+            return residual(x, *_merge_theta(nondiff_idx, nondiff_vals,
+                                             dts))
+
+        A = _implicit_system_operator(F_diff, x_star, diff_theta,
+                                      spec.solve, spec.sharding)
+        # String preconditioners ("jacobi"/"block_jacobi") stay strings
+        # here, unlike the unsharded branch's derive-once optimization:
+        # deriving outside shard_map would bake the GLOBAL diagonal into a
+        # closure that the per-shard solver then applies to LOCAL shards
+        # (shape mismatch / replicated capture).  Each direction's template
+        # resolves the string inside shard_map from its local operator —
+        # per-shard probing, correct by construction.
+        routing = spec.routing_kwargs()
+        if not transposable:
+            return ls.route_solve(spec.solve, A, b, **routing)
+
+        def sharded_solve(_matvec, rhs):
+            return ls.route_solve(spec.solve, A, rhs, **routing)
+
+        def sharded_transpose_solve(_vecmat, rhs):
+            return ls.route_solve(spec.solve, A.T, rhs, **routing)
+
+        return lax.custom_linear_solve(
+            A.matvec, b, solve=sharded_solve,
+            transpose_solve=sharded_transpose_solve,
+            symmetric=bool(A.symmetric))
 
     # One JacobianOperator per direction: A = -∂₁F(x*, θ), with the
     # symmetry certificate picked up at construction (see
@@ -425,7 +491,7 @@ def _wrap_vjp(spec: ImplicitDiffSpec, solver: Callable):
             return residual(x, *_merge_theta(nondiff_idx, nondiff_vals, dts))
 
         grads = root_vjp(F_diff, x_star, diff_theta, ct, solve=spec.solve,
-                         **spec.routing_kwargs())
+                         sharding=spec.sharding, **spec.routing_kwargs())
         zero_init = jax.tree_util.tree_map(jnp.zeros_like, init)
         return (zero_init,) + tuple(grads)
 

@@ -249,23 +249,29 @@ def _squeeze_info(info: SolveInfo) -> SolveInfo:
 
 def solve_cg(matvec: Callable, b, *, init=None, tol: float = 1e-6,
              maxiter: int = 1000, ridge: float = 0.0, precond=None,
-             return_info: bool = False, batch_ndim: int = 0):
+             return_info: bool = False, batch_ndim: int = 0, reduce=None):
     """(Preconditioned) conjugate gradient for symmetric PSD operators.
 
     ``ridge`` adds λI damping, the common non-invertibility heuristic.
     ``precond`` is ``None``, a callable v ↦ M⁻¹v, or ``"jacobi"``.
     Vmap-safe: converged instances freeze inside the single while_loop.
+    ``reduce`` post-processes every dot-product/norm reduction — the hook
+    the sharded solvers use to ``psum`` partial sums when the instance
+    dims are split across devices (``None``: plain local sums).
     """
     nb = batch_ndim
+    red = (lambda s: s) if reduce is None else reduce
+    tdot = lambda u, w: red(_tree_dot(u, w, nb))
+    tl2 = lambda u: jnp.sqrt(jnp.maximum(tdot(u, u).real, 0.0))
     matvec = _damped(matvec, ridge)
     M = _resolve_precond(precond, matvec, b, nb)
     x0 = _tree_zeros_like(b) if init is None else init
     r0 = _tree_sub(b, matvec(x0))
     z0 = M(r0) if M is not None else r0
     p0 = z0
-    rz0 = _tree_dot(r0, z0, nb)
-    rr0 = _tree_dot(r0, r0, nb).real
-    b_norm = _tree_l2(b, nb)
+    rz0 = tdot(r0, z0)
+    rr0 = tdot(r0, r0).real
+    b_norm = tl2(b)
     atol2 = jnp.maximum(tol * b_norm, 1e-30) ** 2
     done0 = rr0 <= atol2
     it0 = jnp.zeros_like(b_norm, dtype=jnp.int32)
@@ -278,14 +284,14 @@ def solve_cg(matvec: Callable, b, *, init=None, tol: float = 1e-6,
     def body(state):
         x, r, p, rz, rr, it, k, done = state
         ap = matvec(p)
-        denom = _tree_dot(p, ap, nb)
+        denom = tdot(p, ap)
         alpha = jnp.where(denom == 0, 0.0, rz / jnp.where(denom == 0, 1.0,
                                                           denom))
         x1 = _tree_add(x, p, alpha, nb)
         r1 = _tree_add(r, ap, -alpha, nb)
-        rr1 = _tree_dot(r1, r1, nb).real
+        rr1 = tdot(r1, r1).real
         z1 = M(r1) if M is not None else r1
-        rz1 = _tree_dot(r1, z1, nb)
+        rz1 = tdot(r1, z1)
         beta = rz1 / jnp.where(rz == 0, 1.0, rz)
         beta = jnp.where(rz == 0, 0.0, beta)
         p1 = _tree_add(z1, p, beta, nb)
@@ -309,7 +315,8 @@ def solve_cg(matvec: Callable, b, *, init=None, tol: float = 1e-6,
 def solve_normal_cg(matvec: Callable, b, *, init=None, rmatvec=None,
                     tol: float = 1e-6, maxiter: int = 1000,
                     ridge: float = 0.0, precond=None,
-                    return_info: bool = False, batch_ndim: int = 0):
+                    return_info: bool = False, batch_ndim: int = 0,
+                    reduce=None):
     """Solve A x = b via CG on AᵀA x = Aᵀ b.  Works for any square A."""
     example = _tree_zeros_like(b) if init is None else init
     if rmatvec is None:
@@ -320,7 +327,8 @@ def solve_normal_cg(matvec: Callable, b, *, init=None, rmatvec=None,
 
     return solve_cg(normal_mv, rmatvec(b), init=init, tol=tol,
                     maxiter=maxiter, ridge=ridge, precond=precond,
-                    return_info=return_info, batch_ndim=batch_ndim)
+                    return_info=return_info, batch_ndim=batch_ndim,
+                    reduce=reduce)
 
 
 # ---------------------------------------------------------------------------
@@ -772,23 +780,36 @@ def solver_is_symmetric(name_or_fn) -> bool:
 def _check_operator_routing(spec: SolverSpec, A) -> None:
     """Symmetric-only solvers must never receive an operator that declares
     itself nonsymmetric (an undeclared ``symmetric=None`` trusts the
-    caller's solver choice, as matvec closures always had to)."""
+    caller's solver choice, as matvec closures always had to).  The error
+    names BOTH sides of the mismatch — the requested solver and the
+    operator's declared flags — so auto-routing failures point at the
+    declaration to fix."""
     if (isinstance(A, LinearOperator) and spec.symmetric_only
             and A.symmetric is False):
         raise ValueError(
-            f"solver {spec.name!r} requires a symmetric operator, but "
-            f"{A!r} declares symmetric=False — route a general solver "
-            "(gmres/bicgstab/normal_cg/dense_gmres) instead")
+            f"requested solver {spec.name!r} is symmetric-only, but the "
+            f"operator {A!r} declares symmetric={A.symmetric} "
+            f"(positive_definite={A.positive_definite}) — route a general "
+            "solver (gmres/bicgstab/normal_cg/dense_gmres) instead, or fix "
+            "the operator's declared flags if it really is symmetric")
 
 
 def _resolve_auto(A, example, precond=None, init=None) -> str:
     """Pick a registry solver from operator structure + system size.
 
-    The dense small-system regime (d ≤ ``MAX_DENSE_DIM``) auto-materializes:
-    SPD operators take the fused ``pallas_cg`` kernel (falling back to the
-    batched ``dense_gmres`` when a preconditioner or a warm start is
-    requested — ``pallas_cg`` supports neither), everything else
-    ``dense_gmres``.  Above the crossover the solve stays matrix-free:
+    Sharded operands dispatch first: a ``ShardedOperator`` (carrying a mesh
+    + PartitionSpecs) routes to the distributed variants — ``sharded_cg``
+    for declared-SPD, ``sharded_dense_gmres`` for small nonsymmetric
+    systems whose instance dims stay device-local (each shard materializes
+    its own batch slice), ``sharded_normal_cg`` otherwise — so every solve
+    a mesh-placed operator reaches runs inside ``shard_map`` with no host
+    gather.
+
+    Single-device: the dense small-system regime (d ≤ ``MAX_DENSE_DIM``)
+    auto-materializes: SPD operators take the fused ``pallas_cg`` kernel
+    (falling back to the batched ``dense_gmres`` when a preconditioner or a
+    warm start is requested — ``pallas_cg`` supports neither), everything
+    else ``dense_gmres``.  Above the crossover the solve stays matrix-free:
     ``cg`` only for declared-SPD operators (symmetric alone is not enough —
     CG on a symmetric *indefinite* system can report convergence with a
     wrong answer), ``normal_cg`` (general, transpose-capable) otherwise.
@@ -796,10 +817,38 @@ def _resolve_auto(A, example, precond=None, init=None) -> str:
     """
     spd = A.positive_definite if isinstance(A, LinearOperator) else False
     d = _ravel1(example).shape[0]
+    if getattr(A, "is_sharded", False):
+        if spd:
+            return "sharded_cg"
+        if d <= MAX_DENSE_DIM and not A.instance_sharded:
+            return "sharded_dense_gmres"
+        return "sharded_normal_cg"
     if d <= MAX_DENSE_DIM:
         plain = precond is None and init is None
         return "pallas_cg" if spd and plain else "dense_gmres"
     return "cg" if spd else "normal_cg"
+
+
+# A mesh-placed operator upgrades the classic method names to their
+# distributed variants, so ``solve="cg"`` in an ``ImplicitDiffSpec`` (which
+# also certifies symmetry — see ``solver_is_symmetric``) transparently runs
+# the sharded solve once placement is attached.  The single-device
+# MATERIALIZING solvers also upgrade (``pallas_cg`` → ``sharded_cg``,
+# ``lu`` → ``sharded_dense_gmres``): densifying a mesh-placed operator
+# outside shard_map would gather the global (B, d, d) stack to one device,
+# which this subsystem exists to avoid.  Matrix-free general solvers
+# (gmres/bicgstab/neumann) keep their names: their matvecs already run
+# under shard_map through the operator, with reductions partitioned by XLA.
+_SHARDED_UPGRADE = {"cg": "sharded_cg", "normal_cg": "sharded_normal_cg",
+                    "dense_gmres": "sharded_dense_gmres",
+                    "pallas_cg": "sharded_cg",
+                    "lu": "sharded_dense_gmres"}
+
+
+def _upgrade_for_sharded(method, matvec):
+    if not callable(method) and getattr(matvec, "is_sharded", False):
+        return _SHARDED_UPGRADE.get(method, method)
+    return method
 
 
 def route_solve(solve, matvec, b, *, tol: float = 1e-6, maxiter: int = 1000,
@@ -821,7 +870,14 @@ def route_solve(solve, matvec, b, *, tol: float = 1e-6, maxiter: int = 1000,
     whole batch.
     """
     if solve == "auto":
-        solve = _resolve_auto(matvec, b, precond)
+        # _resolve_auto sizes the system from ONE instance: batch-aware
+        # operators (batch_ndim == 1, e.g. sharded batched systems) carry
+        # a leading batch axis on b that must not inflate d
+        example = b
+        if isinstance(matvec, LinearOperator) and matvec.batch_ndim == 1:
+            example = jax.tree_util.tree_map(lambda l: l[0], b)
+        solve = _resolve_auto(matvec, example, precond)
+    solve = _upgrade_for_sharded(solve, matvec)
     if callable(solve):
         if precond is not None:
             raise ValueError("precond requires a registry solver name; "
@@ -857,6 +913,47 @@ register_solver("neumann", solve_neumann,
 register_solver("pallas_cg", solve_pallas_cg, symmetric_only=True,
                 matrix_free=False,
                 description="fused Pallas batched-CG kernel (dense, d<=512)")
+
+
+# --- distributed variants (impl in repro.distributed.sharded_operators) ----
+# Registered here with lazy stubs so the registry surface is deterministic
+# (importing repro.core never pulls the distributed layer; the import cycle
+# linear_solve -> sharded_operators -> linear_solve resolves because this
+# side is deferred to call time).  They require a ShardedOperator operand —
+# the whole masked solve loop runs inside one shard_map on its mesh.
+
+def solve_sharded_cg(matvec, b, **kw):
+    """Distributed CG (SPD): whole masked loop under ``shard_map``; dot
+    products go through the operator's ``psum`` reduction hook."""
+    from repro.distributed import sharded_operators as dso
+    return dso.sharded_solve_cg(matvec, b, **kw)
+
+
+def solve_sharded_normal_cg(matvec, b, **kw):
+    """Distributed CG on the normal equations (general square A)."""
+    from repro.distributed import sharded_operators as dso
+    return dso.sharded_solve_normal_cg(matvec, b, **kw)
+
+
+def solve_sharded_dense_gmres(matvec, b, **kw):
+    """Distributed dense GMRES: each shard materializes + solves its batch
+    slice (batch sharding only)."""
+    from repro.distributed import sharded_operators as dso
+    return dso.sharded_solve_dense_gmres(matvec, b, **kw)
+
+
+register_solver("sharded_cg", solve_sharded_cg, symmetric_only=True,
+                supports_precond=True,
+                description="distributed CG under shard_map "
+                            "(ShardedOperator; A symmetric PSD)")
+register_solver("sharded_normal_cg", solve_sharded_normal_cg,
+                supports_precond=True,
+                description="distributed normal-equations CG under "
+                            "shard_map (ShardedOperator; general A)")
+register_solver("sharded_dense_gmres", solve_sharded_dense_gmres,
+                supports_precond=True, matrix_free=False,
+                description="per-shard dense GMRES under shard_map "
+                            "(ShardedOperator; batch sharding, d<=512)")
 
 def __getattr__(name):
     # Back-compat: the pre-registry name -> fn mapping, computed live so
@@ -919,6 +1016,7 @@ def solve(matvec: Callable, b, *, method="cg", batch_axes: Optional[int] = None,
             example = jax.tree_util.tree_map(
                 lambda l: jnp.take(l, 0, axis=int(batch_axes)), b)
         method = _resolve_auto(matvec, example, precond, init)
+    method = _upgrade_for_sharded(method, matvec)
     if callable(method):
         if batch_axes is not None:
             raise ValueError("batch_axes requires a registry solver name; "

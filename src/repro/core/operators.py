@@ -128,7 +128,14 @@ class LinearOperator:
     Subclasses implement ``matvec``; everything else has matrix-free
     defaults.  Operators are callable (``A(v) == A.matvec(v)``) so they pass
     anywhere a matvec closure is expected.
+
+    ``is_sharded`` marks mesh-placed operators
+    (``repro.distributed.sharded_operators.ShardedOperator``); the solve
+    registry reads it to dispatch the distributed solver variants without
+    this bottom layer importing the distribution layer.
     """
+
+    is_sharded = False
 
     def __init__(self, example, *, batch_ndim: int = 0,
                  symmetric: Optional[bool] = None,
@@ -152,14 +159,13 @@ class LinearOperator:
 
     def rmatvec(self, v):
         """Aᵀ v.  Symmetric operators reuse ``matvec``; the general default
-        builds the transpose once via ``jax.linear_transpose``."""
+        builds the transpose via ``jax.linear_transpose``.  Built per call,
+        NOT cached on the instance: operators are long-lived public API and
+        a closure traced under one jit/vmap leaks its tracers into later
+        calls under a different (or no) transformation."""
         if self.symmetric:
             return self.matvec(v)
-        transpose = getattr(self, "_linear_transpose", None)
-        if transpose is None:
-            transpose = jax.linear_transpose(self.matvec, self.example)
-            self._linear_transpose = transpose
-        (out,) = transpose(v)
+        (out,) = jax.linear_transpose(self.matvec, self.example)(v)
         return out
 
     def transpose(self) -> "LinearOperator":
@@ -308,7 +314,6 @@ class JacobianOperator(LinearOperator):
         self.primal = primal
         self.negate = negate
         self._sign = -1.0 if negate else 1.0
-        self._vjp_fun = None
 
     def matvec(self, v):
         _, jv = jax.jvp(self.fun, (self.primal,), (v,))
@@ -317,9 +322,11 @@ class JacobianOperator(LinearOperator):
     def rmatvec(self, v):
         if self.symmetric:
             return self.matvec(v)
-        if self._vjp_fun is None:
-            _, self._vjp_fun = jax.vjp(self.fun, self.primal)
-        (out,) = self._vjp_fun(v)
+        # linearized per call (not cached on the instance): a VJP closure
+        # traced under one transformation would leak its tracers into
+        # calls made under another — see LinearOperator.rmatvec
+        _, vjp_fun = jax.vjp(self.fun, self.primal)
+        (out,) = vjp_fun(v)
         return jax.tree_util.tree_map(jnp.negative, out) if self.negate \
             else out
 

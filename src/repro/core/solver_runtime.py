@@ -174,6 +174,11 @@ class IterativeSolver:
     linsolve_maxiter: int = _kw(1000)
     ridge: float = _kw(0.0)
     precond: Any = _kw(None)
+    # Mesh placement (a distributed.sharded_operators.SolveSharding): the
+    # iterate is pinned to its specs each step and the implicit backward/
+    # tangent solve runs sharded (the JacobianOperator inherits the
+    # placement; classic solver names upgrade to their sharded variants).
+    sharding: Any = _kw(None)
 
     # -- protocol ----------------------------------------------------------
     def init_state(self, params, *theta):
@@ -204,6 +209,10 @@ class IterativeSolver:
 
     def _iterate(self, init_params, *theta):
         """The raw masked loop: no implicit diff attached."""
+        if self.sharding is not None:
+            # pin the iterate to its mesh placement before the loop (the
+            # loop body is shape-preserving, so XLA keeps the layout)
+            init_params = self.sharding.constrain(init_params)
         state0 = self.init_state(init_params, *theta)
 
         def cond(carry):
@@ -233,7 +242,8 @@ class IterativeSolver:
         return diff_api.ImplicitDiffSpec(
             optimality_fun=self.optimality_fun, solve=self.solve,
             tol=self.linsolve_tol, maxiter=self.linsolve_maxiter,
-            ridge=self.ridge, precond=self.precond, has_aux=True)
+            ridge=self.ridge, precond=self.precond, has_aux=True,
+            sharding=self.sharding)
 
     def run(self, init_params, *theta, mode: str = None):
         """Solve from ``init_params``; returns ``(params, OptInfo)``.

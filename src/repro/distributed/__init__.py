@@ -1,3 +1,6 @@
 from repro.distributed.sharding import (ShardingRules, params_specs,
                                         batch_spec, decode_state_specs,
                                         kv_cache_spec, named)
+from repro.distributed.sharded_operators import (ShardedOperator,
+                                                 SolveSharding,
+                                                 psum_reduction)

@@ -72,9 +72,49 @@ def _batched_cg_kernel(a_ref, b_ref, x_ref, *, tol: float, maxiter: int):
     x_ref[...] = x.astype(x_ref.dtype)
 
 
+LANES = 128     # TPU vector-lane width: the last dim of a VMEM tile
+
+
+def pad_to_lanes(A, b, lanes: int = LANES):
+    """Embed the (B, d, d) batch into the next lane multiple d' ≥ d.
+
+    The pad block is the identity and the padded right-hand side is zero,
+    so CG on the embedded system reproduces the original iterates exactly:
+    the padded residual/search-direction components start at zero and
+    ``A' e_pad = e_pad`` keeps them there (no coupling into the original
+    coordinates), while per-instance step sizes and convergence masks are
+    untouched.  This is the shape-legalization step of the tuned TPU block
+    schedule — a (block_b, d', d') VMEM tile wants d' % 128 == 0 — shared
+    with the interpret path so CPU tests cover the exact padded system the
+    TPU kernel will run.  Returns ``(A_padded, b_padded, d_original)``.
+    """
+    B, d, d2 = A.shape
+    assert d == d2, (d, d2)
+    dp = -(-d // lanes) * lanes
+    if dp == d:
+        return A, b, d
+    pad = dp - d
+    A = jnp.pad(A, ((0, 0), (0, pad), (0, pad)))
+    eye_pad = jnp.eye(pad, dtype=A.dtype)
+    A = A.at[:, d:, d:].set(eye_pad)
+    b = jnp.pad(b, ((0, 0), (0, pad)))
+    return A, b, d
+
+
 def batched_cg_pallas(A, b, *, tol: float = 1e-6, maxiter: int = 64,
-                      block_b: int = 8, interpret: bool = False):
-    """A: (B, d, d) SPD batch; b: (B, d).  Returns x: (B, d) with A x ≈ b."""
+                      block_b: int = 8, interpret: bool = False,
+                      pad_lanes: bool = False):
+    """A: (B, d, d) SPD batch; b: (B, d).  Returns x: (B, d) with A x ≈ b.
+
+    ``pad_lanes=True`` embeds systems whose d is not a multiple of the
+    128-lane VMEM tile width into the next lane multiple (identity pad —
+    see ``pad_to_lanes``) and slices the solution back.
+    """
+    if pad_lanes:
+        A, b, d0 = pad_to_lanes(A, b)
+        x = batched_cg_pallas(A, b, tol=tol, maxiter=maxiter,
+                              block_b=block_b, interpret=interpret)
+        return x[:, :d0]
     B, d, d2 = A.shape
     assert d == d2, (d, d2)
     assert b.shape == (B, d), (A.shape, b.shape)

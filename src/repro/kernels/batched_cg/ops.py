@@ -30,23 +30,24 @@ def _pick_block_b(B: int, block_b: int) -> int:
     return max(bb, 1)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
-def _solve(A, b, tol, maxiter, block_b, interpret):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6))
+def _solve(A, b, tol, maxiter, block_b, interpret, pad_lanes):
     if interpret is None:      # no TPU: identical masked-CG reference path
         return batched_cg_ref(A, b, tol=tol, maxiter=maxiter)
     return batched_cg_pallas(A, b, tol=tol, maxiter=maxiter,
                              block_b=_pick_block_b(A.shape[0], block_b),
-                             interpret=interpret)
+                             interpret=interpret, pad_lanes=pad_lanes)
 
 
-def _fwd(A, b, tol, maxiter, block_b, interpret):
-    x = _solve(A, b, tol, maxiter, block_b, interpret)
+def _fwd(A, b, tol, maxiter, block_b, interpret, pad_lanes):
+    x = _solve(A, b, tol, maxiter, block_b, interpret, pad_lanes)
     return x, (A, x)
 
 
-def _bwd(tol, maxiter, block_b, interpret, res, g):
+def _bwd(tol, maxiter, block_b, interpret, pad_lanes, res, g):
     A, x = res
-    u = _solve(A.transpose(0, 2, 1), g, tol, maxiter, block_b, interpret)
+    u = _solve(A.transpose(0, 2, 1), g, tol, maxiter, block_b, interpret,
+               pad_lanes)
     dA = -u[:, :, None] * x[:, None, :]
     return dA, u
 
@@ -55,7 +56,8 @@ _solve.defvjp(_fwd, _bwd)
 
 
 def batched_cg(A, b, *, tol: float = 1e-6, maxiter: Optional[int] = None,
-               block_b: int = 8, interpret: Optional[bool] = None):
+               block_b: int = 8, interpret: Optional[bool] = None,
+               pad_lanes: bool = False):
     """Solve the batch of SPD systems A[i] x[i] = b[i] in one fused kernel.
 
     Args:
@@ -69,6 +71,10 @@ def batched_cg(A, b, *, tol: float = 1e-6, maxiter: Optional[int] = None,
       block_b: instances per Pallas program (VMEM tile height).
       interpret: True forces Pallas interpret mode; None auto-selects the
         pure-JAX reference path off-TPU and the compiled kernel on TPU.
+      pad_lanes: embed d into the next multiple of the 128-lane VMEM tile
+        width (identity pad, exact — see ``kernel.pad_to_lanes``) before
+        the Pallas call; ignored on the reference path, which has no
+        tiling constraint.
 
     Differentiable in A and b via the implicit-diff custom VJP (operator
     input: in b, through the materialized matrix).
@@ -82,7 +88,8 @@ def batched_cg(A, b, *, tol: float = 1e-6, maxiter: Optional[int] = None,
         if A.batch_ndim == 0:
             dense = dense[None]
         x = batched_cg(dense, view.b, tol=tol, maxiter=maxiter,
-                       block_b=block_b, interpret=interpret)
+                       block_b=block_b, interpret=interpret,
+                       pad_lanes=pad_lanes)
         return view.to_tree(x)
     B, d, _ = A.shape
     if maxiter is None:
@@ -91,4 +98,5 @@ def batched_cg(A, b, *, tol: float = 1e-6, maxiter: Optional[int] = None,
         interpret = None   # sentinel: ref path (see _solve)
     elif interpret is None:
         interpret = False
-    return _solve(A, b, float(tol), int(maxiter), int(block_b), interpret)
+    return _solve(A, b, float(tol), int(maxiter), int(block_b), interpret,
+                  bool(pad_lanes))

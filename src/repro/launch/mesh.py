@@ -20,3 +20,23 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many local devices exist (tests)."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_solve_mesh(devices: int = None, axis: str = "data"):
+    """1-D mesh for sharded linear solves (``ShardedOperator`` and the
+    ``sharded_*`` registry solvers).
+
+    Uses the first ``devices`` local devices (all by default, so the same
+    call serves a laptop, a CI lane with forced host devices, and a real
+    slice).  Batched hypergradient workloads shard the instance batch over
+    this axis; ``devices`` must then divide the batch size.
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+    devs = jax.devices()
+    if devices is not None:
+        if devices > len(devs):
+            raise ValueError(f"requested {devices} devices, have "
+                             f"{len(devs)}")
+        devs = devs[:devices]
+    return Mesh(np.asarray(devs), (axis,))

@@ -62,15 +62,45 @@ def test_implicit_diff_is_the_entry_point_not_the_module():
 
 def test_registry_snapshot():
     """The built-in linear-solver registry — implicit-diff routing depends
-    on these names (and their symmetry flags feed the transpose hook)."""
+    on these names (and their symmetry flags feed the transpose hook).
+    The ``sharded_*`` names are registered here as lazy stubs (impl in
+    ``repro.distributed.sharded_operators``), so the surface is identical
+    whether or not the distribution layer was ever imported."""
     assert repro.core.available_solvers() == [
         "bicgstab", "cg", "dense_gmres", "gmres", "lu", "neumann",
-        "normal_cg", "pallas_cg"]
+        "normal_cg", "pallas_cg", "sharded_cg", "sharded_dense_gmres",
+        "sharded_normal_cg"]
     from repro.core import linear_solve as ls
     assert ls.solver_is_symmetric("cg")
     assert ls.solver_is_symmetric("pallas_cg")
+    assert ls.solver_is_symmetric("sharded_cg")
     assert not ls.solver_is_symmetric("normal_cg")
     assert not ls.solver_is_symmetric("gmres")
+    assert not ls.solver_is_symmetric("sharded_normal_cg")
+
+
+def test_sharded_upgrade_map_snapshot():
+    """Placement-driven upgrades: classic names with a mesh-placed operand
+    route to their distributed variants (and nothing else is remapped)."""
+    from repro.core import linear_solve as ls
+    assert ls._SHARDED_UPGRADE == {
+        "cg": "sharded_cg", "normal_cg": "sharded_normal_cg",
+        "dense_gmres": "sharded_dense_gmres", "pallas_cg": "sharded_cg",
+        "lu": "sharded_dense_gmres"}
+    # every upgrade target exists in the registry with matching symmetry
+    for src, dst in ls._SHARDED_UPGRADE.items():
+        assert ls.get_spec(dst).symmetric_only == \
+            ls.get_spec(src).symmetric_only
+
+
+def test_distributed_public_surface():
+    """The distribution layer re-exports the sharded-solve seam."""
+    import repro.distributed as dist
+    assert callable(dist.ShardedOperator)
+    assert callable(dist.SolveSharding)
+    assert callable(dist.psum_reduction)
+    spec = repro.core.ImplicitDiffSpec(optimality_fun=lambda x: x)
+    assert spec.sharding is None          # placement is opt-in
 
 
 def test_runtime_solvers_expose_diff_spec():

@@ -180,6 +180,39 @@ class TestStructured:
         with pytest.raises(ValueError, match="symmetric"):
             ls.route_solve("cg", C.T, jnp.ones(4))
 
+    def test_rmatvec_under_jit_then_eager_does_not_leak_tracers(self, rng):
+        """Operators are long-lived public objects: the first rmatvec
+        happening under jit must not poison later eager calls (regression:
+        the linear-transpose/VJP closures used to be cached on the
+        instance, leaking the jit trace's tracers)."""
+        A_dense = jnp.asarray(rng.randn(3, 3))
+        op = ops.FunctionOperator(lambda v: A_dense @ v, jnp.zeros(3))
+        v = jnp.asarray(rng.randn(3))
+        jitted = jax.jit(op.rmatvec)(v)
+        eager = op.rmatvec(v)           # used to raise UnexpectedTracerError
+        np.testing.assert_allclose(eager, A_dense.T @ v, atol=1e-12)
+        np.testing.assert_allclose(jitted, eager, atol=1e-12)
+        J = ops.JacobianOperator(lambda x: jnp.tanh(A_dense @ x),
+                                 jnp.asarray(rng.randn(3)))
+        jax.jit(J.rmatvec)(v)
+        np.testing.assert_allclose(J.rmatvec(v),
+                                   jax.jit(J.rmatvec)(v), atol=1e-12)
+
+    def test_symmetric_refusal_names_solver_and_operator_flags(self, rng):
+        """The refusal error must name BOTH sides of the mismatch: the
+        requested solver AND the operator's declared symmetric /
+        positive_definite flags (auto-routing failures are undebuggable
+        when the operator side is omitted)."""
+        A = ops.DenseOperator(jnp.asarray(rng.randn(4, 4)), symmetric=False)
+        with pytest.raises(ValueError) as err:
+            ls.route_solve("cg", A, jnp.ones(4))
+        msg = str(err.value)
+        assert "'cg'" in msg                      # the requested solver
+        assert "symmetric=False" in msg           # the operator's flag
+        assert "positive_definite=False" in msg   # ...and the PD flag
+        with pytest.raises(ValueError, match="'pallas_cg'"):
+            ls.solve(A, jnp.ones(4), method="pallas_cg")
+
     def test_as_operator(self, rng):
         A_dense = _spd(rng, 4)
         assert isinstance(ops.as_operator(A_dense), ops.DenseOperator)
@@ -357,11 +390,25 @@ class TestSolverSymmetryMetadata:
         b = jnp.asarray(rng.randn(d))
         return A, b
 
+    @staticmethod
+    def _maybe_shard(name, A):
+        """The sharded registry variants demand a mesh-placed operator —
+        the property extends to them through a ShardedOperator over the
+        local devices (replicated specs: the metadata contract under test
+        is independent of the split)."""
+        if not name.startswith("sharded_"):
+            return A
+        from jax.sharding import PartitionSpec as P
+        from repro.distributed.sharded_operators import ShardedOperator
+        from repro.launch.mesh import make_solve_mesh
+        return ShardedOperator(A, make_solve_mesh(), P(None))
+
     @pytest.mark.parametrize("name", sorted(ls.available_solvers()))
     @pytest.mark.parametrize("seed", [0, 1, 2])
     def test_solves_declared_spd_system(self, name, seed):
         A_dense, b = self._spd_system(seed)
-        A = ops.DenseOperator(A_dense, positive_definite=True)
+        A = self._maybe_shard(
+            name, ops.DenseOperator(A_dense, positive_definite=True))
         x = ls.route_solve(name, A, b, tol=1e-10, maxiter=2000)
         np.testing.assert_allclose(A_dense @ x, b, atol=5e-4,
                                    err_msg=f"{name} failed its declared "
@@ -373,7 +420,8 @@ class TestSolverSymmetryMetadata:
         # near-identity (general solvers all converge, incl. neumann's
         # contraction condition) but NOT symmetric
         A_dense = jnp.asarray(rng.randn(6, 6) * 0.1 + np.eye(6))
-        A = ops.DenseOperator(A_dense, symmetric=False)
+        A = self._maybe_shard(name,
+                              ops.DenseOperator(A_dense, symmetric=False))
         b = jnp.asarray(rng.randn(6))
         spec = ls.get_spec(name)
         if spec.symmetric_only:

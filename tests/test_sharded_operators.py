@@ -1,0 +1,503 @@
+"""Mesh-aware sharded-solve subsystem tests.
+
+These run IN-PROCESS: every mesh is built over however many devices the
+process actually sees (``launch.mesh.make_solve_mesh``), so the whole file
+passes on a 1-device laptop and exercises real multi-device execution in
+the CI lane that forces ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+(unlike ``test_distributed.py``, which subprocess-spawns devices).
+
+Covers: the ``ShardedOperator`` protocol against its unsharded base
+(matvec/rmatvec/transpose/diagonal/materialize, per-shard pieces, the
+``psum`` reduction hook), the ``sharded_*`` registry solvers (parity with
+the single-device solvers, per-instance masks, auto-routing + the
+``cg → sharded_cg`` upgrade), and the acceptance criteria for the
+implicit-diff threading: ``jax.grad`` of a decorated solver with a
+``ShardedOperator`` backward solve executes exactly ONE sharded linear
+solve (counting spy + trace census), matches the single-device gradient to
+≤ 1e-5, and compiles with no host gather (all-gather census + sharded
+output placement).  The hypothesis property tests (``ravel_view``
+round-trip, ``ShardedOperator.matvec`` equivalence under ``jax.vmap``)
+live in ``test_sharded_properties.py``, hard-gated like the PR 4 suite.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import linear_solve as ls
+from repro.core import operators as ops
+from repro.core.diff_api import ImplicitDiffSpec, implicit_diff
+from repro.core.solver_runtime import GradientDescent
+from repro.distributed.sharded_operators import (ShardedOperator,
+                                                 SolveSharding,
+                                                 instance_axes,
+                                                 psum_reduction)
+from repro.launch.mesh import make_solve_mesh
+
+
+N_DEV = len(jax.devices())
+B = 16          # divisible by 1/2/4/8 local devices
+
+
+@pytest.fixture
+def rng():
+    return np.random.RandomState(0)
+
+
+@pytest.fixture
+def mesh():
+    return make_solve_mesh()
+
+
+def _batched_spd(rng, B, d, shift=0.5):
+    C = jnp.asarray(rng.randn(B, d, d)) / np.sqrt(d)
+    return jnp.einsum("bji,bjk->bik", C, C) + shift * jnp.eye(d)
+
+
+def _put(mesh, tree, spec):
+    return jax.device_put(tree, jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec,
+        is_leaf=lambda x: isinstance(x, P)))
+
+
+class _DiagOp(ops.LinearOperator):
+    """Elementwise (block-diagonal) operator — shard-local along ANY dim."""
+
+    def __init__(self, dg, **kw):
+        super().__init__(jnp.zeros_like(dg), **kw)
+        self.dg = dg
+
+    def matvec(self, v):
+        return self.dg * v
+
+
+# ---------------------------------------------------------------------------
+# the operator protocol under sharding
+# ---------------------------------------------------------------------------
+
+class TestShardedOperatorProtocol:
+
+    def test_batch_sharded_dense_matches_base(self, rng, mesh):
+        d = 5
+        A = _batched_spd(rng, B, d)
+        base = ops.DenseOperator(A, positive_definite=True)
+        sh = ShardedOperator(base, mesh, P("data", None))
+        assert sh.is_sharded and not base.is_sharded
+        assert sh.symmetric and sh.positive_definite and sh.batch_ndim == 1
+        assert not sh.instance_sharded
+        v = jnp.asarray(rng.randn(B, d))
+        np.testing.assert_allclose(sh.matvec(v), base.matvec(v), rtol=1e-12)
+        np.testing.assert_allclose(sh.rmatvec(v), base.rmatvec(v),
+                                   rtol=1e-12)
+        np.testing.assert_allclose(sh.diagonal(), base.diagonal(),
+                                   rtol=1e-12)
+        np.testing.assert_allclose(sh.materialize(), A, rtol=1e-12)
+
+    def test_nonsymmetric_transpose_roundtrip(self, rng, mesh):
+        d = 4
+        A = jnp.asarray(rng.randn(B, d, d))
+        base = ops.DenseOperator(A, symmetric=False)
+        sh = ShardedOperator(base, mesh, P("data", None))
+        v = jnp.asarray(rng.randn(B, d))
+        np.testing.assert_allclose(sh.T.matvec(v), base.rmatvec(v),
+                                   rtol=1e-12)
+        assert sh.T.is_sharded and sh.T.symmetric is False
+        np.testing.assert_allclose(sh.T.T.matvec(v), base.matvec(v),
+                                   rtol=1e-12)
+
+    def test_factory_operands_shard_alongside_domain(self, rng, mesh):
+        dg = 1.0 + jnp.asarray(rng.rand(B))
+        sh = ShardedOperator(lambda g: _DiagOp(g, positive_definite=True),
+                             mesh, P("data"), operands=(dg,),
+                             operand_specs=(P("data"),))
+        # spec-based, not size-based: naming an instance axis means the
+        # dots go through the reduction hook (identity on a 1-device mesh)
+        assert sh.instance_sharded
+        v = jnp.asarray(rng.randn(B))
+        np.testing.assert_allclose(sh.matvec(v), dg * v, rtol=1e-12)
+        np.testing.assert_allclose(sh.diagonal(), dg, rtol=1e-12)
+
+    def test_instance_sharded_materialize_returns_per_shard_blocks(
+            self, rng, mesh):
+        dg = 1.0 + jnp.asarray(rng.rand(B))
+        sh = ShardedOperator(lambda g: _DiagOp(g), mesh, P("data"),
+                             operands=(dg,), operand_specs=(P("data"),))
+        blocks = sh.materialize()
+        assert blocks.shape == (N_DEV, B // N_DEV, B // N_DEV)
+        np.testing.assert_allclose(
+            jax.vmap(jnp.diagonal)(blocks).reshape(-1), dg, rtol=1e-12)
+
+    def test_psum_reduction_hook(self, mesh):
+        assert instance_axes(P("data", None), batch_ndim=1) == ()
+        assert instance_axes(P("data"), batch_ndim=0) == ("data",)
+        assert instance_axes(P(None, "data"), batch_ndim=1) == ("data",)
+        red = psum_reduction(())
+        assert red(3.0) == 3.0          # identity without sharded axes
+        calls = []
+
+        def spy_reduce(x):
+            calls.append(1)
+            return x
+
+        dg = jnp.ones(B)
+        sh = ShardedOperator(lambda g: _DiagOp(g, positive_definite=True),
+                             mesh, P("data"), operands=(dg,),
+                             operand_specs=(P("data"),), reduce=spy_reduce)
+        ls.solve(sh, jnp.ones(B), method="sharded_cg", tol=1e-10)
+        assert calls, "custom reduction hook never reached the solver"
+
+    def test_plain_capture_defaults_trace_at_local_shapes(self, rng, mesh):
+        """A plain-wrapped operator that respects the capture contract
+        (shard-local matvec, replicated captures) but relies on every
+        matrix-free BASE default — rmatvec via linear_transpose, probing
+        diagonal/materialize — must still work under shard_map: the
+        defaults are re-anchored on the LOCAL shard example (regression:
+        they used to trace at the captured global example, crashing
+        rmatvec and silently duplicating diagonal/materialize output
+        across shards)."""
+        d = 3
+        M = jnp.asarray(rng.randn(d, d))        # replicated capture (d, d)
+        base = ops.FunctionOperator(
+            lambda v: jnp.einsum("bd,de->be", v, M),
+            jnp.zeros((B, d)), batch_ndim=1, symmetric=False)
+        sh = ShardedOperator(base, mesh, P("data", None))
+        v = jnp.asarray(rng.randn(B, d))
+        np.testing.assert_allclose(sh.rmatvec(v), v @ M.T, atol=1e-12)
+        np.testing.assert_allclose(sh.T.matvec(v), v @ M.T, atol=1e-12)
+        diag = sh.diagonal()
+        assert diag.shape == (B, d)             # not duplicated per shard
+        np.testing.assert_allclose(
+            diag, jnp.broadcast_to(jnp.diag(M), (B, d)), atol=1e-12)
+        dense = sh.materialize()
+        assert dense.shape == (B, d, d)
+        np.testing.assert_allclose(dense, jnp.broadcast_to(M.T, (B, d, d)),
+                                   atol=1e-12)
+        b = jnp.asarray(rng.randn(B, d))
+        x = ls.solve(sh, b, method="sharded_normal_cg", tol=1e-12,
+                     maxiter=500)
+        np.testing.assert_allclose(jnp.einsum("bd,de->be", x, M), b,
+                                   atol=1e-6)
+
+    def test_constructor_validation(self, rng, mesh):
+        base = ops.DenseOperator(_batched_spd(rng, B, 3))
+        with pytest.raises(ValueError, match="factory"):
+            ShardedOperator(base, mesh, P("data", None),
+                            operands=(jnp.ones(B),),
+                            operand_specs=(P("data"),))
+        with pytest.raises(ValueError, match="operand_specs"):
+            ShardedOperator(lambda g: _DiagOp(g), mesh, P("data"),
+                            operands=(jnp.ones(B),), operand_specs=())
+        with pytest.raises(TypeError, match="LinearOperator"):
+            ShardedOperator(lambda: 3.0, mesh, P("data"))
+
+
+# ---------------------------------------------------------------------------
+# the sharded registry solvers
+# ---------------------------------------------------------------------------
+
+class TestShardedSolvers:
+
+    def test_sharded_cg_matches_single_device(self, rng, mesh):
+        d = 6
+        A = _batched_spd(rng, B, d)
+        base = ops.DenseOperator(A, positive_definite=True)
+        sh = ShardedOperator(base, mesh, P("data", None))
+        b = jnp.asarray(rng.randn(B, d))
+        x_ref, info_ref = ls.solve(base, b, method="cg", tol=1e-10,
+                                   return_info=True)
+        x, info = ls.solve(sh, b, method="sharded_cg", tol=1e-10,
+                           return_info=True)
+        np.testing.assert_allclose(x, x_ref, atol=1e-10)
+        assert bool(info.converged.all())
+        assert info.iterations.shape == (B,)    # per-instance masks intact
+        np.testing.assert_array_equal(info.iterations, info_ref.iterations)
+
+    def test_sharded_normal_cg_general_operator(self, rng, mesh):
+        d = 5
+        A = _batched_spd(rng, B, d) + 0.3 * jnp.asarray(rng.randn(B, d, d))
+        base = ops.DenseOperator(A, symmetric=False)
+        sh = ShardedOperator(base, mesh, P("data", None))
+        b = jnp.asarray(rng.randn(B, d))
+        x = ls.solve(sh, b, method="sharded_normal_cg", tol=1e-12,
+                     maxiter=4000)
+        np.testing.assert_allclose(
+            x, jnp.linalg.solve(A, b[..., None])[..., 0], atol=1e-6)
+
+    def test_sharded_dense_gmres_and_instance_shard_refusal(self, rng,
+                                                            mesh):
+        d = 5
+        A = _batched_spd(rng, B, d) + 0.3 * jnp.asarray(rng.randn(B, d, d))
+        sh = ShardedOperator(ops.DenseOperator(A, symmetric=False), mesh,
+                             P("data", None))
+        b = jnp.asarray(rng.randn(B, d))
+        x = ls.solve(sh, b, method="sharded_dense_gmres", tol=1e-10)
+        np.testing.assert_allclose(
+            x, jnp.linalg.solve(A, b[..., None])[..., 0], atol=1e-8)
+        dg_sh = ShardedOperator(lambda g: _DiagOp(g), mesh, P("data"),
+                                operands=(jnp.ones(B),),
+                                operand_specs=(P("data"),))
+        assert dg_sh.instance_sharded    # spec-based, device-count-free
+        with pytest.raises(ValueError, match="batch sharding only"):
+            ls.solve(dg_sh, jnp.ones(B), method="sharded_dense_gmres")
+
+    def test_auto_routing_and_upgrade(self, rng, mesh):
+        d = 6
+        spd = ShardedOperator(
+            ops.DenseOperator(_batched_spd(rng, B, d),
+                              positive_definite=True),
+            mesh, P("data", None))
+        gen = ShardedOperator(
+            ops.DenseOperator(jnp.asarray(rng.randn(B, d, d)),
+                              symmetric=False), mesh, P("data", None))
+        assert ls._resolve_auto(spd, jnp.zeros(d)) == "sharded_cg"
+        assert ls._resolve_auto(gen, jnp.zeros(d)) == "sharded_dense_gmres"
+        big = ShardedOperator(
+            ops.FunctionOperator(lambda v: v, jnp.zeros((B, 600)),
+                                 batch_ndim=1), mesh, P("data", None))
+        assert ls._resolve_auto(big, jnp.zeros(600)) == "sharded_normal_cg"
+        # classic names upgrade once the operator carries a mesh
+        assert ls._upgrade_for_sharded("cg", spd) == "sharded_cg"
+        assert ls._upgrade_for_sharded("cg", ops.DenseOperator(
+            _batched_spd(rng, B, d))) == "cg"
+        b = jnp.asarray(rng.randn(B, d))
+        np.testing.assert_allclose(
+            ls.solve(spd, b, method="cg", tol=1e-10),
+            ls.solve(spd, b, method="sharded_cg", tol=1e-10), rtol=1e-12)
+        # materializing single-device solvers upgrade too (densifying a
+        # mesh-placed operator outside shard_map would gather)
+        assert ls._upgrade_for_sharded("pallas_cg", spd) == "sharded_cg"
+        assert ls._upgrade_for_sharded("lu", gen) == "sharded_dense_gmres"
+
+    def test_route_solve_auto_sizes_from_one_instance(self, rng, mesh):
+        """route_solve's "auto" must size the system from ONE instance of a
+        batch-aware operator: B·d > MAX_DENSE_DIM with small d still lands
+        in the per-shard dense regime (regression: the raveled batched rhs
+        used to inflate d past the crossover)."""
+        d = 40                              # B * d = 640 > MAX_DENSE_DIM
+        assert B * d > ls.MAX_DENSE_DIM and d < ls.MAX_DENSE_DIM
+        # diagonally dominant so restarted GMRES converges tightly — the
+        # property under test is the ROUTING, not solver conditioning
+        A = 0.3 * jnp.asarray(rng.randn(B, d, d)) + 5.0 * jnp.eye(d)
+        wide = ShardedOperator(ops.DenseOperator(A, symmetric=False), mesh,
+                               P("data", None))
+        calls = []
+        orig = ls.get_spec("sharded_dense_gmres")
+
+        def spy(mv, rhs, **kw):
+            calls.append(1)
+            return orig.fn(mv, rhs, **kw)
+
+        ls.register_solver("sharded_dense_gmres", spy,
+                           supports_precond=True, matrix_free=False,
+                           description=orig.description)
+        try:
+            b = jnp.asarray(rng.randn(B, d))
+            x = ls.route_solve("auto", wide, b, tol=1e-8, maxiter=2000)
+        finally:
+            ls._REGISTRY["sharded_dense_gmres"] = orig
+        assert calls, "auto routed past the dense regime (sized from the " \
+                      "raveled batch instead of one instance)"
+        np.testing.assert_allclose(
+            x, jnp.linalg.solve(A, b[..., None])[..., 0], atol=1e-5)
+
+    def test_sharded_solver_requires_sharded_operator(self, rng):
+        base = ops.DenseOperator(_batched_spd(rng, B, 4),
+                                 positive_definite=True)
+        with pytest.raises(ValueError, match="ShardedOperator"):
+            ls.solve(base, jnp.ones((B, 4)), method="sharded_cg")
+
+    def test_jacobi_precond_through_sharded_cg(self, rng, mesh):
+        d = 6
+        A = _batched_spd(rng, B, d) + 3.0 * jnp.eye(d)
+        base = ops.DenseOperator(A, positive_definite=True)
+        sh = ShardedOperator(base, mesh, P("data", None))
+        b = jnp.asarray(rng.randn(B, d))
+        x = ls.solve(sh, b, method="sharded_cg", precond="jacobi",
+                     tol=1e-10)
+        np.testing.assert_allclose(
+            x, jnp.linalg.solve(A, b[..., None])[..., 0], atol=1e-8)
+
+    def test_vmap_of_sharded_solve(self, rng, mesh):
+        d = 4
+        A = _batched_spd(rng, B, d)
+        base = ops.DenseOperator(A, positive_definite=True)
+        sh = ShardedOperator(base, mesh, P("data", None))
+        rhs = jnp.asarray(rng.randn(3, B, d))
+        xs = jax.vmap(lambda bi: ls.solve(sh, bi, method="sharded_cg",
+                                          tol=1e-10))(rhs)
+        xs_ref = jax.vmap(lambda bi: ls.solve(base, bi, method="cg",
+                                              tol=1e-10))(rhs)
+        np.testing.assert_allclose(xs, xs_ref, atol=1e-10)
+
+
+# ---------------------------------------------------------------------------
+# implicit differentiation on the mesh (the acceptance criteria)
+# ---------------------------------------------------------------------------
+
+def _ridge_problem(rng, B, m, d):
+    X = jnp.asarray(rng.randn(B, m, d))
+    y = jnp.asarray(rng.randn(B, m))
+    return X, y
+
+
+def _batched_ridge_F(x, theta, X, y):
+    """Per-instance ridge stationarity — block-diagonal over the batch, so
+    its Jacobian matvec is shard-local under batch sharding."""
+    r = jnp.einsum("bmd,bd->bm", X, x) - y
+    return jnp.einsum("bmd,bm->bd", X, r) + theta[:, None] * x
+
+
+def _direct_ridge_solver(init, theta, X, y):
+    d = X.shape[-1]
+    A = jnp.einsum("bmd,bme->bde", X, X) \
+        + theta[:, None, None] * jnp.eye(d)
+    return jnp.linalg.solve(
+        A, jnp.einsum("bmd,bm->bd", X, y)[..., None])[..., 0]
+
+
+def _ridge_sharding(mesh):
+    return SolveSharding(mesh, P("data", None), batch_ndim=1,
+                         theta_specs=(P("data"), P("data", None, None),
+                                      P("data", None)))
+
+
+class TestShardedImplicitDiff:
+
+    def _problem(self, rng, mesh, m=12, d=6):
+        X, y = _ridge_problem(rng, B, m, d)
+        spec = ImplicitDiffSpec(optimality_fun=_batched_ridge_F, solve="cg",
+                                tol=1e-12, sharding=_ridge_sharding(mesh))
+        ref_spec = spec.replace(sharding=None)
+        theta = jnp.linspace(0.5, 2.0, B)
+        return X, y, spec, ref_spec, theta
+
+    def test_grad_matches_single_device(self, rng, mesh):
+        X, y, spec, ref_spec, theta = self._problem(rng, mesh)
+        dec = implicit_diff(spec)(_direct_ridge_solver)
+        ref = implicit_diff(ref_spec)(_direct_ridge_solver)
+        g_ref = jax.grad(lambda t: jnp.sum(ref(None, t, X, y) ** 2))(theta)
+        sh = spec.sharding
+        t_sh = _put(mesh, theta, P("data"))
+        X_sh = _put(mesh, X, P("data", None, None))
+        y_sh = _put(mesh, y, P("data", None))
+        g = jax.jit(jax.grad(
+            lambda t: jnp.sum(dec(None, t, X_sh, y_sh) ** 2)))(t_sh)
+        np.testing.assert_allclose(g, g_ref, atol=1e-5)     # acceptance
+        assert g.sharding == NamedSharding(sh.mesh, P("data"))
+
+    def test_jvp_matches_single_device(self, rng, mesh):
+        X, y, spec, ref_spec, theta = self._problem(rng, mesh)
+        dec = implicit_diff(spec)(_direct_ridge_solver)
+        ref = implicit_diff(ref_spec)(_direct_ridge_solver)
+        tangent = jnp.ones(B)
+        jv = jax.jvp(lambda t: dec(None, t, X, y), (theta,), (tangent,))[1]
+        jv_ref = jax.jvp(lambda t: ref(None, t, X, y), (theta,),
+                         (tangent,))[1]
+        np.testing.assert_allclose(jv, jv_ref, atol=1e-5)
+
+    def test_vjp_mode_matches(self, rng, mesh):
+        X, y, spec, ref_spec, theta = self._problem(rng, mesh)
+        dec = implicit_diff(spec, mode="vjp")(_direct_ridge_solver)
+        ref = implicit_diff(ref_spec)(_direct_ridge_solver)
+        g = jax.grad(lambda t: jnp.sum(dec(None, t, X, y) ** 2))(theta)
+        g_ref = jax.grad(lambda t: jnp.sum(ref(None, t, X, y) ** 2))(theta)
+        np.testing.assert_allclose(g, g_ref, atol=1e-5)
+
+    def test_grad_executes_one_sharded_solve(self, rng, mesh):
+        """Counting spy + trace census, mirroring the PR 2/3 tests: the
+        backward pass of a sharded grad routes exactly ONE sharded linear
+        solve (the cotangent system), while the trace stages one template
+        per direction."""
+        from repro.distributed import sharded_operators as dso
+        X, y, spec, _, theta = self._problem(rng, mesh)
+        traced, executed = [], []
+
+        def counting_sharded_cg(matvec, b, **kw):
+            traced.append(1)
+            jax.debug.callback(lambda _: executed.append(1), jnp.zeros(()))
+            return dso.sharded_solve_cg(matvec, b, **kw)
+
+        ls.register_solver("counting_sharded_cg", counting_sharded_cg,
+                           symmetric_only=True, supports_precond=True)
+        try:
+            dec = implicit_diff(spec.replace(solve="counting_sharded_cg"))(
+                _direct_ridge_solver)
+            g = jax.grad(lambda t: jnp.sum(dec(None, t, X, y) ** 2))(theta)
+            jax.effects_barrier()
+            assert len(executed) == 1, \
+                f"expected ONE sharded backward solve, ran {len(executed)}"
+            assert len(traced) == 2     # one template per direction
+        finally:
+            ls._REGISTRY.pop("counting_sharded_cg", None)
+        assert np.isfinite(np.asarray(g)).all()
+
+    def test_no_host_gather_with_sharded_forward(self, rng, mesh):
+        """With the forward solve on the mesh too, the whole compiled grad
+        contains NO all-gather: the backward solve runs per shard and only
+        the loss/psum reductions cross devices."""
+        from jax.experimental.shard_map import shard_map
+        X, y, spec, _, theta = self._problem(rng, mesh)
+
+        def sharded_solver(init, theta, X, y):
+            return shard_map(
+                lambda t, Xl, yl: _direct_ridge_solver(None, t, Xl, yl),
+                mesh=mesh,
+                in_specs=(P("data"), P("data", None, None),
+                          P("data", None)),
+                out_specs=P("data", None), check_rep=False)(theta, X, y)
+
+        dec = implicit_diff(spec)(sharded_solver)
+        t_sh = _put(mesh, theta, P("data"))
+        X_sh = _put(mesh, X, P("data", None, None))
+        y_sh = _put(mesh, y, P("data", None))
+        gfun = jax.jit(jax.grad(
+            lambda t: jnp.sum(dec(None, t, X_sh, y_sh) ** 2)))
+        compiled = gfun.lower(t_sh).compile()
+        hlo = compiled.as_text()
+        assert hlo.count("all-gather") == 0, \
+            "sharded hypergradient compiled with a gather"
+        g = gfun(t_sh)
+        assert g.sharding == NamedSharding(mesh, P("data"))
+        ref = implicit_diff(spec.replace(sharding=None))(
+            _direct_ridge_solver)
+        g_ref = jax.grad(
+            lambda t: jnp.sum(ref(None, t, X, y) ** 2))(theta)
+        np.testing.assert_allclose(g, g_ref, atol=1e-5)
+
+    def test_runtime_solver_with_sharding(self, rng, mesh):
+        """The state-based runtime rides the same seam: an IterativeSolver
+        with ``sharding`` pins its iterate to the mesh and its backward
+        solve upgrades to the sharded variants."""
+        d = 4
+        w = 1.0 + jnp.asarray(rng.rand(B, d))
+
+        def fun(x, theta, w):   # elementwise => shard-local optimality;
+            # batched data rides as a theta arg (anything the residual
+            # merely closed over would be replicated into every shard)
+            return 0.5 * jnp.sum(w * (x - theta) ** 2)
+
+        sharding = SolveSharding(mesh, P("data", None), batch_ndim=1,
+                                 theta_specs=(P("data", None),
+                                              P("data", None)))
+        solver = GradientDescent(fun, stepsize=0.5, maxiter=400, tol=1e-12,
+                                 solve="cg", linsolve_tol=1e-12,
+                                 sharding=sharding)
+        ref = GradientDescent(fun, stepsize=0.5, maxiter=400, tol=1e-12,
+                              solve="cg", linsolve_tol=1e-12)
+        theta = jnp.asarray(rng.randn(B, d))
+        x0 = jnp.zeros((B, d))
+
+        def loss(s):
+            return lambda t: jnp.sum(s.run(x0, t, w)[0] ** 2)
+
+        g = jax.grad(loss(solver))(theta)
+        g_ref = jax.grad(loss(ref))(theta)
+        np.testing.assert_allclose(g, g_ref, atol=1e-5)
+
+
+# The hypothesis property tests for this subsystem (ravel_view round-trip,
+# ShardedOperator.matvec equivalence under jax.vmap) live in
+# tests/test_sharded_properties.py so this module stays runnable without
+# hypothesis; that module hard-gates via conftest.require_hypothesis().

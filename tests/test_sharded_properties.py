@@ -1,0 +1,107 @@
+"""Hypothesis property tests for the sharded-solve subsystem.
+
+Hard-gated like the PR 4 property suites: ``require_hypothesis()`` skips
+locally without hypothesis but FAILS under ``REPRO_REQUIRE_HYPOTHESIS=1``
+(both CI lanes set it), so these can never be silently dropped.  Like
+``test_sharded_operators.py``, everything runs in-process over however
+many devices the process sees (8 in the forced-host-device CI lane).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from jax.sharding import PartitionSpec as P
+
+from conftest import require_hypothesis
+from repro.core import operators as ops
+from repro.distributed.sharded_operators import ShardedOperator
+from repro.launch.mesh import make_solve_mesh
+
+require_hypothesis()   # hard-fails under REPRO_REQUIRE_HYPOTHESIS (CI)
+from hypothesis import given, settings, strategies as st
+
+
+B = 16          # divisible by 1/2/4/8 local devices
+
+_leaf_shapes = st.lists(
+    st.tuples(st.integers(1, 3), st.integers(1, 3)), min_size=1, max_size=3)
+
+
+def _batched_spd(rng, B, d, shift=0.5):
+    C = jnp.asarray(rng.randn(B, d, d)) / np.sqrt(d)
+    return jnp.einsum("bji,bjk->bik", C, C) + shift * jnp.eye(d)
+
+
+class TestRavelViewRoundTrip:
+
+    @given(shapes=_leaf_shapes, batched=st.booleans(), data=st.data())
+    @settings(max_examples=20, deadline=None)
+    def test_round_trip_and_flat_matvec(self, shapes, batched, data):
+        """``to_tree`` inverts the ravel for any pytree layout, batched or
+        not, and the flat (B, d) matvec agrees with the tree matvec."""
+        rng = np.random.RandomState(data.draw(st.integers(0, 2 ** 31)))
+        lead = (4,) if batched else ()
+        tree = {f"k{i}": jnp.asarray(rng.randn(*(lead + s)))
+                for i, s in enumerate(shapes)}
+        scale = {k: jnp.asarray(rng.randn(*leaf.shape))
+                 for k, leaf in tree.items()}
+        mv = lambda t: jax.tree_util.tree_map(lambda a, s: a * s, t, scale)
+        view = ops.ravel_view(mv, tree, batch_ndim=1 if batched else 0)
+        assert view.batched == batched
+        round_tripped = view.to_tree(view.b)
+        for k in tree:
+            np.testing.assert_allclose(round_tripped[k], tree[k],
+                                       rtol=1e-12)
+        flat_out = view.to_tree(view.mv(view.b))
+        tree_out = mv(tree)
+        for k in tree:
+            np.testing.assert_allclose(flat_out[k], tree_out[k], rtol=1e-10)
+
+    @given(shapes=_leaf_shapes, data=st.data())
+    @settings(max_examples=10, deadline=None)
+    def test_operator_ravel_view_matches_free_function(self, shapes, data):
+        rng = np.random.RandomState(data.draw(st.integers(0, 2 ** 31)))
+        tree = {f"k{i}": jnp.asarray(rng.randn(*s))
+                for i, s in enumerate(shapes)}
+        scale = {k: 1.0 + jnp.asarray(rng.rand(*leaf.shape))
+                 for k, leaf in tree.items()}
+        mv = lambda t: jax.tree_util.tree_map(lambda a, s: a * s, t, scale)
+        op = ops.FunctionOperator(mv, tree)
+        view = op.ravel_view(tree)
+        free = ops.ravel_view(mv, tree, 0)
+        np.testing.assert_allclose(view.mv(view.b), free.mv(free.b),
+                                   rtol=1e-12)
+
+
+class TestShardedMatvecEquivalence:
+
+    @given(d=st.integers(1, 5), extra=st.integers(1, 3), data=st.data())
+    @settings(max_examples=15, deadline=None)
+    def test_matches_single_device_under_vmap(self, d, extra, data):
+        """``ShardedOperator.matvec`` == the base operator's matvec,
+        including under ``jax.vmap`` over an extra leading axis
+        (shard_map's batching rule keeps placement out of the math)."""
+        rng = np.random.RandomState(data.draw(st.integers(0, 2 ** 31)))
+        mesh = make_solve_mesh()
+        A = _batched_spd(rng, B, d)
+        base = ops.DenseOperator(A, positive_definite=True)
+        sh = ShardedOperator(base, mesh, P("data", None))
+        v = jnp.asarray(rng.randn(B, d))
+        np.testing.assert_allclose(sh.matvec(v), base.matvec(v), rtol=1e-10)
+        vb = jnp.asarray(rng.randn(extra, B, d))
+        np.testing.assert_allclose(jax.vmap(sh.matvec)(vb),
+                                   jax.vmap(base.matvec)(vb), rtol=1e-10)
+
+    @given(d=st.integers(1, 4), data=st.data())
+    @settings(max_examples=10, deadline=None)
+    def test_rmatvec_and_transpose_consistency(self, d, data):
+        rng = np.random.RandomState(data.draw(st.integers(0, 2 ** 31)))
+        mesh = make_solve_mesh()
+        A = jnp.asarray(rng.randn(B, d, d))
+        base = ops.DenseOperator(A, symmetric=False)
+        sh = ShardedOperator(base, mesh, P("data", None))
+        v = jnp.asarray(rng.randn(B, d))
+        np.testing.assert_allclose(sh.rmatvec(v), base.rmatvec(v),
+                                   rtol=1e-10)
+        np.testing.assert_allclose(sh.T.matvec(v), sh.rmatvec(v),
+                                   rtol=1e-12)
