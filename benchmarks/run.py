@@ -15,10 +15,12 @@ Prints ``name,us_per_call,derived`` CSV rows.
   sharded sharded vs single-device hypergradients (device-count scaling;
           run under XLA_FLAGS=--xla_force_host_platform_device_count=8
           for the full curve — the CI multi-device lane does)
+  service solve-service scheduler: batched-bucket vs per-request dispatch
+          at 64 concurrent requests, warm vs cold cache
   roofline per-(arch x shape) terms from the dry-run artifacts
 
 ``--smoke`` runs a fast CI subset (kernels + batched + bilevel + fwdrev +
-oproute + sharded) and writes the rows to ``BENCH_smoke.json`` (override
+oproute + sharded + service) and writes the rows to ``BENCH_smoke.json`` (override
 with ``--out``) for artifact upload.
 """
 import argparse
@@ -27,9 +29,10 @@ import traceback
 
 
 SMOKE_BENCHES = ["kernels", "batched", "bilevel", "fwdrev", "oproute",
-                 "sharded"]
+                 "sharded", "service"]
 # accept run(emit, smoke=True)
-SMOKE_KWARG_BENCHES = {"batched", "bilevel", "fwdrev", "oproute", "sharded"}
+SMOKE_KWARG_BENCHES = {"batched", "bilevel", "fwdrev", "oproute", "sharded",
+                       "service"}
 
 
 def main() -> None:
@@ -47,7 +50,7 @@ def main() -> None:
                             fwd_vs_rev_hypergrad, jacobian_precision,
                             kernels_micro, molecular_dynamics,
                             operator_routing, roofline_report,
-                            sharded_solve, svm_hyperopt)
+                            sharded_solve, solve_service, svm_hyperopt)
     from benchmarks.common import Collector, emit
     all_benches = {
         "fig3": jacobian_precision.run,
@@ -61,6 +64,7 @@ def main() -> None:
         "fwdrev": fwd_vs_rev_hypergrad.run,
         "oproute": operator_routing.run,
         "sharded": sharded_solve.run,
+        "service": solve_service.run,
         "roofline": roofline_report.run,
     }
     if args.only:

@@ -35,6 +35,7 @@ from repro.core.solver_runtime import IterativeSolver, OptInfo
 
 @dataclasses.dataclass
 class BilevelSolution:
+    """Result of ``solve_bilevel``: final θ, inner solution and traces."""
     theta: Any
     x_star: Any
     outer_values: Any      # (steps,) trace of outer loss

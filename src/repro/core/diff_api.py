@@ -181,6 +181,7 @@ class ImplicitDiffSpec:
 
     @property
     def is_routing_only(self) -> bool:
+        """True when no optimality/fixed-point mapping is declared."""
         return self.optimality_fun is None and self.fixed_point_fun is None
 
     def replace(self, **changes) -> "ImplicitDiffSpec":

@@ -743,6 +743,7 @@ def register_solver(name: str, fn: Callable, **attrs) -> SolverSpec:
 
 
 def get_spec(name: str) -> SolverSpec:
+    """Look up a registered ``SolverSpec`` by name (ValueError if absent)."""
     try:
         return _REGISTRY[name]
     except KeyError:
@@ -751,6 +752,7 @@ def get_spec(name: str) -> SolverSpec:
 
 
 def available_solvers():
+    """Sorted names of every solver currently in the registry."""
     return sorted(_REGISTRY)
 
 
@@ -852,7 +854,8 @@ def _upgrade_for_sharded(method, matvec):
 
 
 def route_solve(solve, matvec, b, *, tol: float = 1e-6, maxiter: int = 1000,
-                ridge: float = 0.0, precond=None):
+                ridge: float = 0.0, precond=None, init=None,
+                return_info: bool = False):
     """Route one instance-shaped solve to a registry solver or a callable.
 
     The single dispatch point the differentiation layer calls for both the
@@ -868,6 +871,16 @@ def route_solve(solve, matvec, b, *, tol: float = 1e-6, maxiter: int = 1000,
     supports it and is never silently dropped.  Vmap-safe like every
     registry solver: batched tracers dispatch ONE masked solve for the
     whole batch.
+
+    A *batch-aware* operator (``batch_ndim == 1``, e.g. a stacked
+    ``DenseOperator`` the solve service dispatches per bucket) routes the
+    whole batch as ONE masked solve — registry solvers receive
+    ``batch_ndim=1`` and ``b``/``init`` carry the batch axis on every leaf.
+
+    ``init`` warm-starts the routed solver (``"auto"`` then steers off
+    ``pallas_cg``, which always starts from zero); ``return_info`` also
+    returns the per-instance ``SolveInfo``.  Both require a registry
+    solver — custom callables own their initialization and diagnostics.
     """
     if solve == "auto":
         # _resolve_auto sizes the system from ONE instance: batch-aware
@@ -876,12 +889,16 @@ def route_solve(solve, matvec, b, *, tol: float = 1e-6, maxiter: int = 1000,
         example = b
         if isinstance(matvec, LinearOperator) and matvec.batch_ndim == 1:
             example = jax.tree_util.tree_map(lambda l: l[0], b)
-        solve = _resolve_auto(matvec, example, precond)
+        solve = _resolve_auto(matvec, example, precond, init)
     solve = _upgrade_for_sharded(solve, matvec)
     if callable(solve):
         if precond is not None:
             raise ValueError("precond requires a registry solver name; "
                              "bake it into the custom solve callable instead")
+        if init is not None or return_info:
+            raise ValueError("init/return_info require a registry solver "
+                             "name; custom solve callables own their "
+                             "initialization and diagnostics")
         return solve(matvec, b, tol=tol, maxiter=maxiter, ridge=ridge)
     spec = get_spec(solve)
     _check_operator_routing(spec, matvec)
@@ -891,6 +908,17 @@ def route_solve(solve, matvec, b, *, tol: float = 1e-6, maxiter: int = 1000,
     kwargs = dict(tol=tol, maxiter=maxiter, ridge=ridge)
     if precond is not None:
         kwargs["precond"] = precond
+    if init is not None:
+        kwargs["init"] = init
+    if return_info:
+        kwargs["return_info"] = True
+    if isinstance(matvec, LinearOperator) and matvec.batch_ndim == 1 \
+            and not getattr(matvec, "is_sharded", False) \
+            and not spec.name.startswith("sharded_"):
+        # sharded operators/solvers read batchedness off the operator
+        # themselves (inside shard_map); plain batch-aware operators get
+        # the whole batch dispatched as ONE masked solve
+        kwargs["batch_ndim"] = 1
     return spec.fn(matvec, b, **kwargs)
 
 

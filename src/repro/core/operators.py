@@ -152,6 +152,7 @@ class LinearOperator:
 
     # -- core ------------------------------------------------------------
     def matvec(self, v):
+        """Apply the operator to ``v`` (pytree → pytree)."""
         raise NotImplementedError
 
     def __call__(self, v):
@@ -176,6 +177,7 @@ class LinearOperator:
 
     @property
     def T(self) -> "LinearOperator":
+        """The transposed operator (alias for ``transpose()``)."""
         return self.transpose()
 
     # -- structure access (matrix-free probing defaults) -----------------
@@ -253,12 +255,15 @@ class TransposedOperator(LinearOperator):
         self.op = op
 
     def matvec(self, v):
+        """Apply ``Aᵀ`` (the base operator's ``rmatvec``)."""
         return self.op.rmatvec(v)
 
     def rmatvec(self, v):
+        """Apply ``A`` (the base operator's ``matvec``)."""
         return self.op.matvec(v)
 
     def transpose(self) -> LinearOperator:
+        """The original operator back."""
         return self.op
 
 
@@ -284,9 +289,11 @@ class FunctionOperator(LinearOperator):
         self._rmatvec = rmatvec
 
     def matvec(self, v):
+        """Apply the wrapped matvec callable."""
         return self._matvec(v)
 
     def rmatvec(self, v):
+        """Apply the adjoint (supplied, or derived via ``jax.vjp``)."""
         if self._rmatvec is not None:
             return self._rmatvec(v)
         return super().rmatvec(v)
@@ -316,10 +323,12 @@ class JacobianOperator(LinearOperator):
         self._sign = -1.0 if negate else 1.0
 
     def matvec(self, v):
+        """Jacobian-vector product: JVP of the map at the primal point."""
         _, jv = jax.jvp(self.fun, (self.primal,), (v,))
         return jax.tree_util.tree_map(jnp.negative, jv) if self.negate else jv
 
     def rmatvec(self, v):
+        """Vector-Jacobian product: VJP of the map at the primal point."""
         if self.symmetric:
             return self.matvec(v)
         # linearized per call (not cached on the instance): a VJP closure
@@ -353,29 +362,34 @@ class DenseOperator(LinearOperator):
                              f"but the matrix is {d}x{d}")
 
     def matvec(self, v):
+        """Dense matvec ``A @ v`` (batched over ``batch_ndim``)."""
         view = ravel_view(lambda t: t, v, self.batch_ndim)  # structure only
         out = jnp.einsum("bij,bj->bi",
                          self.A if self.batch_ndim else self.A[None], view.b)
         return view.to_tree(out)
 
     def rmatvec(self, v):
+        """Dense adjoint matvec ``Aᵀ @ u``."""
         if self.symmetric:
             return self.matvec(v)
         return DenseOperator(jnp.swapaxes(self.A, -1, -2),
                              self.example).matvec(v)
 
     def transpose(self) -> LinearOperator:
+        """Operator over the transposed matrix (``self`` when symmetric)."""
         if self.symmetric:
             return self
         return DenseOperator(jnp.swapaxes(self.A, -1, -2), self.example,
                              symmetric=self.symmetric)
 
     def diagonal(self):
+        """The matrix diagonal, O(1)."""
         diag = jnp.diagonal(self.A, axis1=-2, axis2=-1)
         view = ravel_view(lambda t: t, self.example, self.batch_ndim)
         return view.to_tree(diag if self.batch_ndim else diag[None])
 
     def materialize(self) -> jnp.ndarray:
+        """The stored dense matrix itself, O(1)."""
         return self.A
 
 
@@ -399,22 +413,27 @@ class RidgeShifted(LinearOperator):
         self.ridge = ridge
 
     def matvec(self, v):
+        """Apply ``A + ridge·I``."""
         return _tree_add_scaled(self.op.matvec(v), v, self.ridge)
 
     def rmatvec(self, v):
+        """Apply ``(A + ridge·I)ᵀ``."""
         return _tree_add_scaled(self.op.rmatvec(v), v, self.ridge)
 
     def transpose(self) -> LinearOperator:
+        """Ridge shift of the transposed base operator."""
         if self.symmetric:
             return self
         return RidgeShifted(self.op.transpose(), self.ridge,
                             positive_definite=self.positive_definite)
 
     def diagonal(self):
+        """Base diagonal plus ``ridge``."""
         return jax.tree_util.tree_map(lambda dg: dg + self.ridge,
                                       self.op.diagonal())
 
     def materialize(self) -> jnp.ndarray:
+        """Base matrix plus ``ridge·I``."""
         A = self.op.materialize()
         eye = jnp.eye(A.shape[-1], dtype=A.dtype)
         return A + self.ridge * eye
@@ -446,20 +465,25 @@ class BlockDiagonal(LinearOperator):
         self.ops = ops
 
     def matvec(self, v):
+        """Apply each block to its leaf of the domain pytree."""
         return tuple(op.matvec(vi) for op, vi in zip(self.ops, v))
 
     def rmatvec(self, v):
+        """Apply each block's adjoint to its leaf."""
         return tuple(op.rmatvec(vi) for op, vi in zip(self.ops, v))
 
     def transpose(self) -> LinearOperator:
+        """Blockwise transpose."""
         if self.symmetric:
             return self
         return BlockDiagonal(tuple(op.transpose() for op in self.ops))
 
     def diagonal(self):
+        """Blockwise diagonals as a pytree."""
         return tuple(op.diagonal() for op in self.ops)
 
     def materialize(self) -> jnp.ndarray:
+        """Dense block-diagonal matrix in ravel order."""
         blocks = [op.materialize() for op in self.ops]
         d = sum(b.shape[-1] for b in blocks)
         if self.batch_ndim:
@@ -490,12 +514,15 @@ class ComposedOperator(LinearOperator):
         self.inner = inner
 
     def matvec(self, v):
+        """Apply the composition right to left."""
         return self.outer.matvec(self.inner.matvec(v))
 
     def rmatvec(self, v):
+        """Apply the adjoint composition left to right."""
         return self.inner.rmatvec(self.outer.rmatvec(v))
 
     def transpose(self) -> LinearOperator:
+        """Compose the transposes in reverse order."""
         if self.symmetric:
             return self
         # (M A)ᵀ = Aᵀ Mᵀ; symmetry/definiteness are properties of the
@@ -529,9 +556,11 @@ class RaveledOperator(LinearOperator):
         self._unravel = unravel
 
     def ravel(self, tree) -> jnp.ndarray:
+        """Ravel a domain pytree to the flat vector domain."""
         return _ravel1(tree)
 
     def unravel(self, flat):
+        """Unravel a flat vector back to the domain pytree."""
         return self._unravel(flat)
 
     def ravel_fn(self, fn: Callable) -> Callable:
@@ -539,18 +568,23 @@ class RaveledOperator(LinearOperator):
         return lambda vf: _ravel1(fn(self._unravel(vf)))
 
     def matvec(self, vf):
+        """Flat-domain matvec (unravel → base matvec → ravel)."""
         return _ravel1(self.op.matvec(self._unravel(vf)))
 
     def rmatvec(self, vf):
+        """Flat-domain adjoint matvec."""
         return _ravel1(self.op.rmatvec(self._unravel(vf)))
 
     def diagonal(self):
+        """Base diagonal, raveled flat."""
         return _ravel1(self.op.diagonal())
 
     def materialize(self) -> jnp.ndarray:
+        """The base operator's dense matrix (already ravel-ordered)."""
         return self.op.materialize()
 
     def raveled(self) -> "RaveledOperator":
+        """Already flat: ``self``."""
         return self
 
 

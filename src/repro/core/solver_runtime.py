@@ -182,9 +182,11 @@ class IterativeSolver:
 
     # -- protocol ----------------------------------------------------------
     def init_state(self, params, *theta):
+        """Build the initial iteration state for ``params`` and θ."""
         raise NotImplementedError
 
     def update(self, params, state, *theta):
+        """One iteration: ``(params, state) → (params, state)``."""
         raise NotImplementedError
 
     def optimality_fun(self, params, *theta):
@@ -195,6 +197,7 @@ class IterativeSolver:
     def fixed_point_fun(self, params, *theta):
         # plain method (not a property) so wrapper solvers may shadow it
         # with a dataclass field holding the user's T
+        """The solver's fixed-point mapping ``T(x, θ)``, when it declares one."""
         raise NotImplementedError(
             f"{type(self).__name__} declares neither optimality_fun nor "
             "fixed_point_fun")
@@ -274,6 +277,7 @@ class IterativeSolver:
 # ---------------------------------------------------------------------------
 
 class GradientDescentState(NamedTuple):
+    """Iteration state of ``GradientDescent``."""
     iter_num: jnp.ndarray
     error: jnp.ndarray
 
@@ -292,12 +296,15 @@ class GradientDescent(IterativeSolver):
     linesearch: bool = False
 
     def optimality_fun(self, params, *theta):
+        """The optimality mapping ``F(x, θ)`` that ``run()`` differentiates through."""
         return jax.grad(self.fun, argnums=0)(params, *theta)
 
     def init_state(self, params, *theta):
+        """See ``IterativeSolver.init_state``."""
         return GradientDescentState(jnp.asarray(0), _inf_like(params))
 
     def update(self, params, state, *theta):
+        """See ``IterativeSolver.update``."""
         if not self.linesearch:
             g = jax.grad(self.fun, argnums=0)(params, *theta)
             new_params = _tree_axpy(params, g, -self.stepsize)
@@ -335,6 +342,7 @@ class GradientDescent(IterativeSolver):
 # ---------------------------------------------------------------------------
 
 class ProximalGradientState(NamedTuple):
+    """Iteration state of ``ProximalGradient``."""
     iter_num: jnp.ndarray
     error: jnp.ndarray
     z: Any                     # momentum iterate (= params when accel off)
@@ -355,6 +363,7 @@ class ProximalGradient(IterativeSolver):
 
     @property
     def fixed_point_fun(self):
+        """The fixed-point mapping ``T(x, θ)`` (residual ``T(x) − x``)."""
         return optimality.proximal_gradient_fp(self.fun, self.prox,
                                                self.stepsize)
 
@@ -365,10 +374,12 @@ class ProximalGradient(IterativeSolver):
         return self.prox(y, theta_g, self.stepsize)
 
     def init_state(self, params, theta):
+        """See ``IterativeSolver.init_state``."""
         return ProximalGradientState(jnp.asarray(0), _inf_like(params),
                                      z=params, t=jnp.asarray(1.0))
 
     def update(self, params, state, theta):
+        """See ``IterativeSolver.update``."""
         if not self.accel:
             new_params = self._pg_step(params, theta)
             error = _tree_l2(_tree_sub(new_params, params))
@@ -399,6 +410,7 @@ def ProjectedGradient(fun: Callable, proj: Callable, **kw) -> ProximalGradient:
 # ---------------------------------------------------------------------------
 
 class MirrorDescentState(NamedTuple):
+    """Iteration state of ``MirrorDescent``."""
     iter_num: jnp.ndarray
     error: jnp.ndarray
 
@@ -418,13 +430,16 @@ class MirrorDescent(IterativeSolver):
 
     @property
     def fixed_point_fun(self):
+        """The fixed-point mapping ``T(x, θ)`` (residual ``T(x) − x``)."""
         return optimality.mirror_descent_fp(self.fun, self.proj_bregman,
                                             self.phi_grad, self.stepsize)
 
     def init_state(self, params, theta):
+        """See ``IterativeSolver.init_state``."""
         return MirrorDescentState(jnp.asarray(0), _inf_like(params))
 
     def update(self, params, state, theta):
+        """See ``IterativeSolver.update``."""
         theta_f, theta_proj = theta
         k = state.iter_num
         eta = self.stepsize * jnp.where(
@@ -442,6 +457,7 @@ class MirrorDescent(IterativeSolver):
 # ---------------------------------------------------------------------------
 
 class BlockCDState(NamedTuple):
+    """Iteration state of ``BlockCoordinateDescent``."""
     iter_num: jnp.ndarray
     error: jnp.ndarray
 
@@ -457,15 +473,18 @@ class BlockCoordinateDescent(IterativeSolver):
     stepsize: float = 1.0
 
     def fixed_point_fun(self, x, theta):
+        """The fixed-point mapping ``T(x, θ)`` (residual ``T(x) − x``)."""
         theta_f, theta_g = theta
         y = x - self.stepsize * jax.grad(self.fun, argnums=0)(x, theta_f)
         return jax.vmap(
             lambda row: self.block_prox(row, theta_g, self.stepsize))(y)
 
     def init_state(self, params, theta):
+        """See ``IterativeSolver.init_state``."""
         return BlockCDState(jnp.asarray(0), _inf_like(params))
 
     def update(self, params, state, theta):
+        """See ``IterativeSolver.update``."""
         theta_f, theta_g = theta
         grad = jax.grad(self.fun, argnums=0)
 
@@ -486,6 +505,7 @@ class BlockCoordinateDescent(IterativeSolver):
 # ---------------------------------------------------------------------------
 
 class NewtonState(NamedTuple):
+    """Iteration state of ``Newton``."""
     iter_num: jnp.ndarray
     error: jnp.ndarray
 
@@ -500,12 +520,15 @@ class Newton(IterativeSolver):
     stepsize: float = 1.0
 
     def optimality_fun(self, params, *theta):
+        """The optimality mapping ``F(x, θ)`` that ``run()`` differentiates through."""
         return jax.grad(self.fun, argnums=0)(params, *theta)
 
     def init_state(self, params, *theta):
+        """See ``IterativeSolver.init_state``."""
         return NewtonState(jnp.asarray(0), _inf_like(params))
 
     def update(self, params, state, *theta):
+        """See ``IterativeSolver.update``."""
         g = jax.grad(self.fun, argnums=0)(params, *theta)
         H = jax.hessian(self.fun, argnums=0)(params, *theta)
         new_params = params - self.stepsize * jnp.linalg.solve(H, g)
@@ -517,6 +540,7 @@ class Newton(IterativeSolver):
 # ---------------------------------------------------------------------------
 
 class LbfgsState(NamedTuple):
+    """Iteration state of ``LBFGS``."""
     iter_num: jnp.ndarray
     error: jnp.ndarray
     x_flat: jnp.ndarray        # (d,) the raveled iterate (ravel hoisted
@@ -544,9 +568,11 @@ class LBFGS(IterativeSolver):
     stepsize: float = 1.0
 
     def optimality_fun(self, params, *theta):
+        """The optimality mapping ``F(x, θ)`` that ``run()`` differentiates through."""
         return jax.grad(self.fun, argnums=0)(params, *theta)
 
     def init_state(self, params, *theta):
+        """See ``IterativeSolver.init_state``."""
         x0 = _ravel_iterate(self, params)
         d, m = x0.shape[0], self.history
         return LbfgsState(jnp.asarray(0), _inf_like(params), x_flat=x0,
@@ -556,6 +582,7 @@ class LBFGS(IterativeSolver):
 
     def update(self, params, state, *theta):
         # the flat iterate rides in the state; params supplies structure only
+        """See ``IterativeSolver.update``."""
         x, unravel = state.x_flat, _unravel_for(self, params)
         grad = jax.grad(lambda v: self.fun(unravel(v), *theta))
         S, Y, rho, k = state.S, state.Y, state.rho, state.iter_num
@@ -612,6 +639,7 @@ class LBFGS(IterativeSolver):
 # ---------------------------------------------------------------------------
 
 class FixedPointState(NamedTuple):
+    """Iteration state of ``FixedPointIteration``."""
     iter_num: jnp.ndarray
     error: jnp.ndarray
 
@@ -622,15 +650,18 @@ class FixedPointIteration(IterativeSolver):
     fixed_point_fun: Callable = None     # T(x, *theta)
 
     def init_state(self, params, *theta):
+        """See ``IterativeSolver.init_state``."""
         return FixedPointState(jnp.asarray(0), _inf_like(params))
 
     def update(self, params, state, *theta):
+        """See ``IterativeSolver.update``."""
         new_params = self.fixed_point_fun(params, *theta)
         error = _tree_l2(_tree_sub(new_params, params))
         return new_params, FixedPointState(state.iter_num + 1, error)
 
 
 class AndersonState(NamedTuple):
+    """Iteration state of ``AndersonAcceleration``."""
     iter_num: jnp.ndarray
     error: jnp.ndarray
     x_flat: jnp.ndarray        # (d,) the raveled iterate (ravel hoisted
@@ -658,6 +689,7 @@ class AndersonAcceleration(IterativeSolver):
     beta: float = 1.0
 
     def init_state(self, params, *theta):
+        """See ``IterativeSolver.init_state``."""
         x0 = _ravel_iterate(self, params)
         d, m = x0.shape[0], self.history
         return AndersonState(jnp.asarray(0), _inf_like(params), x_flat=x0,
@@ -666,6 +698,7 @@ class AndersonAcceleration(IterativeSolver):
 
     def update(self, params, state, *theta):
         # the flat iterate rides in the state; params supplies structure only
+        """See ``IterativeSolver.update``."""
         x, unravel = state.x_flat, _unravel_for(self, params)
         m = self.history
 

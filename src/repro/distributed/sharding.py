@@ -261,6 +261,7 @@ def decode_state_specs(state_shape: Any, rules: ShardingRules,
 
 
 def named(mesh: Mesh, spec_tree: Any) -> Any:
+    """Bind a tree of ``PartitionSpec``s to ``mesh`` as ``NamedSharding``s."""
     return jax.tree_util.tree_map(
         lambda s: NamedSharding(mesh, s), spec_tree,
         is_leaf=lambda x: isinstance(x, P))

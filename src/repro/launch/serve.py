@@ -1,10 +1,20 @@
-"""Serving launcher: batched prefill + decode with a KV cache.
+"""Serving launcher: LM decode loop or the implicit-diff solve service.
+
+LM decode (batched prefill + decode with a KV cache)::
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-4b --smoke \
         --batch 4 --prompt-len 16 --gen 16
 
-Implements the production serve loop shape: one prefill pass fills the
-cache, then decode steps run one token/step for the whole batch (greedy).
+Solve service (continuous-batching linear-solve front end; drives two
+traffic waves — the second replays the first, so the warm-start cache
+hit rate and scheduler metrics are exercised end to end)::
+
+    PYTHONPATH=src python -m repro.launch.serve --solve-service \
+        --requests 64 --dim 32 --max-batch 64
+
+The LM path implements the production serve loop shape: one prefill pass
+fills the cache, then decode steps run one token/step for the whole batch
+(greedy).  The solve-service path is documented in ``docs/serving.md``.
 """
 from __future__ import annotations
 
@@ -18,15 +28,69 @@ from repro import configs
 from repro.models import decode_step, init_decode_state, init_params
 
 
+def serve_solves(args) -> None:
+    """Drive the solve service with synthetic SPD traffic; print metrics."""
+    import numpy as np
+
+    from repro.runtime.solve_service import SolveService, WarmStartCache
+
+    rng = np.random.default_rng(args.seed)
+    n, d = args.requests, args.dim
+    problems = []
+    for _ in range(n):
+        M = rng.standard_normal((d, d))
+        problems.append((M @ M.T + d * np.eye(d), rng.standard_normal(d)))
+
+    svc = SolveService(max_batch=args.max_batch,
+                       cache=WarmStartCache(capacity=args.cache_capacity))
+    svc.start()                       # background scheduler thread
+    try:
+        for wave in ("cold", "warm"):     # wave 2 replays wave 1: cache hits
+            t0 = time.perf_counter()
+            futs = [svc.submit(A, b, positive_definite=True)
+                    for A, b in problems]
+            results = [f.result(timeout=60.0) for f in futs]
+            dt = time.perf_counter() - t0
+            iters = [int(r.info.iterations) for r in results]
+            print(f"[serve] {wave}: {n} requests d={d} in {dt*1e3:.1f}ms "
+                  f"({n / dt:.0f} req/s) iters(median)="
+                  f"{int(np.median(iters))} "
+                  f"warm_started={sum(r.warm_start for r in results)}")
+    finally:
+        svc.stop()
+    m = svc.metrics_summary()
+    print(f"[serve] dispatches={m['dispatches']} compiled={m['compiled']} "
+          f"occupancy={m['occupancy']:.2f} hit_rate={m['hit_rate']:.2f} "
+          f"cache_size={m['cache_size']}")
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=configs.names())
+    ap.add_argument("--arch", default=None, choices=configs.names(),
+                    help="LM decode mode (required unless --solve-service)")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--solve-service", action="store_true",
+                    help="serve the implicit-diff solve service instead of "
+                         "LM decode")
+    ap.add_argument("--requests", type=int, default=64,
+                    help="solve-service: concurrent requests per wave")
+    ap.add_argument("--dim", type=int, default=32,
+                    help="solve-service: instance dimension d")
+    ap.add_argument("--max-batch", type=int, default=64,
+                    help="solve-service: bucket capacity ceiling")
+    ap.add_argument("--cache-capacity", type=int, default=256,
+                    help="solve-service: warm-start cache capacity")
     args = ap.parse_args()
+
+    if args.solve_service:
+        serve_solves(args)
+        return
+    if args.arch is None:
+        ap.error("--arch is required unless --solve-service is given")
 
     cfg = configs.get(args.arch, smoke=args.smoke)
     if not cfg.has_decoder:

@@ -1,3 +1,14 @@
+"""Runtime layer: training loop, fault tolerance, and the serving stack.
+
+Serving has two front ends: ``repro.runtime.serving`` (token-level
+continuous batching for LM decode) and ``repro.runtime.solve_service`` (the
+continuous-batching implicit-diff solve service — independent solve and
+hypergradient requests aggregated into batched masked solves, with a
+warm-start cache).
+"""
+from repro.runtime.solve_service import (SolveService, ServiceResult,
+                                         WarmStartCache, BucketKey,
+                                         bucket_capacity)
 from repro.runtime.train_loop import (TrainState, TrainStepConfig,
                                       make_train_state, make_train_step,
                                       make_prefill_step, make_decode_step)

@@ -32,14 +32,17 @@ class StragglerMonitor:
         self.times: Dict[int, collections.deque] = {}
 
     def record(self, step: int, dt: float, host: int = 0):
+        """Record one step duration ``dt`` for ``host``."""
         self.times.setdefault(host, collections.deque(
             maxlen=self.window)).append(dt)
 
     def medians(self) -> Dict[int, float]:
+        """Rolling median step time per host."""
         return {h: float(np.median(list(v)))
                 for h, v in self.times.items() if v}
 
     def stragglers(self) -> List[int]:
+        """Hosts whose median exceeds the fleet median by ``threshold``×."""
         meds = self.medians()
         if len(meds) < 2:
             return []
@@ -63,16 +66,19 @@ class HeartbeatRegistry:
         self.lock = threading.Lock()
 
     def ping(self, host: int):
+        """Mark ``host`` alive now."""
         with self.lock:
             self.last_seen[host] = self.clock()
 
     def failed_hosts(self) -> List[int]:
+        """Hosts silent longer than ``timeout`` seconds."""
         now = self.clock()
         with self.lock:
             return [h for h, t in self.last_seen.items()
                     if now - t > self.timeout]
 
     def healthy_hosts(self) -> List[int]:
+        """Hosts seen within the last ``timeout`` seconds."""
         now = self.clock()
         with self.lock:
             return [h for h, t in self.last_seen.items()
@@ -95,6 +101,7 @@ class PreemptionHandler:
         self._flag.set()
 
     def preempt(self):
+        """Set the shutdown flag programmatically (as SIGTERM would)."""
         self._flag.set()
 
     def __call__(self) -> bool:
@@ -117,6 +124,7 @@ class ElasticPlan:
     old_model: int
 
     def survivor_mesh(self, failed_fraction: float):
+        """New ``(data, model)`` mesh shape after dropping failed rows."""
         lost_rows = int(np.ceil(self.old_data * failed_fraction))
         new_data = max(1, self.old_data - lost_rows)
         # keep power-of-two friendliness for collectives
@@ -125,5 +133,6 @@ class ElasticPlan:
         return (new_data, self.old_model)
 
     def batch_scale(self, failed_fraction: float) -> float:
+        """Fraction of the global batch the survivor mesh sustains."""
         nd, _ = self.survivor_mesh(failed_fraction)
         return nd / self.old_data

@@ -15,6 +15,12 @@ request population.  This engine implements the control plane:
 
 Batch shapes never change ⇒ no recompilation during serving — the property
 that matters on TPU.
+
+This is the *token-generation* front end.  Its sibling,
+``repro.runtime.solve_service``, applies the same continuous-batching
+discipline (fixed compiled batch shapes, slot padding, scheduler metrics)
+to implicit-differentiation workloads: linear solves and hypergradient
+requests batched into bucketed masked solves with a warm-start cache.
 """
 from __future__ import annotations
 
@@ -33,6 +39,7 @@ from repro.models import model as mdl
 
 @dataclasses.dataclass
 class Request:
+    """One LM decode request and its scheduling lifecycle state."""
     uid: int
     prompt: np.ndarray              # (prompt_len,) int32
     max_new_tokens: int
@@ -87,6 +94,7 @@ class ContinuousBatchingEngine:
     # -- request lifecycle ---------------------------------------------------
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 32) -> int:
+        """Enqueue a prompt; returns the request uid."""
         req = Request(uid=self._uid, prompt=np.asarray(prompt, np.int32),
                       max_new_tokens=max_new_tokens,
                       enqueue_t=time.perf_counter())
@@ -165,6 +173,7 @@ class ContinuousBatchingEngine:
         return True
 
     def run_until_drained(self, max_steps: int = 10000):
+        """Step until queue and slots drain; returns finished requests."""
         steps = 0
         while (self.queue or any(r is not None for r in self.slot_req)) \
                 and steps < max_steps:
@@ -174,6 +183,7 @@ class ContinuousBatchingEngine:
 
     @property
     def occupancy(self) -> float:
+        """Mean fraction of decode slots active per step."""
         if self.metrics["steps"] == 0:
             return 0.0
         return self.metrics["occupancy_sum"] / self.metrics["steps"]

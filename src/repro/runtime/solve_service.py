@@ -1,0 +1,670 @@
+"""Continuous-batching implicit-diff solve service with a warm-start cache.
+
+The batched masked-solve engine (``repro.core.linear_solve``) is 20–80x
+faster than looped solves — but only if a single caller hands it a
+pre-batched problem.  This module is the missing front end for serving that
+capability to *independent* concurrent callers: requests for linear solves
+and implicit hypergradients are aggregated into **shape buckets** and each
+bucket is dispatched as ONE batched masked solve through the
+``route_solve`` + ``LinearOperator`` path.
+
+Design (mirrors the ``ContinuousBatchingEngine`` slot discipline in
+``repro.runtime.serving``, and the bucket-by-size batching idiom of
+tensor2tensor's ``data_reader``):
+
+  * **Bucketing** — requests are keyed by
+    ``(d, solver, precond, symmetric/PD flags, dtype, tol, maxiter, ridge)``
+    (``BucketKey``); everything in one bucket is mathematically one batched
+    block-diagonal system, so one masked ``lax.while_loop`` serves all of it
+    with per-instance convergence.
+  * **Fixed compiled shapes** — buckets are padded to power-of-two
+    capacities (``bucket_capacity``) with identity systems and zero
+    right-hand sides; padded slots converge at loop entry, so their cost is
+    ~zero and the compiled batch shape never changes during serving (no
+    recompilation under traffic — the property that matters on TPU).  The
+    set of compiled ``(key, capacity)`` programs is tracked in
+    ``metrics["compiled"]``.
+  * **Warm-start cache** — a ``WarmStartCache`` keyed by a problem
+    fingerprint (operator sketch + rhs sketch, quantized so repeat/nearby
+    problems collide on purpose) with LRU eviction and hit-rate counters.
+    A hit seeds the request's slot with the cached solution (``init``), so
+    repeat traffic — the common case under load — starts near the answer.
+  * **Per-request diagnostics** — every request resolves to a
+    ``ServiceResult`` carrying the solution, its own ``SolveInfo`` slice
+    (exact per-instance iteration counts: masked batching preserves each
+    instance's solo trajectory), queue/dispatch latency, bucket occupancy
+    and cache provenance.
+
+Hypergradient requests (``submit_hypergrad``) batch the *linear-solve* step
+of implicit differentiation — the dominant, amortizable cost (cf.
+"Efficient Automatic Differentiation of Implicit Functions"): the implicit
+system ``Aᵀ u = v`` (``A = -∂₁F`` at ``x*``) joins a bucket like any other
+solve, and the cheap per-request θ-VJP ``θ̄ = Bᵀu`` runs at completion.
+
+Quickstart::
+
+    from repro.runtime import SolveService
+
+    svc = SolveService()                      # warm-start cache on
+    futs = [svc.submit(A_i, b_i) for i in range(64)]   # e.g. (d, d) SPD
+    svc.flush()                               # ONE batched masked solve
+    results = [f.result() for f in futs]      # ServiceResult each
+    results[0].info.iterations, svc.metrics["cache_hits"]
+
+``docs/serving.md`` is the full reference (request lifecycle, bucketing
+rules, warm-start semantics, metrics glossary).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import hashlib
+import threading
+import time
+from concurrent.futures import Future
+from typing import Any, Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.flatten_util import ravel_pytree
+
+from repro.core import linear_solve as ls
+from repro.core import operators as ops
+from repro.core.linear_solve import MAX_DENSE_DIM, SolveInfo
+
+
+class BucketKey(NamedTuple):
+    """The bucket identity: requests sharing a key batch into one solve.
+
+    Every field participates in compiled-program identity — two requests
+    with the same key run through the SAME jitted dispatch function at some
+    fixed capacity, so serving steady traffic never recompiles.
+    """
+    d: int                       # instance dimension (raveled)
+    solver: str                  # resolved registry solver name
+    precond: Optional[str]       # None | "jacobi" | "block_jacobi"
+    symmetric: Optional[bool]    # operator's declared symmetry flag
+    positive_definite: bool      # operator's declared PD flag
+    dtype: str                   # promoted result dtype of (A, b)
+    tol: float                   # solve controls are part of the program
+    maxiter: int
+    ridge: float
+
+
+def bucket_capacity(n: int, max_batch: int = 64) -> int:
+    """Pad a bucket of ``n`` requests to its fixed compiled capacity.
+
+    Power-of-two capacities clamped to ``max_batch`` — a handful of
+    compiled programs per ``BucketKey`` covers every load level, and a
+    given traffic mix reuses the same programs forever (no recompilation
+    during serving).
+    """
+    if n < 1:
+        raise ValueError(f"bucket needs at least one request, got n={n}")
+    cap = 1
+    while cap < n:
+        cap *= 2
+    return min(cap, max_batch)
+
+
+@dataclasses.dataclass
+class ServiceResult:
+    """What a request's ``Future`` resolves to.
+
+    ``x`` is the request's payload — the solution for a solve request (host
+    numpy for a flat ``(d,)`` rhs, the unraveled pytree otherwise), the
+    per-θ-argument gradient tuple for a hypergradient request.
+    ``info`` is this request's own ``SolveInfo`` slice out of the batched
+    dispatch (masked batching preserves each instance's solo iteration
+    count).  ``queue_time``/``solve_time`` are seconds spent waiting for a
+    flush / inside the batched dispatch; ``bucket_size``/``bucket_capacity``
+    expose the occupancy of the dispatch that served this request;
+    ``warm_start`` says whether a cached solution seeded the slot.
+    """
+    uid: int
+    x: Any
+    info: SolveInfo
+    queue_time: float
+    solve_time: float
+    bucket_size: int
+    bucket_capacity: int
+    warm_start: bool
+
+
+@dataclasses.dataclass
+class _PendingRequest:
+    """Internal queue entry: one admitted, not-yet-dispatched request."""
+    uid: int
+    key: BucketKey
+    A: np.ndarray                # (d, d) materialized operator (host)
+    b: np.ndarray                # (d,) raveled right-hand side (host)
+    unravel: Optional[Callable]  # flat (d,) -> pytree; None = flat rhs
+    future: Future
+    fingerprint: Optional[str]   # warm-start cache key (None: cache off)
+    init: Optional[np.ndarray]   # cached warm-start solution, if any
+    finish: Optional[Callable]   # post-solve hook (hypergrad θ-VJP)
+    enqueue_t: float = 0.0
+
+
+class WarmStartCache:
+    """LRU cache of solved systems keyed by a quantized problem fingerprint.
+
+    The fingerprint is a sketch — ``A @ p`` for a fixed per-``d`` probe
+    vector ``p``, concatenated with ``b``, normalized and quantized to
+    ``qtol`` relative resolution, then hashed.  Exact repeats always
+    collide; *nearby* problems (relative perturbation ≲ ``qtol``) usually
+    collide, which is the point: under heavy traffic the same and
+    slightly-drifted systems recur, and a hit seeds the solver with the
+    previous solution so it starts near the answer.  A spurious collision
+    only costs a worse initial guess — never a wrong answer (the solver
+    still iterates to ``tol``).
+
+    ``hits`` / ``misses`` / ``evictions`` counters and ``hit_rate`` are
+    read by the service metrics.
+    """
+
+    def __init__(self, capacity: int = 256, qtol: float = 1e-3,
+                 seed: int = 1234):
+        if capacity < 1:
+            raise ValueError(f"cache capacity must be >= 1, got {capacity}")
+        self.capacity = int(capacity)
+        self.qtol = float(qtol)
+        self._seed = int(seed)
+        self._store: "collections.OrderedDict[str, np.ndarray]" = \
+            collections.OrderedDict()
+        self._probes: dict = {}
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def _probe(self, d: int) -> np.ndarray:
+        """The fixed unit probe vector for dimension ``d`` (built once)."""
+        p = self._probes.get(d)
+        if p is None:
+            rng = np.random.default_rng(self._seed + d)
+            p = rng.standard_normal(d)
+            p /= np.linalg.norm(p)
+            self._probes[d] = p
+        return p
+
+    def fingerprint(self, A, b, key: BucketKey) -> str:
+        """Hash a problem to its cache key.
+
+        The sketch ``[A @ p, b]`` identifies the operator's action and the
+        right-hand side without hashing all of ``A``; quantizing by
+        ``qtol`` relative to the sketch norm folds nearby problems onto one
+        key.  The ``BucketKey`` participates so distinct solver routings
+        never share warm starts of mismatched meaning.
+        """
+        A = np.asarray(A, np.float64)
+        b = np.asarray(b, np.float64)
+        sketch = np.concatenate([A @ self._probe(A.shape[-1]), b])
+        scale = float(np.linalg.norm(sketch))
+        if not np.isfinite(scale) or scale == 0.0:
+            scale = 1.0
+        q = np.round(sketch / (scale * self.qtol)).astype(np.int64)
+        h = hashlib.blake2b(digest_size=16)
+        h.update(repr(key).encode())
+        h.update(q.tobytes())
+        return h.hexdigest()
+
+    def get(self, fingerprint: str) -> Optional[np.ndarray]:
+        """Look up a warm start; counts a hit or a miss and refreshes LRU."""
+        x = self._store.get(fingerprint)
+        if x is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        self._store.move_to_end(fingerprint)
+        return x
+
+    def put(self, fingerprint: str, x) -> None:
+        """Insert/refresh a solution; evicts the LRU entry over capacity."""
+        self._store[fingerprint] = np.asarray(x)
+        self._store.move_to_end(fingerprint)
+        while len(self._store) > self.capacity:
+            self._store.popitem(last=False)
+            self.evictions += 1
+
+    def __len__(self) -> int:
+        """Number of cached solutions currently resident."""
+        return len(self._store)
+
+    @property
+    def hit_rate(self) -> float:
+        """Fraction of lookups served from cache (0.0 when none yet)."""
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class SolveService:
+    """Async front end that batches independent solve requests per bucket.
+
+    ``submit`` / ``submit_hypergrad`` enqueue work and return
+    ``concurrent.futures.Future`` objects; ``flush()`` drains the queue,
+    groups requests by ``BucketKey``, pads each group to a fixed capacity
+    and dispatches it as ONE batched masked solve via
+    ``linear_solve.route_solve`` on a stacked ``DenseOperator``.  A
+    background scheduler thread (``start()`` / ``stop()``) can flush
+    continuously; tests and benchmarks drive ``flush()`` explicitly for
+    determinism.
+
+    Admission materializes each request's operator to its dense
+    ``(d, d)`` instance form (O(1) for ``DenseOperator``/arrays, ``d``
+    probing matvecs for matrix-free operators, ``d ≤ MAX_DENSE_DIM``
+    enforced) — that is what makes *independent* requests stackable into
+    one batch.  The linear solve is the dominant, amortizable cost;
+    admission is the price of cross-request batching.
+
+    Parameters:
+      max_batch: bucket capacity ceiling (larger groups split into chunks).
+      cache: a ``WarmStartCache`` (default: capacity 256) or ``None`` to
+        disable warm starts.
+      solve / tol / maxiter / ridge / precond: per-request defaults;
+        every one can be overridden per ``submit`` call or by a
+        routing-only ``ImplicitDiffSpec`` via ``spec=``.
+    """
+
+    _DEFAULT_CACHE = object()    # sentinel: build a fresh cache per service
+
+    def __init__(self, *, max_batch: int = 64,
+                 cache: Optional[WarmStartCache] = _DEFAULT_CACHE,
+                 solve: Union[str, Callable] = "auto", tol: float = 1e-6,
+                 maxiter: int = 1000, ridge: float = 0.0,
+                 precond: Optional[str] = None):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.max_batch = int(max_batch)
+        self.cache = WarmStartCache() if cache is self._DEFAULT_CACHE \
+            else cache
+        self.defaults = dict(solve=solve, tol=float(tol),
+                             maxiter=int(maxiter), ridge=float(ridge),
+                             precond=precond)
+        self._queue: "collections.deque[_PendingRequest]" = \
+            collections.deque()
+        self._compiled: dict = {}          # (BucketKey, cap) -> jitted fn
+        self._lock = threading.Lock()
+        self._uid = 0
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        self.metrics = {
+            "requests": 0, "dispatches": 0, "instances": 0, "padded": 0,
+            "occupancy_sum": 0.0, "queue_wait_sum": 0.0,
+            "solve_time_sum": 0.0, "compiled": 0,
+            "cache_hits": 0, "cache_misses": 0, "cache_evictions": 0,
+        }
+
+    # -- admission -----------------------------------------------------------
+
+    def _routing(self, spec, solve, tol, maxiter, ridge, precond) -> dict:
+        """Merge service defaults, a routing-only spec, and per-call kwargs.
+
+        Precedence (lowest to highest): service defaults < ``spec``
+        (an ``ImplicitDiffSpec`` — its ``solve``/``tol``/``maxiter``/
+        ``ridge``/``precond`` routing fields) < explicit keyword overrides.
+        """
+        r = dict(self.defaults)
+        if spec is not None:
+            r.update(solve=spec.solve, **spec.routing_kwargs())
+        for name, val in (("solve", solve), ("tol", tol),
+                          ("maxiter", maxiter), ("ridge", ridge),
+                          ("precond", precond)):
+            if val is not None:
+                r[name] = val
+        if callable(r["solve"]):
+            raise ValueError(
+                "the solve service buckets by registry solver name; custom "
+                "solve callables cannot be batched across requests — call "
+                "route_solve directly for those")
+        if r["precond"] is not None and not isinstance(r["precond"], str):
+            raise ValueError(
+                "the solve service buckets by preconditioner kind; pass "
+                "precond=None/'jacobi'/'block_jacobi' (a callable M⁻¹ is "
+                "request-specific and cannot key a shared bucket)")
+        return r
+
+    def _admit_operator(self, A, b, symmetric, positive_definite):
+        """Materialize the request operator and ravel the rhs.
+
+        Accepts a ``LinearOperator`` (instance-shaped, ``batch_ndim=0``), a
+        dense ``(d, d)`` array, or a bare matvec callable (probed).
+        Returns ``(A_host, b_flat, unravel, symmetric, pd)`` with flags
+        taken from the operator when it carries them.  ``A_host`` and
+        ``b_flat`` are **host numpy** arrays and — for the common case of a
+        concrete matrix and a flat rhs — admission never touches JAX at
+        all (``unravel is None`` marks the flat fast path).  Keeping
+        admission off the device dispatch path is what lets one batched
+        dispatch amortize across 64 submits instead of drowning in 64
+        rounds of per-request op overhead.
+        """
+        if isinstance(A, ops.LinearOperator):
+            if A.batch_ndim != 0:
+                raise ValueError(
+                    "submit() takes ONE instance per request (batch_ndim=0);"
+                    " the service does the batching — split a batched "
+                    "operator into per-instance requests")
+            symmetric = A.symmetric if symmetric is None else symmetric
+            positive_definite = A.positive_definite or bool(positive_definite)
+            A_host = np.asarray(A.materialize())    # d probing matvecs
+        elif callable(A) and not hasattr(A, "ndim"):
+            op = ops.FunctionOperator(
+                A, b, symmetric=symmetric,
+                positive_definite=bool(positive_definite))
+            A_host = np.asarray(op.materialize())
+        else:
+            A_host = np.asarray(A)
+            if A_host.ndim != 2 or A_host.shape[0] != A_host.shape[1]:
+                raise ValueError(
+                    f"expected a (d, d) operator, got {A_host.shape}")
+            if symmetric is None:       # concrete matrix: detect, don't guess
+                if positive_definite:   # declared PD certifies symmetry
+                    symmetric = True
+                else:                   # allclose semantics, one temporary
+                    tol = 1e-8 * max(float(np.abs(A_host).max()), 1.0) + 1e-10
+                    symmetric = bool(
+                        np.abs(A_host - A_host.T).max() <= tol)
+        if isinstance(b, (np.ndarray, jax.Array)) and b.ndim == 1:
+            b_flat, unravel = np.asarray(b), None   # flat fast path: no JAX
+        else:
+            b_jax, unravel = ravel_pytree(b)
+            b_flat = np.asarray(b_jax)
+        d = b_flat.shape[0]
+        if d > MAX_DENSE_DIM:
+            raise ValueError(
+                f"the solve service batches dense instance systems; d={d} "
+                f"exceeds MAX_DENSE_DIM={MAX_DENSE_DIM} — solve oversized "
+                "systems directly through linear_solve.solve")
+        return A_host, b_flat, unravel, symmetric, bool(positive_definite)
+
+    def _resolve_solver(self, positive_definite: bool, precond) -> str:
+        """Resolve ``"auto"`` ONCE at admission so bucket keys are stable.
+
+        This is ``linear_solve._resolve_auto`` restricted to the service's
+        regime (single-device dense, ``d ≤ MAX_DENSE_DIM``), evaluated
+        host-side so admission stays off the JAX dispatch path — a test
+        pins it against the real resolver.  With the warm-start cache
+        enabled the resolution assumes an ``init`` may arrive (steering
+        off ``pallas_cg``, which always starts from zero) — cold and warm
+        requests for the same problem must land in the SAME bucket and
+        reuse one compiled program.
+        """
+        plain = precond is None and self.cache is None
+        return "pallas_cg" if positive_definite and plain else "dense_gmres"
+
+    def _enqueue(self, pending: _PendingRequest) -> Future:
+        pending.enqueue_t = time.perf_counter()
+        with self._lock:
+            self._queue.append(pending)
+            self.metrics["requests"] += 1
+        return pending.future
+
+    def _build_request(self, A, b, symmetric, positive_definite, spec,
+                       solve, tol, maxiter, ridge, precond,
+                       warm_start: bool) -> _PendingRequest:
+        """Admission: normalize, bucket-key, warm-start lookup (no enqueue)."""
+        r = self._routing(spec, solve, tol, maxiter, ridge, precond)
+        A_dense, b_flat, unravel, sym, pd = self._admit_operator(
+            A, b, symmetric, positive_definite)
+        d = int(b_flat.shape[0])
+        solver = r["solve"]
+        if solver == "auto":
+            solver = self._resolve_solver(pd, r["precond"])
+        dtype = jax.dtypes.canonicalize_dtype(
+            np.result_type(A_dense.dtype, b_flat.dtype))
+        key = BucketKey(d=d, solver=solver, precond=r["precond"],
+                        symmetric=sym, positive_definite=pd,
+                        dtype=str(dtype),
+                        tol=r["tol"], maxiter=r["maxiter"], ridge=r["ridge"])
+        fingerprint = init = None
+        if self.cache is not None and warm_start:
+            fingerprint = self.cache.fingerprint(A_dense, b_flat, key)
+            init = self.cache.get(fingerprint)
+            if init is not None and solver == "pallas_cg":
+                init = None     # pallas_cg always starts from zero
+        pending = _PendingRequest(uid=self._uid, key=key, A=A_dense,
+                                  b=b_flat, unravel=unravel, future=Future(),
+                                  fingerprint=fingerprint, init=init,
+                                  finish=None)
+        self._uid += 1
+        return pending
+
+    def submit(self, A, b, *, symmetric: Optional[bool] = None,
+               positive_definite: bool = False, spec=None, solve=None,
+               tol=None, maxiter=None, ridge=None, precond=None,
+               warm_start: bool = True) -> Future:
+        """Enqueue one linear solve ``A x = b``; returns a ``Future``.
+
+        ``A`` is a ``(d, d)`` array (symmetry auto-detected when not
+        declared), an instance-shaped ``LinearOperator`` (flags read off
+        it), or a matvec callable; ``b`` any pytree raveling to ``d ≤ 512``.
+        Routing defaults come from the service; a routing-only
+        ``ImplicitDiffSpec`` (``spec=``) or explicit keywords override them
+        per request.  The future resolves to a ``ServiceResult`` at the
+        flush that dispatches this request's bucket.
+        """
+        return self._enqueue(self._build_request(
+            A, b, symmetric, positive_definite, spec, solve, tol, maxiter,
+            ridge, precond, warm_start))
+
+    def submit_hypergrad(self, optimality_fun, x_star, theta, cotangent, *,
+                         spec=None, solve=None, tol=None, maxiter=None,
+                         ridge=None, precond=None,
+                         warm_start: bool = True) -> Future:
+        """Enqueue one implicit hypergradient: resolves to ``vᵀ ∂x*(θ)``.
+
+        Batches the linear-solve step of ``root_vjp`` — the system
+        ``Aᵀ u = v`` with ``A = -∂₁F(x*, θ)`` — into the service's shape
+        buckets; the cheap per-request θ-VJP ``θ̄ = Bᵀ u`` runs when the
+        bucket completes.  ``theta`` is a tuple of θ arguments (a single
+        non-tuple value is accepted), ``cotangent`` has the structure of
+        ``x*``.  The future's ``ServiceResult.x`` is the per-θ-argument
+        gradient tuple, exactly ``root_vjp``'s return value.
+
+        A mapping-carrying ``ImplicitDiffSpec`` may supply *both* the
+        optimality mapping (pass ``optimality_fun=None``) and the routing;
+        an explicit ``optimality_fun`` wins when both are given.
+        """
+        if optimality_fun is None:
+            if spec is None or spec.is_routing_only:
+                raise ValueError("submit_hypergrad needs an optimality "
+                                 "mapping: pass optimality_fun= or a spec "
+                                 "carrying one")
+            optimality_fun = spec.residual_fun
+        if not isinstance(theta, tuple):
+            theta = (theta,)
+        r = self._routing(spec, solve, tol, maxiter, ridge, precond)
+        solver = r["solve"]
+        certified = solver != "auto" and ls.solver_is_symmetric(solver)
+        A = ops.JacobianOperator(
+            lambda x: optimality_fun(x, *theta), x_star, negate=True,
+            symmetric=True if certified else None)
+        # the bucketed system is Aᵀ u = v (a symmetric-certified A is its
+        # own transpose); the θ-VJP below finishes the hypergradient
+        AT = A if certified else A.T
+
+        def finish(u_tree):
+            _, vjp_theta = jax.vjp(
+                lambda *targs: optimality_fun(x_star, *targs), *theta)
+            return vjp_theta(u_tree)
+
+        pending = self._build_request(
+            AT, cotangent, A.symmetric, False, spec, solve, tol, maxiter,
+            ridge, precond, warm_start)
+        pending.finish = finish
+        return self._enqueue(pending)
+
+    # -- dispatch ------------------------------------------------------------
+
+    def _dispatch_fn(self, key: BucketKey, cap: int) -> Callable:
+        """The jitted batched dispatch for ``(key, cap)``, compiled once.
+
+        Builds the stacked ``DenseOperator`` (structure flags from the
+        bucket key) inside the jit and routes ONE batched masked solve
+        through ``route_solve`` with ``return_info=True``.  ``pallas_cg``
+        buckets never carry warm starts, so the init argument is dropped
+        for them (the kernel always starts from zero).
+        """
+        fn = self._compiled.get((key, cap))
+        if fn is not None:
+            return fn
+        takes_init = key.solver != "pallas_cg"
+
+        def dispatch(A_stack, b_stack, init_stack):
+            op = ops.DenseOperator(A_stack, symmetric=key.symmetric,
+                                   positive_definite=key.positive_definite)
+            return ls.route_solve(
+                key.solver, op, b_stack, tol=key.tol, maxiter=key.maxiter,
+                ridge=key.ridge, precond=key.precond,
+                init=init_stack if takes_init else None, return_info=True)
+
+        fn = jax.jit(dispatch)
+        self._compiled[(key, cap)] = fn
+        self.metrics["compiled"] = len(self._compiled)
+        return fn
+
+    def _dispatch_bucket(self, key: BucketKey, reqs) -> None:
+        """Pad one bucket to capacity and run its single batched solve."""
+        n = len(reqs)
+        cap = bucket_capacity(n, self.max_batch)
+        d = key.d
+        dtype = np.dtype(key.dtype)
+        # host-side staging: padded slots get identity systems with zero
+        # rhs/init (they converge at while_loop entry); the jitted dispatch
+        # transfers each stacked buffer to device ONCE per flush
+        A_stack = np.empty((cap, d, d), dtype)
+        b_stack = np.zeros((cap, d), dtype)
+        init_stack = np.zeros((cap, d), dtype)
+        A_stack[n:] = np.eye(d, dtype=dtype)
+        for i, r in enumerate(reqs):
+            A_stack[i] = r.A
+            b_stack[i] = r.b
+            if r.init is not None:
+                init_stack[i] = r.init
+
+        fn = self._dispatch_fn(key, cap)
+        t0 = time.perf_counter()
+        x, info = fn(A_stack, b_stack, init_stack)
+        x = jax.block_until_ready(x)
+        solve_t = time.perf_counter() - t0
+
+        self.metrics["dispatches"] += 1
+        self.metrics["instances"] += n
+        self.metrics["padded"] += cap - n
+        self.metrics["occupancy_sum"] += n / cap
+        self.metrics["solve_time_sum"] += solve_t
+
+        x_host = np.asarray(x)
+        it = np.asarray(info.iterations).tolist()
+        rn = np.asarray(info.residual).tolist()
+        cv = np.asarray(info.converged).tolist()
+        if not isinstance(it, list):        # scalar (unbatched) diagnostics
+            it, rn, cv = [it] * cap, [rn] * cap, [cv] * cap
+        now = time.perf_counter()
+        queue_wait = 0.0
+        for i, req in enumerate(reqs):
+            xi = x_host[i]
+            if req.fingerprint is not None and self.cache is not None:
+                self.cache.put(req.fingerprint, xi)
+            queue_t = max(now - solve_t - req.enqueue_t, 0.0)
+            queue_wait += queue_t
+            try:
+                payload = xi if req.unravel is None \
+                    else req.unravel(jnp.asarray(xi))
+                if req.finish is not None:
+                    payload = req.finish(payload)
+                req.future.set_result(ServiceResult(
+                    uid=req.uid, x=payload,
+                    info=SolveInfo(iterations=it[i], residual=rn[i],
+                                   converged=cv[i]),
+                    queue_time=queue_t, solve_time=solve_t,
+                    bucket_size=n, bucket_capacity=cap,
+                    warm_start=req.init is not None))
+            except Exception as exc:
+                req.future.set_exception(exc)
+        self.metrics["queue_wait_sum"] += queue_wait
+        if self.cache is not None:
+            self.metrics["cache_hits"] = self.cache.hits
+            self.metrics["cache_misses"] = self.cache.misses
+            self.metrics["cache_evictions"] = self.cache.evictions
+
+    def flush(self) -> int:
+        """Drain the queue: dispatch every bucket once; returns #requests.
+
+        An empty queue is a no-op (returns 0) — flushing never pays a
+        dispatch for nothing.  Buckets larger than ``max_batch`` split
+        into successive full chunks (slot reuse: same compiled program).
+        """
+        with self._lock:
+            pending = list(self._queue)
+            self._queue.clear()
+        if not pending:
+            return 0
+        buckets: "collections.OrderedDict[BucketKey, list]" = \
+            collections.OrderedDict()
+        for req in pending:
+            buckets.setdefault(req.key, []).append(req)
+        for key, reqs in buckets.items():
+            for lo in range(0, len(reqs), self.max_batch):
+                self._dispatch_bucket(key, reqs[lo:lo + self.max_batch])
+        return len(pending)
+
+    def drain(self, timeout: float = 30.0) -> None:
+        """Block until the queue is empty (background-thread mode)."""
+        deadline = time.perf_counter() + timeout
+        while time.perf_counter() < deadline:
+            with self._lock:
+                if not self._queue:
+                    return
+            time.sleep(0.001)
+        raise TimeoutError("solve service did not drain in time")
+
+    # -- background scheduler ------------------------------------------------
+
+    def start(self, interval: float = 0.001) -> None:
+        """Start a scheduler thread flushing every ``interval`` seconds."""
+        if self._thread is not None:
+            raise RuntimeError("service already started")
+        self._stop.clear()
+
+        def loop():
+            while not self._stop.is_set():
+                self.flush()
+                time.sleep(interval)
+            self.flush()                    # final drain
+
+        self._thread = threading.Thread(target=loop, daemon=True)
+        self._thread.start()
+
+    def stop(self) -> None:
+        """Stop the scheduler thread (flushes once more on the way out)."""
+        if self._thread is None:
+            return
+        self._stop.set()
+        self._thread.join(timeout=10.0)
+        self._thread = None
+
+    # -- metrics -------------------------------------------------------------
+
+    @property
+    def occupancy(self) -> float:
+        """Mean bucket occupancy (real requests / padded capacity)."""
+        n = self.metrics["dispatches"]
+        return self.metrics["occupancy_sum"] / n if n else 0.0
+
+    @property
+    def hit_rate(self) -> float:
+        """Warm-start cache hit rate (0.0 with the cache disabled)."""
+        return self.cache.hit_rate if self.cache is not None else 0.0
+
+    @property
+    def throughput(self) -> float:
+        """Requests served per second of batched solve time."""
+        t = self.metrics["solve_time_sum"]
+        return self.metrics["instances"] / t if t > 0 else 0.0
+
+    def metrics_summary(self) -> dict:
+        """One flat dict of scheduler metrics (CLI / benchmark reporting)."""
+        return dict(self.metrics, occupancy=self.occupancy,
+                    hit_rate=self.hit_rate, throughput=self.throughput,
+                    cache_size=len(self.cache) if self.cache else 0)

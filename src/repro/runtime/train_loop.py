@@ -27,6 +27,7 @@ from repro.optim import grad_compression as gc
 
 
 class TrainState(NamedTuple):
+    """Carried training state: params, optimizer state, error feedback."""
     params: Any
     opt_state: opt.OptState
     err_state: Any            # grad-compression error feedback (or None)
@@ -34,6 +35,7 @@ class TrainState(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class TrainStepConfig:
+    """Static configuration of the compiled train step."""
     microbatches: int = 1
     clip_norm: float = 1.0
     compress_grads: bool = False

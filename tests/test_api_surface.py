@@ -115,3 +115,27 @@ def test_runtime_solvers_expose_diff_spec():
     assert spec.tol == 1e-9
     assert spec.ridge == 1e-12
     assert spec.has_aux       # run() returns (params, OptInfo)
+
+
+def test_runtime_service_public_surface():
+    """The serving layer re-exports the solve-service front end."""
+    import repro.runtime as rt
+    for name in ("SolveService", "ServiceResult", "WarmStartCache",
+                 "BucketKey", "bucket_capacity"):
+        assert callable(getattr(rt, name)), name
+    # the service resolves "auto" host-side; its static policy must agree
+    # with the registry resolver in the dense serving regime
+    import jax.numpy as jnp
+    from repro.core import DenseOperator
+    from repro.core.linear_solve import _resolve_auto
+    svc_cold = rt.SolveService(cache=None)
+    svc_warm = rt.SolveService()
+    b = jnp.ones(8)
+    for pd in (True, False):
+        for precond in (None, "jacobi"):
+            op = DenseOperator(jnp.eye(8), symmetric=True,
+                               positive_definite=pd)
+            assert svc_cold._resolve_solver(pd, precond) == \
+                _resolve_auto(op, b, precond, None)
+            assert svc_warm._resolve_solver(pd, precond) == \
+                _resolve_auto(op, b, precond, b)

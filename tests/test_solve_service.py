@@ -1,0 +1,237 @@
+"""Solve-service scheduler: bucketing, padding, cache, and parity."""
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DenseOperator, linear_solve as ls
+from repro.core.diff_api import ImplicitDiffSpec, root_vjp
+from repro.runtime import (BucketKey, ServiceResult, SolveService,
+                           WarmStartCache, bucket_capacity)
+
+
+def _spd(rng, d):
+    M = rng.standard_normal((d, d))
+    return M @ M.T + d * np.eye(d)
+
+
+# -- bucket shaping ----------------------------------------------------------
+
+def test_bucket_capacity_rounds_to_power_of_two():
+    assert [bucket_capacity(n) for n in (1, 2, 3, 5, 9, 64)] == \
+        [1, 2, 4, 8, 16, 64]
+    assert bucket_capacity(100, max_batch=64) == 64
+    with pytest.raises(ValueError):
+        bucket_capacity(0)
+
+
+def test_empty_flush_is_a_noop():
+    svc = SolveService()
+    assert svc.flush() == 0
+    assert svc.metrics["dispatches"] == 0
+
+
+def test_single_request_bucket():
+    svc = SolveService(cache=None)
+    fut = svc.submit(2.0 * np.eye(4), np.ones(4), positive_definite=True)
+    assert svc.flush() == 1
+    r = fut.result()
+    assert isinstance(r, ServiceResult)
+    assert (r.bucket_size, r.bucket_capacity) == (1, 1)
+    assert bool(r.info.converged)
+    np.testing.assert_allclose(np.asarray(r.x), 0.5, atol=1e-5)
+
+
+def test_mixed_d_load_forms_multiple_buckets():
+    rng = np.random.default_rng(0)
+    svc = SolveService()
+    futs = [svc.submit(_spd(rng, d), rng.standard_normal(d),
+                       positive_definite=True)
+            for d in (8, 12, 8, 12, 8, 12, 8, 12)]
+    assert svc.flush() == 8
+    assert svc.metrics["dispatches"] == 2          # one per d
+    sizes = {f.result().bucket_size for f in futs}
+    assert sizes == {4}                            # 4 requests per bucket
+    for f in futs:
+        assert bool(f.result().info.converged)
+
+
+def test_padding_and_fixed_compiled_shapes():
+    """3 requests pad to capacity 4; repeat traffic reuses the program."""
+    rng = np.random.default_rng(1)
+    svc = SolveService(cache=None)
+    d = 6
+    for _ in range(3):
+        futs = [svc.submit(_spd(rng, d), rng.standard_normal(d),
+                           positive_definite=True) for _ in range(3)]
+        svc.flush()
+        for f in futs:
+            assert f.result().bucket_capacity == 4
+    assert svc.metrics["padded"] == 3 * 1
+    assert svc.metrics["compiled"] == 1            # ONE program for all rounds
+    assert svc.occupancy == pytest.approx(0.75)
+
+
+def test_oversized_bucket_splits_into_chunks():
+    rng = np.random.default_rng(2)
+    svc = SolveService(max_batch=4, cache=None)
+    futs = [svc.submit(_spd(rng, 5), rng.standard_normal(5),
+                       positive_definite=True) for _ in range(10)]
+    assert svc.flush() == 10
+    assert svc.metrics["dispatches"] == 3          # 4 + 4 + 2
+    assert svc.metrics["compiled"] == 2            # cap=4 and cap=2 programs
+    assert all(bool(f.result().info.converged) for f in futs)
+
+
+# -- per-request diagnostics -------------------------------------------------
+
+def test_solveinfo_parity_with_solo_route_solve():
+    """A bucketed request's SolveInfo slice matches its solo solve."""
+    rng = np.random.default_rng(3)
+    d = 12
+    systems = [(_spd(rng, d), rng.standard_normal(d)) for _ in range(5)]
+    svc = SolveService(cache=None, solve="dense_gmres")
+    futs = [svc.submit(A, b, positive_definite=True) for A, b in systems]
+    svc.flush()
+    for (A, b), fut in zip(systems, futs):
+        r = fut.result()
+        op = DenseOperator(jnp.asarray(A), symmetric=True,
+                           positive_definite=True)
+        x_solo, info = ls.route_solve("dense_gmres", op, jnp.asarray(b),
+                                      return_info=True)
+        np.testing.assert_allclose(np.asarray(r.x), np.asarray(x_solo),
+                                   atol=1e-4)
+        assert int(r.info.iterations) == int(np.asarray(info.iterations))
+        assert bool(r.info.converged)
+        assert r.queue_time >= 0.0 and r.solve_time > 0.0
+
+
+def test_hypergrad_request_matches_root_vjp():
+    def F(x, theta):
+        return x * (1.0 + theta) - jnp.arange(1.0, 7.0)
+
+    theta = jnp.asarray(0.3)
+    x_star = jnp.arange(1.0, 7.0) / 1.3
+    ct = jnp.asarray(np.random.default_rng(4).standard_normal(6))
+    svc = SolveService()
+    fut = svc.submit_hypergrad(F, x_star, (theta,), ct, solve="cg")
+    svc.flush()
+    (got,) = fut.result().x
+    (want,) = root_vjp(F, x_star, (theta,), ct, solve="cg")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+def test_spec_routing_overrides_and_rejections():
+    svc = SolveService(cache=None)
+    spec = ImplicitDiffSpec(solve="cg", tol=1e-9)
+    fut = svc.submit(3.0 * np.eye(4), np.ones(4), positive_definite=True,
+                     spec=spec, maxiter=77)
+    svc.flush()
+    key = fut.result()
+    assert key.info is not None
+    (bkey, _cap), = svc._compiled.keys()
+    assert (bkey.solver, bkey.tol, bkey.maxiter) == ("cg", 1e-9, 77)
+    with pytest.raises(ValueError, match="custom"):
+        svc.submit(np.eye(3), np.ones(3), solve=lambda mv, b: b)
+    with pytest.raises(ValueError, match="precond"):
+        svc.submit(np.eye(3), np.ones(3), precond=lambda v: v)
+    with pytest.raises(ValueError, match="MAX_DENSE_DIM"):
+        svc.submit(np.eye(600), np.ones(600))
+
+
+# -- warm-start cache --------------------------------------------------------
+
+def test_warm_start_hits_and_counters():
+    rng = np.random.default_rng(5)
+    A, b = _spd(rng, 8), rng.standard_normal(8)
+    svc = SolveService()
+    cold = svc.submit(A, b, positive_definite=True)
+    svc.flush()
+    warm = svc.submit(A, b, positive_definite=True)
+    svc.flush()
+    assert not cold.result().warm_start and warm.result().warm_start
+    assert int(warm.result().info.iterations) == 0     # exact repeat
+    assert (svc.cache.hits, svc.cache.misses) == (1, 1)
+    assert svc.hit_rate == 0.5
+    # nearby problem (drift below qtol) also hits
+    near = svc.submit(A * (1 + 1e-9), b, positive_definite=True)
+    svc.flush()
+    assert near.result().warm_start
+
+
+def test_cache_eviction_under_capacity_pressure():
+    rng = np.random.default_rng(6)
+    cache = WarmStartCache(capacity=4)
+    svc = SolveService(cache=cache)
+    systems = [(_spd(rng, 6), rng.standard_normal(6)) for _ in range(8)]
+    for A, b in systems:
+        svc.submit(A, b, positive_definite=True)
+    svc.flush()
+    assert len(cache) == 4                      # LRU kept the newest 4
+    assert cache.evictions == 4
+    # the evicted half misses again; the resident half hits
+    futs = [svc.submit(A, b, positive_definite=True) for A, b in systems]
+    svc.flush()
+    warm_flags = [f.result().warm_start for f in futs]
+    assert warm_flags[4:] == [True] * 4
+    assert warm_flags[:4] == [False] * 4
+    assert svc.metrics["cache_evictions"] == cache.evictions
+
+
+def test_cache_respects_bucket_key():
+    """Identical numbers under different routing never share warm starts."""
+    cache = WarmStartCache()
+    k1 = BucketKey(4, "cg", None, True, True, "float32", 1e-6, 100, 0.0)
+    k2 = k1._replace(solver="dense_gmres")
+    A, b = np.eye(4), np.ones(4)
+    assert cache.fingerprint(A, b, k1) != cache.fingerprint(A, b, k2)
+
+
+def test_warm_start_disabled_per_request_and_per_service():
+    A, b = 2.0 * np.eye(4), np.ones(4)
+    svc = SolveService()
+    svc.submit(A, b, positive_definite=True); svc.flush()
+    f = svc.submit(A, b, positive_definite=True, warm_start=False)
+    svc.flush()
+    assert not f.result().warm_start
+    svc_off = SolveService(cache=None)
+    g = svc_off.submit(A, b, positive_definite=True)
+    svc_off.flush()
+    assert not g.result().warm_start and svc_off.hit_rate == 0.0
+
+
+# -- concurrency -------------------------------------------------------------
+
+def test_background_scheduler_thread():
+    rng = np.random.default_rng(7)
+    svc = SolveService()
+    svc.start(interval=0.001)
+    try:
+        futs = [svc.submit(_spd(rng, 8), rng.standard_normal(8),
+                           positive_definite=True) for _ in range(12)]
+        results = [f.result(timeout=30.0) for f in futs]
+    finally:
+        svc.stop()
+    assert all(bool(r.info.converged) for r in results)
+    assert svc.metrics["requests"] == 12
+
+
+def test_concurrent_submitters():
+    rng = np.random.default_rng(8)
+    svc = SolveService(cache=None)
+    out = []
+
+    def client(seed):
+        r = np.random.default_rng(seed)
+        f = svc.submit(_spd(r, 8), r.standard_normal(8),
+                       positive_definite=True)
+        out.append(f)
+
+    threads = [threading.Thread(target=client, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert svc.flush() == 8
+    assert all(bool(f.result().info.converged) for f in out)
