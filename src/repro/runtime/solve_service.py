@@ -59,6 +59,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import hashlib
+import itertools
 import threading
 import time
 from concurrent.futures import Future
@@ -72,6 +73,10 @@ from jax.flatten_util import ravel_pytree
 from repro.core import linear_solve as ls
 from repro.core import operators as ops
 from repro.core.linear_solve import MAX_DENSE_DIM, SolveInfo
+
+# "argument not given" marker, distinct from None: an explicit ``None`` is a
+# real override (e.g. ``precond=None`` clears a spec's preconditioner).
+_UNSET = object()
 
 
 class BucketKey(NamedTuple):
@@ -161,7 +166,9 @@ class WarmStartCache:
     still iterates to ``tol``).
 
     ``hits`` / ``misses`` / ``evictions`` counters and ``hit_rate`` are
-    read by the service metrics.
+    read by the service metrics.  All operations are thread-safe: the
+    cache is shared between submitter threads (lookups at admission) and
+    the scheduler thread (inserts at dispatch).
     """
 
     def __init__(self, capacity: int = 256, qtol: float = 1e-3,
@@ -171,6 +178,7 @@ class WarmStartCache:
         self.capacity = int(capacity)
         self.qtol = float(qtol)
         self._seed = int(seed)
+        self._mutex = threading.Lock()
         self._store: "collections.OrderedDict[str, np.ndarray]" = \
             collections.OrderedDict()
         self._probes: dict = {}
@@ -180,13 +188,14 @@ class WarmStartCache:
 
     def _probe(self, d: int) -> np.ndarray:
         """The fixed unit probe vector for dimension ``d`` (built once)."""
-        p = self._probes.get(d)
-        if p is None:
-            rng = np.random.default_rng(self._seed + d)
-            p = rng.standard_normal(d)
-            p /= np.linalg.norm(p)
-            self._probes[d] = p
-        return p
+        with self._mutex:
+            p = self._probes.get(d)
+            if p is None:
+                rng = np.random.default_rng(self._seed + d)
+                p = rng.standard_normal(d)
+                p /= np.linalg.norm(p)
+                self._probes[d] = p
+            return p
 
     def fingerprint(self, A, b, key: BucketKey) -> str:
         """Hash a problem to its cache key.
@@ -211,25 +220,28 @@ class WarmStartCache:
 
     def get(self, fingerprint: str) -> Optional[np.ndarray]:
         """Look up a warm start; counts a hit or a miss and refreshes LRU."""
-        x = self._store.get(fingerprint)
-        if x is None:
-            self.misses += 1
-            return None
-        self.hits += 1
-        self._store.move_to_end(fingerprint)
-        return x
+        with self._mutex:
+            x = self._store.get(fingerprint)
+            if x is None:
+                self.misses += 1
+                return None
+            self.hits += 1
+            self._store.move_to_end(fingerprint)
+            return x
 
     def put(self, fingerprint: str, x) -> None:
         """Insert/refresh a solution; evicts the LRU entry over capacity."""
-        self._store[fingerprint] = np.asarray(x)
-        self._store.move_to_end(fingerprint)
-        while len(self._store) > self.capacity:
-            self._store.popitem(last=False)
-            self.evictions += 1
+        with self._mutex:
+            self._store[fingerprint] = np.asarray(x)
+            self._store.move_to_end(fingerprint)
+            while len(self._store) > self.capacity:
+                self._store.popitem(last=False)
+                self.evictions += 1
 
     def __len__(self) -> int:
         """Number of cached solutions currently resident."""
-        return len(self._store)
+        with self._mutex:
+            return len(self._store)
 
     @property
     def hit_rate(self) -> float:
@@ -285,7 +297,8 @@ class SolveService:
             collections.deque()
         self._compiled: dict = {}          # (BucketKey, cap) -> jitted fn
         self._lock = threading.Lock()
-        self._uid = 0
+        self._uid = itertools.count()      # atomic next(): uids never collide
+        self._inflight = 0                 # requests popped but not resolved
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
         self.metrics = {
@@ -303,6 +316,9 @@ class SolveService:
         Precedence (lowest to highest): service defaults < ``spec``
         (an ``ImplicitDiffSpec`` — its ``solve``/``tol``/``maxiter``/
         ``ridge``/``precond`` routing fields) < explicit keyword overrides.
+        Omitted keywords arrive as ``_UNSET``, so an explicit ``None`` is a
+        real override — ``precond=None`` clears a spec's preconditioner
+        rather than silently deferring to it.
         """
         r = dict(self.defaults)
         if spec is not None:
@@ -310,7 +326,7 @@ class SolveService:
         for name, val in (("solve", solve), ("tol", tol),
                           ("maxiter", maxiter), ("ridge", ridge),
                           ("precond", precond)):
-            if val is not None:
+            if val is not _UNSET:
                 r[name] = val
         if callable(r["solve"]):
             raise ValueError(
@@ -322,6 +338,11 @@ class SolveService:
                 "the solve service buckets by preconditioner kind; pass "
                 "precond=None/'jacobi'/'block_jacobi' (a callable M⁻¹ is "
                 "request-specific and cannot key a shared bucket)")
+        # normalize the numeric controls now so a bad override (e.g. an
+        # explicit tol=None) fails in submit(), not at dispatch
+        r["tol"] = float(r["tol"])
+        r["maxiter"] = int(r["maxiter"])
+        r["ridge"] = float(r["ridge"])
         return r
 
     def _admit_operator(self, A, b, symmetric, positive_definite):
@@ -410,6 +431,19 @@ class SolveService:
         solver = r["solve"]
         if solver == "auto":
             solver = self._resolve_solver(pd, r["precond"])
+        # admission-time mirror of linear_solve._check_operator_routing:
+        # an unknown solver name or a symmetric-only solver paired with a
+        # declared-nonsymmetric operator must fail HERE, in the caller's
+        # submit(), not inside a batched dispatch where the whole bucket
+        # (and, in background mode, the scheduler thread) would pay for it
+        solver_spec = ls.get_spec(solver)
+        if solver_spec.symmetric_only and sym is False:
+            raise ValueError(
+                f"requested solver {solver!r} is symmetric-only, but this "
+                f"request's operator declares symmetric={sym} "
+                f"(positive_definite={pd}) — route a general solver "
+                "(gmres/bicgstab/normal_cg/dense_gmres) instead, or fix "
+                "the declared flags if the operator really is symmetric")
         dtype = jax.dtypes.canonicalize_dtype(
             np.result_type(A_dense.dtype, b_flat.dtype))
         key = BucketKey(d=d, solver=solver, precond=r["precond"],
@@ -422,16 +456,14 @@ class SolveService:
             init = self.cache.get(fingerprint)
             if init is not None and solver == "pallas_cg":
                 init = None     # pallas_cg always starts from zero
-        pending = _PendingRequest(uid=self._uid, key=key, A=A_dense,
-                                  b=b_flat, unravel=unravel, future=Future(),
-                                  fingerprint=fingerprint, init=init,
-                                  finish=None)
-        self._uid += 1
-        return pending
+        return _PendingRequest(uid=next(self._uid), key=key, A=A_dense,
+                               b=b_flat, unravel=unravel, future=Future(),
+                               fingerprint=fingerprint, init=init,
+                               finish=None)
 
     def submit(self, A, b, *, symmetric: Optional[bool] = None,
-               positive_definite: bool = False, spec=None, solve=None,
-               tol=None, maxiter=None, ridge=None, precond=None,
+               positive_definite: bool = False, spec=None, solve=_UNSET,
+               tol=_UNSET, maxiter=_UNSET, ridge=_UNSET, precond=_UNSET,
                warm_start: bool = True) -> Future:
         """Enqueue one linear solve ``A x = b``; returns a ``Future``.
 
@@ -440,16 +472,20 @@ class SolveService:
         it), or a matvec callable; ``b`` any pytree raveling to ``d ≤ 512``.
         Routing defaults come from the service; a routing-only
         ``ImplicitDiffSpec`` (``spec=``) or explicit keywords override them
-        per request.  The future resolves to a ``ServiceResult`` at the
-        flush that dispatches this request's bucket.
+        per request (an explicit ``precond=None`` clears a spec's
+        preconditioner — omitted keywords defer, ``None`` overrides).
+        Bad routing — an unknown solver name, a symmetric-only solver on a
+        declared-nonsymmetric operator — raises here, never at dispatch.
+        The future resolves to a ``ServiceResult`` at the flush that
+        dispatches this request's bucket.
         """
         return self._enqueue(self._build_request(
             A, b, symmetric, positive_definite, spec, solve, tol, maxiter,
             ridge, precond, warm_start))
 
     def submit_hypergrad(self, optimality_fun, x_star, theta, cotangent, *,
-                         spec=None, solve=None, tol=None, maxiter=None,
-                         ridge=None, precond=None,
+                         spec=None, solve=_UNSET, tol=_UNSET, maxiter=_UNSET,
+                         ridge=_UNSET, precond=_UNSET,
                          warm_start: bool = True) -> Future:
         """Enqueue one implicit hypergradient: resolves to ``vᵀ ∂x*(θ)``.
 
@@ -505,7 +541,8 @@ class SolveService:
         buckets never carry warm starts, so the init argument is dropped
         for them (the kernel always starts from zero).
         """
-        fn = self._compiled.get((key, cap))
+        with self._lock:
+            fn = self._compiled.get((key, cap))
         if fn is not None:
             return fn
         takes_init = key.solver != "pallas_cg"
@@ -519,8 +556,11 @@ class SolveService:
                 init=init_stack if takes_init else None, return_info=True)
 
         fn = jax.jit(dispatch)
-        self._compiled[(key, cap)] = fn
-        self.metrics["compiled"] = len(self._compiled)
+        with self._lock:
+            # concurrent flushers may race to build the same program; keep
+            # the first so compiled-program identity stays stable
+            fn = self._compiled.setdefault((key, cap), fn)
+            self.metrics["compiled"] = len(self._compiled)
         return fn
 
     def _dispatch_bucket(self, key: BucketKey, reqs) -> None:
@@ -548,11 +588,12 @@ class SolveService:
         x = jax.block_until_ready(x)
         solve_t = time.perf_counter() - t0
 
-        self.metrics["dispatches"] += 1
-        self.metrics["instances"] += n
-        self.metrics["padded"] += cap - n
-        self.metrics["occupancy_sum"] += n / cap
-        self.metrics["solve_time_sum"] += solve_t
+        with self._lock:
+            self.metrics["dispatches"] += 1
+            self.metrics["instances"] += n
+            self.metrics["padded"] += cap - n
+            self.metrics["occupancy_sum"] += n / cap
+            self.metrics["solve_time_sum"] += solve_t
 
         x_host = np.asarray(x)
         it = np.asarray(info.iterations).tolist()
@@ -582,11 +623,12 @@ class SolveService:
                     warm_start=req.init is not None))
             except Exception as exc:
                 req.future.set_exception(exc)
-        self.metrics["queue_wait_sum"] += queue_wait
-        if self.cache is not None:
-            self.metrics["cache_hits"] = self.cache.hits
-            self.metrics["cache_misses"] = self.cache.misses
-            self.metrics["cache_evictions"] = self.cache.evictions
+        with self._lock:
+            self.metrics["queue_wait_sum"] += queue_wait
+            if self.cache is not None:
+                self.metrics["cache_hits"] = self.cache.hits
+                self.metrics["cache_misses"] = self.cache.misses
+                self.metrics["cache_evictions"] = self.cache.evictions
 
     def flush(self) -> int:
         """Drain the queue: dispatch every bucket once; returns #requests.
@@ -594,27 +636,51 @@ class SolveService:
         An empty queue is a no-op (returns 0) — flushing never pays a
         dispatch for nothing.  Buckets larger than ``max_batch`` split
         into successive full chunks (slot reuse: same compiled program).
+
+        Dispatch failures are **fault-isolated per bucket chunk**: an
+        exception inside one batched dispatch is delivered to that chunk's
+        futures (``future.result()`` re-raises it) and every other bucket
+        still dispatches — a poisoned bucket can neither strand its own
+        callers nor kill the background scheduler thread.
         """
         with self._lock:
             pending = list(self._queue)
             self._queue.clear()
-        if not pending:
-            return 0
-        buckets: "collections.OrderedDict[BucketKey, list]" = \
-            collections.OrderedDict()
-        for req in pending:
-            buckets.setdefault(req.key, []).append(req)
-        for key, reqs in buckets.items():
-            for lo in range(0, len(reqs), self.max_batch):
-                self._dispatch_bucket(key, reqs[lo:lo + self.max_batch])
+            if not pending:
+                return 0
+            self._inflight += len(pending)
+        try:
+            buckets: "collections.OrderedDict[BucketKey, list]" = \
+                collections.OrderedDict()
+            for req in pending:
+                buckets.setdefault(req.key, []).append(req)
+            for key, reqs in buckets.items():
+                for lo in range(0, len(reqs), self.max_batch):
+                    chunk = reqs[lo:lo + self.max_batch]
+                    try:
+                        self._dispatch_bucket(key, chunk)
+                    except Exception as exc:
+                        for req in chunk:
+                            if not req.future.done():
+                                req.future.set_exception(exc)
+        finally:
+            with self._lock:
+                self._inflight -= len(pending)
         return len(pending)
 
     def drain(self, timeout: float = 30.0) -> None:
-        """Block until the queue is empty (background-thread mode)."""
+        """Block until every admitted request has been *resolved*.
+
+        Waits for the queue to empty AND for in-flight dispatches to
+        complete — the background thread pops the queue before dispatching,
+        so queue emptiness alone would not mean the futures are done.
+        After ``drain()`` returns, every future submitted before the call
+        carries a result or an exception.
+        """
         deadline = time.perf_counter() + timeout
         while time.perf_counter() < deadline:
             with self._lock:
-                if not self._queue:
+                if not self._queue and self._inflight == 0:
                     return
             time.sleep(0.001)
         raise TimeoutError("solve service did not drain in time")

@@ -140,6 +140,31 @@ def test_spec_routing_overrides_and_rejections():
         svc.submit(np.eye(600), np.ones(600))
 
 
+def test_explicit_none_overrides_spec_precond():
+    """precond=None is a real override, not 'defer to the spec'."""
+    svc = SolveService(cache=None)
+    spec = ImplicitDiffSpec(solve="cg", precond="jacobi")
+    svc.submit(3.0 * np.eye(4), np.ones(4), positive_definite=True,
+               spec=spec)
+    svc.submit(3.0 * np.eye(4), np.ones(4), positive_definite=True,
+               spec=spec, precond=None)
+    assert [r.key.precond for r in svc._queue] == ["jacobi", None]
+
+
+def test_bad_routing_fails_fast_at_admission():
+    """Unroutable requests raise in submit(), never inside a dispatch."""
+    svc = SolveService(cache=None)
+    upper = np.triu(np.ones((4, 4)))               # detectably nonsymmetric
+    with pytest.raises(ValueError, match="symmetric-only"):
+        svc.submit(upper, np.ones(4), solve="cg")
+    with pytest.raises(ValueError, match="symmetric-only"):
+        svc.submit(np.eye(4), np.ones(4), symmetric=False,
+                   solve="pallas_cg")
+    with pytest.raises(ValueError, match="unknown linear solver"):
+        svc.submit(np.eye(4), np.ones(4), solve="no_such_solver")
+    assert svc.metrics["requests"] == 0            # nothing was enqueued
+
+
 # -- warm-start cache --------------------------------------------------------
 
 def test_warm_start_hits_and_counters():
@@ -201,6 +226,49 @@ def test_warm_start_disabled_per_request_and_per_service():
     assert not g.result().warm_start and svc_off.hit_rate == 0.0
 
 
+# -- fault isolation ---------------------------------------------------------
+
+@pytest.fixture
+def _boom_solver():
+    """A registered solver that always blows up inside dispatch."""
+    name = "_svc_test_boom"
+
+    def boom(matvec, b, **kwargs):
+        raise RuntimeError("kaboom")
+
+    ls.register_solver(name, boom)
+    try:
+        yield name
+    finally:
+        ls._REGISTRY.pop(name, None)
+
+
+def test_dispatch_failure_is_fault_isolated(_boom_solver):
+    """A poisoned bucket fails its own futures; other buckets still run."""
+    svc = SolveService(cache=None)
+    bad = svc.submit(np.eye(4), np.ones(4), solve=_boom_solver)
+    good = svc.submit(2.0 * np.eye(6), np.ones(6), positive_definite=True)
+    assert svc.flush() == 2                    # flush itself never raises
+    with pytest.raises(RuntimeError, match="kaboom"):
+        bad.result(timeout=5.0)
+    assert bool(good.result(timeout=5.0).info.converged)
+
+
+def test_scheduler_thread_survives_dispatch_failure(_boom_solver):
+    """In start() mode a failing bucket must not kill the scheduler."""
+    svc = SolveService(cache=None)
+    svc.start(interval=0.001)
+    try:
+        bad = svc.submit(np.eye(4), np.ones(4), solve=_boom_solver)
+        with pytest.raises(RuntimeError, match="kaboom"):
+            bad.result(timeout=30.0)
+        good = svc.submit(2.0 * np.eye(4), np.ones(4),
+                          positive_definite=True)
+        assert bool(good.result(timeout=30.0).info.converged)
+    finally:
+        svc.stop()
+
+
 # -- concurrency -------------------------------------------------------------
 
 def test_background_scheduler_thread():
@@ -210,6 +278,8 @@ def test_background_scheduler_thread():
     try:
         futs = [svc.submit(_spd(rng, 8), rng.standard_normal(8),
                            positive_definite=True) for _ in range(12)]
+        svc.drain(timeout=30.0)
+        assert all(f.done() for f in futs)     # drain => futures resolved
         results = [f.result(timeout=30.0) for f in futs]
     finally:
         svc.stop()
@@ -234,4 +304,6 @@ def test_concurrent_submitters():
     for t in threads:
         t.join()
     assert svc.flush() == 8
-    assert all(bool(f.result().info.converged) for f in out)
+    results = [f.result() for f in out]
+    assert all(bool(r.info.converged) for r in results)
+    assert len({r.uid for r in results}) == 8  # uids unique under races
