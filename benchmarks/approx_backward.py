@@ -1,0 +1,129 @@
+"""Error-vs-cost sweep of the approximate backward modes.
+
+The workload: B hypergradients through one implicit solve of ``A x = θ``
+with ``A = I − ρS`` SPD (``‖S‖₂ = 1``, so the Neumann contraction factor
+is exactly ρ and the condition number grows as ``(1+ρ)/(1−ρ)``).  The
+exact baseline runs the converged batched CG backward; each approximate
+mode replaces it with its fixed O(k)-matvec polynomial.  Every timed
+configuration is first VERIFIED against the closed-form polynomial in
+BOTH autodiff directions (``jax.grad`` cotangent solve and ``jax.jvp``
+tangent solve) — a drifted mode raises instead of emitting a row.
+
+Row format::
+
+    approx_backward_<mode>[_k<k>]_rho<rho>_B<B> , us , rho=..,est=..,
+        matvecs=..,speedup=..x,dirs=vjp+jvp
+
+``est`` is the mode's ``hypergrad_error_estimate`` (relative residual of
+the cotangent system, the honesty contract of the approximate modes);
+``speedup`` is exact-backward wall clock over this mode's wall clock for
+the identical batched hypergradient.
+
+Run: PYTHONPATH=src python -m benchmarks.run --only approx
+"""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_fn
+from repro.core import diff_api
+from repro.core.implicit_diff import custom_root
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _spd_system(key, d, rho):
+    """``A = I − ρS`` with S symmetric, ``‖S‖₂ = 1`` (eigs in [1−ρ, 1+ρ])."""
+    S = jax.random.normal(key, (d, d))
+    S = (S + S.T) / 2.0
+    S = S / jnp.linalg.norm(S, 2)
+    return jnp.eye(d) - rho * S
+
+
+def _poly_reference(mode, k, A, v):
+    """Closed-form value of the mode's polynomial apply on vector ``v``."""
+    if mode == "exact":
+        return jnp.linalg.solve(A, v)
+    if mode == "jacobian_free":
+        return v
+    if mode == "one_step":
+        return 2.0 * v - A @ v
+    u = v
+    for _ in range(k):                   # neumann_k: Σ_{j≤k} (I−A)^j v
+        u = u + (v - A @ u)
+    return u
+
+
+def _bench_point(emit_fn, rho, ks, B=64, d=128, seed=0):
+    key = jax.random.PRNGKey(seed)
+    A = _spd_system(key, d, rho)
+    Ainv = jnp.linalg.inv(A)
+    c = jax.random.normal(jax.random.fold_in(key, 1), (d,))
+    thetas = jax.random.normal(jax.random.fold_in(key, 2), (B, d))
+    tangent = jax.random.normal(jax.random.fold_in(key, 3), (d,))
+
+    def F(x, theta):
+        return theta - A @ x
+
+    modes = [("exact", 0), ("one_step", 1), ("jacobian_free", 0)]
+    modes += [("neumann_k", k) for k in ks]
+
+    times = {}
+    for mode, k in modes:
+        solver = custom_root(F, solve="cg", tol=1e-8, maxiter=4 * d,
+                             backward=mode, backward_iters=max(k, 1))(
+            lambda init, t: Ainv @ t)
+
+        def loss(t):
+            return c @ solver(jnp.zeros(d), t)
+
+        # -- verify BOTH directions against the closed-form polynomial ----
+        g = jax.grad(loss)(thetas[0])
+        g_ref = _poly_reference(mode, k, A, c)      # Aᵀ = A (symmetric)
+        err_vjp = float(jnp.max(jnp.abs(g - g_ref)))
+        _, dx = jax.jvp(lambda t: solver(jnp.zeros(d), t),
+                        (thetas[0],), (tangent,))
+        dx_ref = _poly_reference(mode, k, A, tangent)
+        err_jvp = float(jnp.max(jnp.abs(dx - dx_ref)))
+        tol = 1e-5 if mode == "exact" else 1e-9
+        if err_vjp > tol or err_jvp > tol:
+            raise RuntimeError(
+                f"approx_backward {mode} k={k} rho={rho}: drifted from the "
+                f"closed-form polynomial (vjp {err_vjp:.2e}, "
+                f"jvp {err_jvp:.2e})")
+
+        hyper = jax.jit(jax.vmap(jax.grad(loss)))
+        t = time_fn(lambda: hyper(thetas), iters=5)
+        times[(mode, k)] = t
+
+        if mode == "exact":
+            derived = f"rho={rho},dirs=vjp+jvp"
+            name = f"approx_backward_exact_rho{rho}_B{B}"
+        else:
+            _, info = diff_api.root_vjp(
+                F, Ainv @ thetas[0], (thetas[0],), c, backward=mode,
+                backward_iters=max(k, 1), error_estimate=True,
+                return_info=True)
+            est = float(info.hypergrad_error_estimate)
+            speed = times[("exact", 0)] / t
+            nmv = int(info.iterations)
+            derived = (f"rho={rho},est={est:.2e},matvecs={nmv},"
+                       f"speedup={speed:.1f}x,dirs=vjp+jvp")
+            suffix = f"_k{k}" if mode == "neumann_k" else ""
+            name = f"approx_backward_{mode}{suffix}_rho{rho}_B{B}"
+        emit_fn(name, t, derived)
+    return times
+
+
+def run(emit_fn, smoke: bool = False):
+    """Sweep modes x Neumann depth x conditioning; emit error-vs-cost rows."""
+    if smoke:
+        sweep, ks, B = (0.09, 0.9), (2, 8), 64
+    else:
+        sweep, ks, B = (0.09, 0.5, 0.9), (2, 4, 8), 64
+    for rho in sweep:
+        _bench_point(emit_fn, rho, ks, B=B)
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    run(emit, smoke=True)

@@ -1,5 +1,6 @@
 """Shared benchmark utilities."""
 import json
+import re
 import time
 
 import jax
@@ -38,3 +39,26 @@ def time_fn(fn, *args, warmup: int = 1, iters: int = 5):
 
 def emit(name: str, seconds: float, derived: str = ""):
     print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+
+
+def summarize_speedups(rows):
+    """Aggregate ``speedup=<x>x`` derived tags across report rows.
+
+    Interpret-mode Pallas rows (``derived`` tagged ``interpret-mode``) are
+    excluded: the CPU Pallas interpreter is a correctness vehicle and its
+    timings would poison any speedup statistic.  Returns ``None`` when no
+    row carries a speedup tag.
+    """
+    speedups = {}
+    for row in rows:
+        derived = row.get("derived", "")
+        if "interpret-mode" in derived:
+            continue
+        m = re.search(r"speedup=([0-9.]+)x", derived)
+        if m:
+            speedups[row["name"]] = float(m.group(1))
+    if not speedups:
+        return None
+    vals = sorted(speedups.values())
+    return {"count": len(vals), "min": vals[0], "max": vals[-1],
+            "median": float(np.median(vals)), "rows": speedups}

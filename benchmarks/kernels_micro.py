@@ -19,7 +19,8 @@ def run(emit_fn=emit):
                           jnp.float32)
     t = time_fn(lambda: flash_attention(q, k, v, interpret=True), iters=2)
     t_ref = time_fn(jax.jit(attention_ref), q, k, v, iters=3)
-    emit_fn("kernel_flash_attention_interp", t, f"jnp_ref={t_ref*1e6:.1f}us")
+    emit_fn("kernel_flash_attention_interp", t,
+            f"interpret-mode,jnp_ref={t_ref*1e6:.1f}us")
 
     from repro.kernels.rwkv_wkv.ops import wkv
     N = 64
@@ -29,12 +30,12 @@ def run(emit_fn=emit):
     w = jnp.full((1, 128, 2, N), 0.9)
     u = jnp.zeros((2, N))
     t = time_fn(lambda: wkv(r, kk, vv, w, u, interpret=True)[0], iters=2)
-    emit_fn("kernel_rwkv_wkv_interp", t, "")
+    emit_fn("kernel_rwkv_wkv_interp", t, "interpret-mode")
 
     from repro.kernels.simplex_proj.ops import projection_simplex_batched
     Y = jax.random.normal(key, (64, 128))
     t = time_fn(lambda: projection_simplex_batched(Y, 1.0, True), iters=2)
-    emit_fn("kernel_simplex_proj_interp", t, "")
+    emit_fn("kernel_simplex_proj_interp", t, "interpret-mode")
 
     from repro.kernels.batched_cg.kernel import batched_cg_pallas
     from repro.kernels.batched_cg.ref import batched_cg_ref
@@ -46,7 +47,8 @@ def run(emit_fn=emit):
                                           interpret=True), iters=2)
     t_ref = time_fn(lambda: batched_cg_ref(A, rhs, tol=1e-6, maxiter=d),
                     iters=3)
-    emit_fn("kernel_batched_cg_interp", t, f"jnp_ref={t_ref*1e6:.1f}us")
+    emit_fn("kernel_batched_cg_interp", t,
+            f"interpret-mode,jnp_ref={t_ref*1e6:.1f}us")
 
 
 if __name__ == "__main__":

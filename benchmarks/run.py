@@ -17,11 +17,16 @@ Prints ``name,us_per_call,derived`` CSV rows.
           for the full curve — the CI multi-device lane does)
   service solve-service scheduler: batched-bucket vs per-request dispatch
           at 64 concurrent requests, warm vs cold cache
+  approx  approximate backward modes (one_step / neumann_k / jacobian_free)
+          error-vs-cost sweep against the exact converged backward
   roofline per-(arch x shape) terms from the dry-run artifacts
 
 ``--smoke`` runs a fast CI subset (kernels + batched + bilevel + fwdrev +
-oproute + sharded + service) and writes the rows to ``BENCH_smoke.json`` (override
-with ``--out``) for artifact upload.
+oproute + sharded + service + approx) and writes the rows to
+``BENCH_smoke.json`` (override with ``--out``) for artifact upload.  The
+report's ``speedup_summary`` aggregates every ``speedup=..x`` derived tag,
+excluding interpret-mode Pallas rows (CPU interpreter timings are
+correctness-scale, not perf-scale).
 """
 import argparse
 import sys
@@ -29,10 +34,10 @@ import traceback
 
 
 SMOKE_BENCHES = ["kernels", "batched", "bilevel", "fwdrev", "oproute",
-                 "sharded", "service"]
+                 "sharded", "service", "approx"]
 # accept run(emit, smoke=True)
 SMOKE_KWARG_BENCHES = {"batched", "bilevel", "fwdrev", "oproute", "sharded",
-                       "service"}
+                       "service", "approx"}
 
 
 def main() -> None:
@@ -45,13 +50,13 @@ def main() -> None:
                     help="JSON report path (with --smoke)")
     args = ap.parse_args()
 
-    from benchmarks import (batched_solve, bilevel_hypergrad,
+    from benchmarks import (approx_backward, batched_solve, bilevel_hypergrad,
                             dictionary_learning, distillation,
                             fwd_vs_rev_hypergrad, jacobian_precision,
                             kernels_micro, molecular_dynamics,
                             operator_routing, roofline_report,
                             sharded_solve, solve_service, svm_hyperopt)
-    from benchmarks.common import Collector, emit
+    from benchmarks.common import Collector, emit, summarize_speedups
     all_benches = {
         "fig3": jacobian_precision.run,
         "fig4": svm_hyperopt.run,
@@ -65,6 +70,7 @@ def main() -> None:
         "oproute": operator_routing.run,
         "sharded": sharded_solve.run,
         "service": solve_service.run,
+        "approx": approx_backward.run,
         "roofline": roofline_report.run,
     }
     if args.only:
@@ -90,7 +96,9 @@ def main() -> None:
     if args.smoke:
         import jax
         path = emit_fn.write_json(args.out, backend=jax.default_backend(),
-                                  failed=failed)
+                                  failed=failed,
+                                  speedup_summary=summarize_speedups(
+                                      emit_fn.rows))
         print(f"wrote {path}", file=sys.stderr)
     if failed:
         sys.exit(1)

@@ -44,7 +44,8 @@ class BilevelSolution:
 
 
 def _make_inner_runner(inner_solver, inner_objective, fixed_point, solve,
-                       tol, maxiter, ridge, precond, diff_spec=None,
+                       tol, maxiter, ridge, precond, backward=None,
+                       backward_iters=None, diff_spec=None,
                        mode=None) -> Callable:
     """``fn(init, theta) -> (x_star, OptInfo | None)``, implicit-diff'd.
 
@@ -64,12 +65,13 @@ def _make_inner_runner(inner_solver, inner_objective, fixed_point, solve,
     own setting, ``"auto"`` for bare callables).
     """
     loose = dict(solve=solve, tol=tol, maxiter=maxiter, ridge=ridge,
-                 precond=precond)
+                 precond=precond, backward=backward,
+                 backward_iters=backward_iters)
     if diff_spec is not None:
         if any(v is not None for v in loose.values()):
             raise ValueError("pass the backward-solve routing either via "
                              "diff_spec or via the loose solve/tol/maxiter/"
-                             "ridge/precond arguments, not both")
+                             "ridge/precond/backward arguments, not both")
         if not diff_spec.is_routing_only and (
                 inner_objective is not None or fixed_point is not None):
             raise ValueError("diff_spec already carries the optimality "
@@ -83,13 +85,18 @@ def _make_inner_runner(inner_solver, inner_objective, fixed_point, solve,
         if diff_spec is not None:
             overrides = dict(solve=diff_spec.solve, linsolve_tol=diff_spec.tol,
                              linsolve_maxiter=diff_spec.maxiter,
-                             ridge=diff_spec.ridge, precond=diff_spec.precond)
+                             ridge=diff_spec.ridge, precond=diff_spec.precond,
+                             backward=diff_spec.backward,
+                             backward_iters=diff_spec.backward_iters,
+                             error_estimate=diff_spec.error_estimate)
         else:
             overrides = {k: v for k, v in [("solve", solve),
                                            ("linsolve_tol", tol),
                                            ("linsolve_maxiter", maxiter),
                                            ("ridge", ridge),
-                                           ("precond", precond)]
+                                           ("precond", precond),
+                                           ("backward", backward),
+                                           ("backward_iters", backward_iters)]
                          if v is not None}
         if mode is not None:
             overrides["mode"] = mode
@@ -101,7 +108,14 @@ def _make_inner_runner(inner_solver, inner_objective, fixed_point, solve,
             deco = diff_api.implicit_diff(diff_spec.replace(has_aux=True),
                                           mode=solver.mode)
             return lambda init, *theta: deco(solver._iterate)(init, *theta)
-        return solver.run
+
+        def runner(init, *theta):
+            return solver.run(init, *theta)
+
+        # exposed so drivers can replay the configured backward treatment
+        # (solve_bilevel's hypergrad_error_estimate accounting)
+        runner.solver = solver
+        return runner
 
     mode = "auto" if mode is None else mode
     if diff_spec is not None:
@@ -124,17 +138,21 @@ def _make_inner_runner(inner_solver, inner_objective, fixed_point, solve,
     tol = 1e-6 if tol is None else tol
     maxiter = 1000 if maxiter is None else maxiter
     ridge = 0.0 if ridge is None else ridge
+    backward = "exact" if backward is None else backward
+    backward_iters = 8 if backward_iters is None else backward_iters
     if (inner_objective is None) == (fixed_point is None):
         raise ValueError("provide exactly one of inner_objective/fixed_point")
     if inner_objective is not None:
         spec = ImplicitDiffSpec(
             optimality_fun=optimality.stationary(inner_objective),
             solve=solve, tol=tol, maxiter=maxiter, ridge=ridge,
-            precond=precond)
+            precond=precond, backward=backward,
+            backward_iters=backward_iters)
     else:
         spec = ImplicitDiffSpec(fixed_point_fun=fixed_point, solve=solve,
                                 tol=tol, maxiter=maxiter, ridge=ridge,
-                                precond=precond)
+                                precond=precond, backward=backward,
+                                backward_iters=backward_iters)
     wrapped = diff_api.implicit_diff(spec, mode=mode)(inner_solver)
     return lambda init, *theta: (wrapped(init, *theta), None)
 
@@ -147,6 +165,8 @@ def make_implicit_inner(inner_solver: Union[Callable, IterativeSolver],
                         maxiter: Optional[int] = None,
                         ridge: Optional[float] = None,
                         precond=None,
+                        backward: Optional[str] = None,
+                        backward_iters: Optional[int] = None,
                         diff_spec: Optional[ImplicitDiffSpec] = None,
                         mode: Optional[str] = None) -> Callable:
     """Return ``fn(init, theta) -> x_star`` with implicit derivatives.
@@ -158,6 +178,10 @@ def make_implicit_inner(inner_solver: Union[Callable, IterativeSolver],
     used) or an explicit ``fixed_point`` mapping T(x, theta); unspecified
     routing arguments default to cg / 1e-6 / 1000 / 0.0.
 
+    ``backward``/``backward_iters`` swap the converged backward solve for
+    an approximate mode (``"one_step"``/``"neumann_k"``/``"jacobian_free"``
+    — O(1)–O(k) matvecs per hypergradient; see ``docs/implicit_diff.md``).
+
     ``diff_spec`` bundles the same configuration as one
     ``ImplicitDiffSpec`` (mapping + routing; a routing-only spec keeps an
     ``IterativeSolver``'s own mapping but replaces its routing WHOLESALE —
@@ -168,6 +192,8 @@ def make_implicit_inner(inner_solver: Union[Callable, IterativeSolver],
     """
     runner = _make_inner_runner(inner_solver, inner_objective, fixed_point,
                                 solve, tol, maxiter, ridge, precond,
+                                backward=backward,
+                                backward_iters=backward_iters,
                                 diff_spec=diff_spec, mode=mode)
     return lambda init, *theta: runner(init, *theta)[0]
 
@@ -181,6 +207,8 @@ def solve_bilevel(outer_loss: Callable,
                   inner_tol: Optional[float] = None,
                   linsolve_maxiter: Optional[int] = None,
                   ridge: Optional[float] = None, precond=None,
+                  backward: Optional[str] = None,
+                  backward_iters: Optional[int] = None,
                   diff_spec: Optional[ImplicitDiffSpec] = None,
                   mode: Optional[str] = None,
                   warm_start: bool = True,
@@ -203,10 +231,18 @@ def solve_bilevel(outer_loss: Callable,
     one; ``theta`` may be any pytree either way.
     ``warm_start`` reuses the previous inner solution as init (the standard
     trick that makes the inner solves cheap along the outer trajectory).
+
+    ``backward``/``backward_iters`` select an approximate hypergradient
+    (see ``make_implicit_inner``).  With an ``IterativeSolver`` inner
+    solver running an approximate mode (and ``error_estimate=True``, the
+    default), each step's ``inner_info.hypergrad_error_estimate`` reports
+    the relative residual of the cotangent system at the outer loss's
+    cotangent — the error-vs-cost accounting of the cheap modes.
     """
     implicit_solver = _make_inner_runner(
         inner_solver, inner_objective, fixed_point, solve, inner_tol,
-        linsolve_maxiter, ridge, precond, diff_spec=diff_spec, mode=mode)
+        linsolve_maxiter, ridge, precond, backward=backward,
+        backward_iters=backward_iters, diff_spec=diff_spec, mode=mode)
 
     def outer_value_and_grad(theta, x_init):
         def obj(theta):
@@ -219,6 +255,17 @@ def solve_bilevel(outer_loss: Callable,
     if jit:
         outer_value_and_grad = jax.jit(outer_value_and_grad)
 
+    est_solver = getattr(implicit_solver, "solver", None)
+    estimate_fn = None
+    if est_solver is not None and est_solver.backward != "exact" \
+            and est_solver.error_estimate:
+        def estimate_fn(x_star, theta):
+            ct = jax.grad(outer_loss, argnums=0)(x_star, theta)
+            return est_solver.estimate_hypergrad_error(x_star, theta,
+                                                       cotangent=ct)
+        if jit:
+            estimate_fn = jax.jit(estimate_fn)
+
     theta = theta0
     vel = jax.tree_util.tree_map(jnp.zeros_like, theta)
     xs = x_init
@@ -226,6 +273,9 @@ def solve_bilevel(outer_loss: Callable,
     x_star, info = x_init, None   # survive outer_steps=0
     for _ in range(outer_steps):
         val, g, x_star, info = outer_value_and_grad(theta, xs)
+        if estimate_fn is not None and info is not None:
+            info = info._replace(
+                hypergrad_error_estimate=estimate_fn(x_star, theta))
         vel = jax.tree_util.tree_map(
             lambda v, gi: momentum * v + gi, vel, g)
         theta = jax.tree_util.tree_map(

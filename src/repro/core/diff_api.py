@@ -129,6 +129,19 @@ class ImplicitDiffSpec:
     Python callables, strings, hashable config.  They are passed through
     untouched and excluded from differentiation.
 
+    ``backward`` selects how the backward linear system is treated in BOTH
+    derivative directions (the tangent solve ``A dx = Bθ̇`` and the
+    cotangent solve ``Aᵀ u = v``): ``"exact"`` (default) iterates the routed
+    solver to convergence; ``"one_step"`` spends one preconditioned
+    application (O(1) matvecs); ``"neumann_k"`` truncates the Neumann series
+    at exactly ``backward_iters`` terms (O(k) matvecs, static trip count);
+    ``"jacobian_free"`` treats ``A ≈ I`` (zero matvecs).  See
+    ``linear_solve.approx_inverse_apply`` for the exact polynomials and
+    ``docs/implicit_diff.md`` for choosing a mode.  ``error_estimate``
+    controls whether info-returning entry points (``root_vjp(...,
+    return_info=True)``, ``IterativeSolver.estimate_hypergrad_error``) spend
+    one extra matvec on the relative-residual honesty check.
+
     ``sharding`` (a ``repro.distributed.sharded_operators.SolveSharding``)
     places the implicit system on a mesh: the ``JacobianOperator`` inherits
     the primal solution's mesh + PartitionSpecs, the classic solver names
@@ -150,6 +163,9 @@ class ImplicitDiffSpec:
     has_aux: bool = False
     nondiff_argnums: Tuple[int, ...] = ()
     sharding: Any = None
+    backward: str = "exact"
+    backward_iters: int = 8
+    error_estimate: bool = True
 
     def __post_init__(self):
         if self.optimality_fun is not None and \
@@ -161,6 +177,12 @@ class ImplicitDiffSpec:
             raise ValueError("nondiff_argnums are 0-based indices into the "
                              f"theta arguments; got {self.nondiff_argnums}")
         object.__setattr__(self, "nondiff_argnums", nd)
+        if self.backward not in ls.BACKWARD_MODES:
+            raise ValueError(f"unknown backward mode {self.backward!r}; "
+                             f"expected one of {ls.BACKWARD_MODES}")
+        if self.backward == "neumann_k" and int(self.backward_iters) < 1:
+            raise ValueError("backward='neumann_k' needs backward_iters >= 1;"
+                             f" got {self.backward_iters}")
 
     @property
     def residual_fun(self) -> Callable:
@@ -192,6 +214,11 @@ class ImplicitDiffSpec:
         """The backward-solve routing as ``route_solve`` keyword arguments."""
         return dict(tol=self.tol, maxiter=self.maxiter, ridge=self.ridge,
                     precond=self.precond)
+
+    def backward_kwargs(self) -> dict:
+        """The approximate-backward selection as keyword arguments."""
+        return dict(backward=self.backward,
+                    backward_iters=self.backward_iters)
 
 
 # ---------------------------------------------------------------------------
@@ -228,9 +255,53 @@ def _implicit_system_operator(F: Callable, x_star, theta_args: tuple,
     return sharding.wrap(jacobian_factory, (x_star, *theta_args))
 
 
+def _check_approx_routing(precond, sharding):
+    """Reject routing combos the approximate backward modes can't honor."""
+    if sharding is not None and isinstance(precond, str):
+        raise ValueError(
+            "approximate backward modes with a sharded system do not "
+            "support named preconditioners (deriving the global diagonal "
+            "outside shard_map would capture replicated state); pass a "
+            "callable M⁻¹ or precond=None")
+
+
+def _backward_apply(A, rhs, *, solve, tol, maxiter, ridge, precond,
+                    backward, backward_iters, batch_ndim: int,
+                    error_estimate: bool, return_info: bool):
+    """Apply the selected backward treatment of ``A`` to ``rhs``.
+
+    ``backward="exact"`` routes the registry solver to convergence; the
+    approximate modes spend their fixed matvec budget via
+    ``approx_inverse_apply``.  With ``return_info=True`` both paths return
+    ``(u, SolveInfo)`` and — when ``error_estimate`` — populate
+    ``hypergrad_error_estimate`` with the relative residual
+    ``‖rhs − A u‖/‖rhs‖`` at one extra matvec (uniformly recomputed even
+    for exact solves: normal_cg's reported residual is the *normal
+    equations'* residual, not the system's).
+    """
+    if backward != "exact":
+        return ls.approx_inverse_apply(
+            A, rhs, backward=backward, backward_iters=backward_iters,
+            ridge=ridge, precond=precond, batch_ndim=batch_ndim, tol=tol,
+            error_estimate=error_estimate, return_info=return_info)
+    if not return_info:
+        return ls.route_solve(solve, A, rhs, tol=tol, maxiter=maxiter,
+                              ridge=ridge, precond=precond)
+    u, info = ls.route_solve(solve, A, rhs, tol=tol, maxiter=maxiter,
+                             ridge=ridge, precond=precond, return_info=True)
+    if error_estimate:
+        mv = ls._damped(A, ridge)
+        rn = ls._tree_l2(ls._tree_sub(rhs, mv(u)), batch_ndim)
+        est = rn / jnp.maximum(ls._tree_l2(rhs, batch_ndim), 1e-30)
+        info = info._replace(hypergrad_error_estimate=est)
+    return u, info
+
+
 def root_vjp(F: Callable, x_star, theta_args: tuple, cotangent,
              solve="normal_cg", tol: float = 1e-6, maxiter: int = 1000,
-             ridge: float = 0.0, precond=None, sharding=None):
+             ridge: float = 0.0, precond=None, sharding=None,
+             backward: str = "exact", backward_iters: int = 8,
+             error_estimate: bool = False, return_info: bool = False):
     """VJP through the implicitly-defined root: returns vᵀ ∂x*(θ) per θ arg.
 
     Solve Aᵀ u = v  (A = -∂₁F),  then  vᵀJ = uᵀB  (B = ∂₂F).
@@ -243,39 +314,63 @@ def root_vjp(F: Callable, x_star, theta_args: tuple, cotangent,
     a ``jax.vmap`` of this function (or of an ``implicit_diff``-wrapped
     gradient) runs ONE batched masked solve for the whole batch, not N
     sequential solves.
+
+    ``backward`` swaps the converged cotangent solve for a fixed-budget
+    approximation (``"one_step"``/``"neumann_k"``/``"jacobian_free"``, see
+    ``linear_solve.approx_inverse_apply``).  ``return_info=True`` returns
+    ``(grads, SolveInfo)``; with ``error_estimate=True`` the info carries
+    ``hypergrad_error_estimate = ‖v − Aᵀu‖/‖v‖`` at one extra matvec.
     """
     # A = -∂₁F(x*, θ) as a first-class operator: matvec is a JVP, rmatvec a
     # VJP, and choosing a symmetric-only solver certifies A = Aᵀ (so A.T is
     # A and the cotangent solve reuses the forward matvec).  ``sharding``
     # places it on a mesh (route_solve then dispatches the shard_map'd
     # solvers — no host gather).
+    if backward != "exact":
+        _check_approx_routing(precond, sharding)
     A = _implicit_system_operator(F, x_star, theta_args, solve, sharding)
-    u = ls.route_solve(solve, A.T, cotangent, tol=tol, maxiter=maxiter,
-                       ridge=ridge, precond=precond)
+    out = _backward_apply(
+        A.T, cotangent, solve=solve, tol=tol, maxiter=maxiter, ridge=ridge,
+        precond=precond, backward=backward, backward_iters=backward_iters,
+        batch_ndim=0 if sharding is None else sharding.batch_ndim,
+        error_estimate=error_estimate, return_info=return_info)
+    u, info = out if return_info else (out, None)
 
     # uᵀ B = uᵀ ∂₂F : one more VJP, wrt the theta args.
     def f_of_theta(*targs):
         return F(x_star, *targs)
 
     _, vjp_theta = jax.vjp(f_of_theta, *theta_args)
-    return vjp_theta(u)
+    return ls._maybe_info(vjp_theta(u), info, return_info)
 
 
 def root_jvp(F: Callable, x_star, theta_args: tuple, tangents: tuple,
              solve="normal_cg", tol: float = 1e-6, maxiter: int = 1000,
-             ridge: float = 0.0, precond=None, sharding=None):
+             ridge: float = 0.0, precond=None, sharding=None,
+             backward: str = "exact", backward_iters: int = 8,
+             error_estimate: bool = False, return_info: bool = False):
     """JVP through the implicitly-defined root: J · v.
 
     Solve A (Jv) = B v  with  Bv = ∂₂F · v  computed by one JVP of F in θ.
     Vmap-safe (see ``root_vjp``): batching dispatches to one masked solve.
+    ``backward``/``backward_iters``/``error_estimate``/``return_info``
+    mirror ``root_vjp`` — the same fixed-budget approximation applied to
+    the tangent system.
     """
+    if backward != "exact":
+        _check_approx_routing(precond, sharding)
+
     def f_of_theta(*targs):
         return F(x_star, *targs)
 
     _, Bv = jax.jvp(f_of_theta, theta_args, tangents)
     A = _implicit_system_operator(F, x_star, theta_args, solve, sharding)
-    return ls.route_solve(solve, A, Bv, tol=tol, maxiter=maxiter,
-                          ridge=ridge, precond=precond)
+    out = _backward_apply(
+        A, Bv, solve=solve, tol=tol, maxiter=maxiter, ridge=ridge,
+        precond=precond, backward=backward, backward_iters=backward_iters,
+        batch_ndim=0 if sharding is None else sharding.batch_ndim,
+        error_estimate=error_estimate, return_info=return_info)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -360,6 +455,28 @@ def _tangent_root_solve(spec: ImplicitDiffSpec, residual: Callable, x_star,
         # resolves the string inside shard_map from its local operator —
         # per-shard probing, correct by construction.
         routing = spec.routing_kwargs()
+        if spec.backward != "exact":
+            # Approximate backward on the mesh: the polynomial apply is
+            # nothing but matvecs of A / Aᵀ — each one a shard_map'd
+            # per-shard JVP with the operator's psum hook, so the Neumann
+            # terms ride the exact path's collectives (no new ones).
+            _check_approx_routing(spec.precond, spec.sharding)
+            approx = dict(spec.backward_kwargs(), ridge=spec.ridge,
+                          precond=spec.precond,
+                          batch_ndim=spec.sharding.batch_ndim)
+            if not transposable:
+                return ls.approx_inverse_apply(A, b, **approx)
+
+            def sharded_approx(_matvec, rhs):
+                return ls.approx_inverse_apply(A, rhs, **approx)
+
+            def sharded_approx_transpose(_vecmat, rhs):
+                return ls.approx_inverse_apply(A.T, rhs, **approx)
+
+            return lax.custom_linear_solve(
+                A.matvec, b, solve=sharded_approx,
+                transpose_solve=sharded_approx_transpose,
+                symmetric=bool(A.symmetric))
         if not transposable:
             return ls.route_solve(spec.solve, A, b, **routing)
 
@@ -379,6 +496,11 @@ def _tangent_root_solve(spec: ImplicitDiffSpec, residual: Callable, x_star,
     # ``_implicit_system_operator``).
     A = _implicit_system_operator(residual, x_star, theta, spec.solve)
 
+    if spec.backward != "exact" and not transposable:
+        return ls.approx_inverse_apply(
+            A, b, ridge=spec.ridge, precond=spec.precond,
+            **spec.backward_kwargs())
+
     if not transposable:
         return ls.route_solve(spec.solve, A, b, **spec.routing_kwargs())
 
@@ -394,17 +516,37 @@ def _tangent_root_solve(spec: ImplicitDiffSpec, residual: Callable, x_star,
         # user preconditioners keep their x-pytree contract
         routing["precond"] = flat.ravel_fn(precond)
     elif precond in ("jacobi", "block_jacobi") and \
-            _routes_matrix_free(spec.solve, A, b, precond):
+            (spec.backward != "exact"
+             or _routes_matrix_free(spec.solve, A, b, precond)):
         # matrix-free route: derive ONCE from the operator's structure
         # (diagonal / leaf blocks) instead of probing inside each
         # direction's template.  Materializing solvers (dense_gmres) keep
         # the string — they read diag/blocks off their own dense matrix
-        # for free, so probing here would be redundant work.
+        # for free, so probing here would be redundant work.  The
+        # approximate modes have no materializing solver in the loop, so
+        # they always take the derive-once path.
         damped = ops.RidgeShifted(A, routing["ridge"]) if routing["ridge"] \
             else A
         make = (ops.jacobi_preconditioner_from if precond == "jacobi"
                 else ops.block_jacobi_preconditioner)
         routing["precond"] = flat.ravel_fn(make(damped))
+
+    if spec.backward != "exact":
+        # Same custom_linear_solve scaffold as the exact route, with the
+        # registry solver swapped for the fixed-budget polynomial apply.
+        # custom_linear_solve swaps solve/transpose_solve when transposed —
+        # the transpose direction's closure computes Aᵀ·, so the SAME
+        # polynomial serves both the tangent and the cotangent system.
+        approx = dict(spec.backward_kwargs(), ridge=routing["ridge"],
+                      precond=routing["precond"])
+
+        def approx_apply(matvec, rhs):
+            return ls.approx_inverse_apply(matvec, rhs, **approx)
+
+        dx_flat = lax.custom_linear_solve(
+            flat.matvec, flat.ravel(b), solve=approx_apply,
+            transpose_solve=approx_apply, symmetric=bool(A.symmetric))
+        return flat.unravel(dx_flat)
 
     def registry_solve(matvec, rhs):
         # custom_linear_solve hands each direction its own matvec closure;
@@ -492,7 +634,8 @@ def _wrap_vjp(spec: ImplicitDiffSpec, solver: Callable):
             return residual(x, *_merge_theta(nondiff_idx, nondiff_vals, dts))
 
         grads = root_vjp(F_diff, x_star, diff_theta, ct, solve=spec.solve,
-                         sharding=spec.sharding, **spec.routing_kwargs())
+                         sharding=spec.sharding, **spec.routing_kwargs(),
+                         **spec.backward_kwargs())
         zero_init = jax.tree_util.tree_map(jnp.zeros_like, init)
         return (zero_init,) + tuple(grads)
 

@@ -19,7 +19,9 @@ forward-only wrappers exist only because ``jax.custom_vjp`` functions
 cannot be forward-differentiated; ``implicit_diff`` (or plain
 ``custom_root``) now subsumes them.  They emit a one-shot
 ``DeprecationWarning`` and gained the ``has_aux`` support they historically
-lacked.
+lacked.  They deliberately REJECT the approximate ``backward=`` modes —
+requesting one on a deprecated path that predates the feature raises
+instead of silently differentiating exactly.
 
 Conventions: the decorated solver has signature ``solver(init, *theta)``
 and returns ``x*``.  ``F`` has signature ``F(x, *theta)`` returning a
@@ -37,15 +39,18 @@ from repro.core.diff_api import (ImplicitDiffSpec, implicit_diff,  # noqa: F401
 
 
 def _spec(F=None, T=None, solve="normal_cg", tol=1e-6, maxiter=1000,
-          ridge=0.0, has_aux=False, precond=None) -> ImplicitDiffSpec:
+          ridge=0.0, has_aux=False, precond=None, backward="exact",
+          backward_iters=8) -> ImplicitDiffSpec:
     return ImplicitDiffSpec(optimality_fun=F, fixed_point_fun=T, solve=solve,
                             tol=tol, maxiter=maxiter, ridge=ridge,
-                            precond=precond, has_aux=has_aux)
+                            precond=precond, has_aux=has_aux,
+                            backward=backward, backward_iters=backward_iters)
 
 
 def custom_root(F: Callable, solve="normal_cg", tol: float = 1e-6,
                 maxiter: int = 1000, ridge: float = 0.0,
-                has_aux: bool = False, precond=None):
+                has_aux: bool = False, precond=None,
+                backward: str = "exact", backward_iters: int = 8):
     """Decorator: attach implicit differentiation to ``solver(init, *theta)``.
 
     Shim over ``implicit_diff``: the returned function is differentiable in
@@ -63,6 +68,11 @@ def custom_root(F: Callable, solve="normal_cg", tol: float = 1e-6,
     sequential solves.  ``precond`` (e.g. ``"jacobi"``) is forwarded to the
     registry solver named by ``solve``.
 
+    ``backward`` selects an approximate treatment of the backward linear
+    system (``"one_step"``/``"neumann_k"``/``"jacobian_free"``, with
+    ``backward_iters`` the Neumann truncation depth) — O(1)–O(k) matvecs
+    instead of a converged solve, in both autodiff modes.
+
     Example (paper Fig. 1)::
 
         F = jax.grad(f)  # stationarity condition
@@ -71,37 +81,56 @@ def custom_root(F: Callable, solve="normal_cg", tol: float = 1e-6,
         def ridge_solver(init_x, theta): ...
     """
     return implicit_diff(_spec(F=F, solve=solve, tol=tol, maxiter=maxiter,
-                               ridge=ridge, has_aux=has_aux,
-                               precond=precond))
+                               ridge=ridge, has_aux=has_aux, precond=precond,
+                               backward=backward,
+                               backward_iters=backward_iters))
 
 
 def custom_fixed_point(T: Callable, solve="normal_cg", tol: float = 1e-6,
                        maxiter: int = 1000, ridge: float = 0.0,
-                       has_aux: bool = False, precond=None):
+                       has_aux: bool = False, precond=None,
+                       backward: str = "exact", backward_iters: int = 8):
     """Decorator for solvers of fixed points x* = T(x*, θ).
 
     Shim over ``implicit_diff`` with the residual F(x, θ) = T(x, θ) − x
-    (eq. 3); both autodiff modes supported, like ``custom_root``.
+    (eq. 3); both autodiff modes supported, like ``custom_root`` —
+    including the approximate ``backward`` modes (for a contractive ``T``,
+    ``backward="neumann_k"`` is the phantom-gradient / truncated-unrolling
+    approximation at O(k) matvecs).
     """
     return implicit_diff(_spec(T=T, solve=solve, tol=tol, maxiter=maxiter,
-                               ridge=ridge, has_aux=has_aux,
-                               precond=precond))
+                               ridge=ridge, has_aux=has_aux, precond=precond,
+                               backward=backward,
+                               backward_iters=backward_iters))
 
 
 # ---------------------------------------------------------------------------
 # DEPRECATED forward-only wrappers (subsumed by implicit_diff / custom_root)
 # ---------------------------------------------------------------------------
 
+def _reject_backward(name: str, backward, backward_iters):
+    """The deprecated shims must not accept approximate-backward requests."""
+    if backward is not None or backward_iters is not None:
+        raise TypeError(
+            f"{name} is a deprecated forward-only shim and does not accept "
+            "backward=/backward_iters=; use custom_root / custom_fixed_point "
+            "/ implicit_diff for approximate backward modes")
+
+
 def custom_root_jvp(F: Callable, solve="normal_cg", tol: float = 1e-6,
                     maxiter: int = 1000, ridge: float = 0.0, precond=None,
-                    has_aux: bool = False):
+                    has_aux: bool = False, backward=None,
+                    backward_iters=None):
     """DEPRECATED: ``custom_root`` (and ``implicit_diff``) now support
     forward mode directly; this separate wrapper is redundant.
 
     Kept as a forward-only shim (``mode="jvp"``) preserving its historical
     contract — a pure ``jax.custom_jvp`` function with no reverse rule —
-    plus the ``has_aux`` support it previously lacked.
+    plus the ``has_aux`` support it previously lacked.  Passing
+    ``backward=``/``backward_iters=`` raises ``TypeError``: use
+    ``custom_root`` for the approximate modes.
     """
+    _reject_backward("custom_root_jvp", backward, backward_iters)
     warn_once("custom_root_jvp",
               "repro.core.implicit_diff.custom_root_jvp is deprecated; "
               "custom_root / implicit_diff now support forward mode "
@@ -113,8 +142,13 @@ def custom_root_jvp(F: Callable, solve="normal_cg", tol: float = 1e-6,
 
 def custom_fixed_point_jvp(T: Callable, solve="normal_cg", tol: float = 1e-6,
                            maxiter: int = 1000, ridge: float = 0.0,
-                           precond=None, has_aux: bool = False):
-    """DEPRECATED: see ``custom_root_jvp``; use ``custom_fixed_point``."""
+                           precond=None, has_aux: bool = False,
+                           backward=None, backward_iters=None):
+    """DEPRECATED: see ``custom_root_jvp``; use ``custom_fixed_point``.
+
+    Passing ``backward=``/``backward_iters=`` raises ``TypeError``.
+    """
+    _reject_backward("custom_fixed_point_jvp", backward, backward_iters)
     warn_once("custom_fixed_point_jvp",
               "repro.core.implicit_diff.custom_fixed_point_jvp is "
               "deprecated; custom_fixed_point / implicit_diff now support "

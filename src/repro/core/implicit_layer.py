@@ -42,6 +42,7 @@ def make_deq_solver(cell: Callable, *, fwd_solver: str = "anderson",
                     fwd_iters: int = 30, fwd_tol: float = 1e-5,
                     bwd_solve: str = "neumann", bwd_iters: int = 12,
                     ridge: float = 0.0, precond=None,
+                    backward: str = "exact", backward_iters: int = 8,
                     diff_spec: Optional[ImplicitDiffSpec] = None,
                     mode: Optional[str] = None):
     """Build the runtime solver for z* = cell(z*, x, w).
@@ -49,8 +50,16 @@ def make_deq_solver(cell: Callable, *, fwd_solver: str = "anderson",
     Returns an ``IterativeSolver`` whose ``run(z0, x, w)`` yields
     ``(z_star, OptInfo)`` with derivatives flowing to ``x`` and ``w`` in
     both autodiff modes.  ``diff_spec`` (routing-only) replaces the loose
-    ``bwd_solve`` / ``bwd_iters`` / ``ridge`` / ``precond`` arguments
-    wholesale; the cell's fixed point is always the optimality mapping.
+    ``bwd_solve`` / ``bwd_iters`` / ``ridge`` / ``precond`` /
+    ``backward`` / ``backward_iters`` arguments wholesale; the cell's
+    fixed point is always the optimality mapping.
+
+    ``backward`` selects the approximate backward treatment (see
+    ``ImplicitDiffSpec``): for a contractive cell,
+    ``backward="neumann_k"`` with small ``backward_iters`` is the classic
+    truncated-backprop DEQ approximation at a fixed O(k) matvec budget —
+    unlike ``bwd_solve="neumann"``, which still runs a tolerance-checked
+    convergence loop.
     """
     if diff_spec is not None:
         if not diff_spec.is_routing_only:
@@ -61,10 +70,12 @@ def make_deq_solver(cell: Callable, *, fwd_solver: str = "anderson",
         kw = dict(maxiter=fwd_iters, tol=fwd_tol, solve=diff_spec.solve,
                   linsolve_tol=diff_spec.tol,
                   linsolve_maxiter=diff_spec.maxiter, ridge=diff_spec.ridge,
-                  precond=diff_spec.precond)
+                  precond=diff_spec.precond, backward=diff_spec.backward,
+                  backward_iters=diff_spec.backward_iters)
     else:
         kw = dict(maxiter=fwd_iters, tol=fwd_tol, solve=bwd_solve,
-                  linsolve_maxiter=bwd_iters, ridge=ridge, precond=precond)
+                  linsolve_maxiter=bwd_iters, ridge=ridge, precond=precond,
+                  backward=backward, backward_iters=backward_iters)
     if mode is not None:
         kw["mode"] = mode
     if fwd_solver == "anderson":
@@ -78,7 +89,8 @@ def make_deq_solver(cell: Callable, *, fwd_solver: str = "anderson",
 def deq_fixed_point(cell: Callable, z_init, x, w, *,
                     fwd_solver: str = "anderson", fwd_iters: int = 30,
                     fwd_tol: float = 1e-5, bwd_solve: str = "neumann",
-                    bwd_iters: int = 12,
+                    bwd_iters: int = 12, backward: str = "exact",
+                    backward_iters: int = 8,
                     diff_spec: Optional[ImplicitDiffSpec] = None,
                     mode: Optional[str] = None, return_info: bool = False):
     """Solve z* = cell(z*, x, w) and register implicit derivatives wrt x, w.
@@ -86,11 +98,14 @@ def deq_fixed_point(cell: Callable, z_init, x, w, *,
     Returns z* (and the solve's ``OptInfo`` when ``return_info=True``).
     Derivatives flow to both ``x`` (previous activations) and ``w`` (the
     block's weights) in both autodiff modes; ``z_init`` gets zero
-    derivatives.  ``diff_spec`` / ``mode`` forward to ``make_deq_solver``.
+    derivatives.  ``backward``/``backward_iters``/``diff_spec``/``mode``
+    forward to ``make_deq_solver``.
     """
     solver = make_deq_solver(cell, fwd_solver=fwd_solver,
                              fwd_iters=fwd_iters, fwd_tol=fwd_tol,
                              bwd_solve=bwd_solve, bwd_iters=bwd_iters,
+                             backward=backward,
+                             backward_iters=backward_iters,
                              diff_spec=diff_spec, mode=mode)
     z_star, info = solver.run(z_init, x, w)
     return (z_star, info) if return_info else z_star

@@ -230,6 +230,10 @@ class SolveInfo(NamedTuple):
     iterations: jnp.ndarray    # outer steps actually spent per instance
     residual: jnp.ndarray      # final ||b - A x|| per instance
     converged: jnp.ndarray     # residual <= tol * ||b|| per instance
+    # relative residual ||rhs - A u|| / ||rhs|| of the implicit system at the
+    # returned (co)tangent — populated by the approximate backward modes (and
+    # by exact solves when error_estimate=True is requested); None otherwise
+    hypergrad_error_estimate: Optional[jnp.ndarray] = None
 
 
 def _maybe_info(x, info: Optional[SolveInfo], return_info: bool):
@@ -240,7 +244,8 @@ def _squeeze_info(info: SolveInfo) -> SolveInfo:
     """Collapse the internal B=1 batch axis for unbatched calls — the one
     place the flat-core solvers' per-instance diagnostics lose their
     synthetic leading axis."""
-    return SolveInfo(*(jnp.asarray(leaf).reshape(-1)[0] for leaf in info))
+    return SolveInfo(*(None if leaf is None
+                       else jnp.asarray(leaf).reshape(-1)[0] for leaf in info))
 
 
 # ---------------------------------------------------------------------------
@@ -669,6 +674,114 @@ def solve_neumann(matvec: Callable, b, *, init=None, maxiter: int = 10,
         info = SolveInfo(iterations=it, residual=rn, converged=rn <= atol)
         return acc, info
     return acc
+
+
+# ---------------------------------------------------------------------------
+# approximate backward application (fixed matvec budget, no convergence loop)
+# ---------------------------------------------------------------------------
+
+BACKWARD_MODES = ("exact", "one_step", "neumann_k", "jacobian_free")
+
+
+def approx_matvec_count(backward: str, backward_iters: int = 8) -> int:
+    """Operator applications an approximate backward mode spends (host int).
+
+    ``jacobian_free`` → 0, ``one_step`` → 1, ``neumann_k`` → k.  The error
+    estimate, when requested, costs one extra matvec on top of this.
+    """
+    if backward == "jacobian_free":
+        return 0
+    if backward == "one_step":
+        return 1
+    if backward == "neumann_k":
+        return int(backward_iters)
+    raise ValueError(f"unknown approximate backward mode {backward!r}; "
+                     f"expected one of {BACKWARD_MODES[1:]}")
+
+
+def approx_inverse_apply(matvec: Callable, b, *, backward: str,
+                         backward_iters: int = 8, ridge: float = 0.0,
+                         precond=None, batch_ndim: int = 0, tol: float = 1e-6,
+                         error_estimate: bool = True,
+                         return_info: bool = False):
+    """Apply an O(k)-matvec polynomial approximation of ``A⁻¹`` to ``b``.
+
+    The cheap-backward counterpart of ``route_solve``: instead of iterating a
+    solver to convergence, spend a *fixed* matvec budget — trip counts are
+    static, so jit/vmap shapes never depend on conditioning:
+
+    - ``"jacobian_free"``: ``u = b`` (0 matvecs — the Bolte et al. 2023 limit
+      where ``A ≈ I``; any ``precond`` is ignored by construction).
+    - ``"one_step"``: one preconditioned Richardson step from ``u₀ = M⁻¹b``,
+      i.e. ``u = u₀ + M⁻¹(b − A u₀)`` (1 matvec).  Unpreconditioned this is
+      the hand formula ``u = 2b − A b``.
+    - ``"neumann_k"``: exactly ``k = backward_iters`` preconditioned
+      Richardson steps ``u ← u + M⁻¹(b − A u)`` from ``u₀ = M⁻¹b`` (k
+      matvecs, one ``fori_loop`` with a static trip count; contrast
+      ``solve_neumann``'s tolerance-masked loop).  Unpreconditioned this
+      is the truncated Neumann series ``Σ_{j≤k} (I − A)ʲ b``, which
+      converges iff ``‖I − A‖ < 1`` — true for contractive fixed-point
+      declarations (``A = I − ∂T``), NOT for stationarity declarations
+      (``A = −H`` with ``H ⪰ 0``), where ``precond="jacobi"`` restores
+      ``‖I − M⁻¹A‖ < 1`` for diagonally dominant Hessians.
+
+    ``ridge`` damps ``A`` exactly as in the iterative solvers.  With
+    ``return_info=True`` returns ``(u, SolveInfo)`` where ``iterations`` is
+    the matvec budget spent and — when ``error_estimate=True`` — the
+    ``hypergrad_error_estimate`` field carries the relative residual
+    ``‖b − A u‖ / ‖b‖`` (one extra matvec, the honesty contract of the
+    approximate modes).  For a contraction ``‖I − A‖ = ρ`` the neumann_k
+    estimate is exactly ``ρ`` to the power ``k+1``-ish, hence monotone
+    decreasing in ``k``.
+    """
+    if backward == "exact" or backward not in BACKWARD_MODES:
+        raise ValueError(f"approx_inverse_apply handles {BACKWARD_MODES[1:]}; "
+                         f"got backward={backward!r} (route 'exact' through "
+                         "route_solve)")
+    nb = batch_ndim
+    mv = _damped(matvec, ridge)
+    if backward == "jacobian_free":
+        u = b
+    elif backward == "one_step":
+        M = _resolve_precond(precond, mv, b, nb)
+        if M is None:
+            u = _tree_sub(_tree_scale(b, 2.0, nb), mv(b))
+        else:
+            u0 = M(b)
+            u = _tree_add(u0, M(_tree_sub(b, mv(u0))), batch_ndim=nb)
+    else:  # neumann_k
+        k = int(backward_iters)
+        if k < 1:
+            raise ValueError("backward='neumann_k' needs backward_iters >= 1")
+        M = _resolve_precond(precond, mv, b, nb)
+
+        if M is None:
+            def body(_, u):
+                return _tree_add(u, _tree_sub(b, mv(u)), batch_ndim=nb)
+            u0 = b
+        else:
+            def body(_, u):
+                return _tree_add(u, M(_tree_sub(b, mv(u))), batch_ndim=nb)
+            u0 = M(b)
+
+        u = lax.fori_loop(0, k, body, u0)
+
+    if not return_info:
+        return u
+    bn = _tree_l2(b, nb)
+    spent = jnp.full(bn.shape, approx_matvec_count(backward, backward_iters),
+                     dtype=jnp.int32)
+    if error_estimate:
+        rn = _tree_l2(_tree_sub(b, mv(u)), nb)
+        est = rn / jnp.maximum(bn, 1e-30)
+        info = SolveInfo(iterations=spent, residual=rn,
+                         converged=rn <= jnp.maximum(tol * bn, 1e-30),
+                         hypergrad_error_estimate=est)
+    else:
+        rn = jnp.full(bn.shape, jnp.nan, dtype=bn.dtype)
+        info = SolveInfo(iterations=spent, residual=rn,
+                         converged=jnp.zeros(bn.shape, dtype=bool))
+    return u, info
 
 
 # ---------------------------------------------------------------------------

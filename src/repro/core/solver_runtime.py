@@ -120,6 +120,10 @@ class OptInfo(NamedTuple):
     iterations: jnp.ndarray    # update() steps actually spent per instance
     error: jnp.ndarray         # solver-specific final error per instance
     converged: jnp.ndarray     # error <= tol per instance (NaN-aware False)
+    # relative residual of the implicit backward system at the returned
+    # cotangent — populated by drivers that request it (e.g. solve_bilevel
+    # with an approximate backward mode); None otherwise
+    hypergrad_error_estimate: Any = None
 
 
 # ---------------------------------------------------------------------------
@@ -174,6 +178,14 @@ class IterativeSolver:
     linsolve_maxiter: int = _kw(1000)
     ridge: float = _kw(0.0)
     precond: Any = _kw(None)
+    # Approximate backward treatment of the implicit linear system (both
+    # derivative directions): "exact" | "one_step" | "neumann_k" |
+    # "jacobian_free"; ``backward_iters`` is the neumann_k truncation depth
+    # and ``error_estimate`` opts info-returning entry points into the
+    # one-extra-matvec relative-residual honesty check.
+    backward: str = _kw("exact")
+    backward_iters: int = _kw(8)
+    error_estimate: bool = _kw(True)
     # Mesh placement (a distributed.sharded_operators.SolveSharding): the
     # iterate is pinned to its specs each step and the implicit backward/
     # tangent solve runs sharded (the JacobianOperator inherits the
@@ -246,7 +258,9 @@ class IterativeSolver:
             optimality_fun=self.optimality_fun, solve=self.solve,
             tol=self.linsolve_tol, maxiter=self.linsolve_maxiter,
             ridge=self.ridge, precond=self.precond, has_aux=True,
-            sharding=self.sharding)
+            sharding=self.sharding, backward=self.backward,
+            backward_iters=self.backward_iters,
+            error_estimate=self.error_estimate)
 
     def run(self, init_params, *theta, mode: str = None):
         """Solve from ``init_params``; returns ``(params, OptInfo)``.
@@ -270,6 +284,26 @@ class IterativeSolver:
     def l2_optimality_error(self, params, *theta):
         """‖F(x, θ)‖ — a solver-independent certificate of optimality."""
         return _tree_l2(self.optimality_fun(params, *theta))
+
+    def estimate_hypergrad_error(self, params, *theta, cotangent=None):
+        """Relative residual ``‖v − Aᵀu‖/‖v‖`` of the cotangent system at
+        the (possibly approximate) backward solution ``u``.
+
+        The honesty check of the approximate ``backward`` modes: replays the
+        configured backward treatment on the cotangent ``v`` (defaults to an
+        all-ones tree matching ``params``) and spends one extra matvec on
+        the implicit system's residual.  Near zero the hypergradient is
+        trustworthy; large values mean ``backward_iters`` is too small or
+        the system is too ill-conditioned for the selected mode.
+        """
+        if cotangent is None:
+            cotangent = jax.tree_util.tree_map(jnp.ones_like, params)
+        spec = self.diff_spec()
+        _, info = diff_api.root_vjp(
+            spec.residual_fun, params, theta, cotangent, solve=spec.solve,
+            sharding=spec.sharding, error_estimate=True, return_info=True,
+            **spec.routing_kwargs(), **spec.backward_kwargs())
+        return info.hypergrad_error_estimate
 
 
 # ---------------------------------------------------------------------------

@@ -60,6 +60,7 @@ import collections
 import dataclasses
 import hashlib
 import itertools
+import json
 import threading
 import time
 from concurrent.futures import Future
@@ -95,6 +96,11 @@ class BucketKey(NamedTuple):
     tol: float                   # solve controls are part of the program
     maxiter: int
     ridge: float
+    # approximate-backward arm: exact and approximate hypergradient traffic
+    # never share a compiled program ("exact" | "one_step" | "neumann_k" |
+    # "jacobian_free"; backward_iters is the neumann_k depth, 0 otherwise)
+    backward: str = "exact"
+    backward_iters: int = 0
 
 
 def bucket_capacity(n: int, max_batch: int = 64) -> int:
@@ -169,7 +175,13 @@ class WarmStartCache:
     read by the service metrics.  All operations are thread-safe: the
     cache is shared between submitter threads (lookups at admission) and
     the scheduler thread (inserts at dispatch).
+
+    ``save(path)`` / ``WarmStartCache.load(path)`` persist the cache as a
+    version-stamped ``.npz`` (fingerprints + solutions + the ``BucketKey``
+    provenance of each entry), so warm starts survive service restarts.
     """
+
+    _SAVE_VERSION = 1
 
     def __init__(self, capacity: int = 256, qtol: float = 1e-3,
                  seed: int = 1234):
@@ -181,6 +193,7 @@ class WarmStartCache:
         self._mutex = threading.Lock()
         self._store: "collections.OrderedDict[str, np.ndarray]" = \
             collections.OrderedDict()
+        self._keys: dict = {}       # fingerprint -> BucketKey provenance
         self._probes: dict = {}
         self.hits = 0
         self.misses = 0
@@ -229,13 +242,22 @@ class WarmStartCache:
             self._store.move_to_end(fingerprint)
             return x
 
-    def put(self, fingerprint: str, x) -> None:
-        """Insert/refresh a solution; evicts the LRU entry over capacity."""
+    def put(self, fingerprint: str, x, key: Optional[BucketKey] = None) -> \
+            None:
+        """Insert/refresh a solution; evicts the LRU entry over capacity.
+
+        ``key`` records the entry's ``BucketKey`` provenance — carried
+        through ``save``/``load`` so a restored cache knows what routing
+        produced each solution.
+        """
         with self._mutex:
             self._store[fingerprint] = np.asarray(x)
             self._store.move_to_end(fingerprint)
+            if key is not None:
+                self._keys[fingerprint] = key
             while len(self._store) > self.capacity:
-                self._store.popitem(last=False)
+                evicted, _ = self._store.popitem(last=False)
+                self._keys.pop(evicted, None)
                 self.evictions += 1
 
     def __len__(self) -> int:
@@ -248,6 +270,61 @@ class WarmStartCache:
         """Fraction of lookups served from cache (0.0 when none yet)."""
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
+
+    def save(self, path) -> str:
+        """Persist the cache contents to ``path`` as version-stamped ``.npz``.
+
+        Layout: ``format_version``/``qtol``/``seed`` scalars, a
+        ``fingerprints`` string array, one ``solution_{i}`` array per entry
+        (solutions may differ in ``d``), and a ``bucket_keys`` string array
+        of JSON-encoded ``BucketKey`` provenance ("" when unknown).
+        Returns the path written (numpy may append ``.npz``).
+        """
+        path = str(path)
+        if not path.endswith(".npz"):
+            path += ".npz"
+        with self._mutex:
+            items = list(self._store.items())
+            keys = dict(self._keys)
+        payload = {
+            "format_version": np.asarray(self._SAVE_VERSION),
+            "qtol": np.asarray(self.qtol),
+            "seed": np.asarray(self._seed),
+            "capacity": np.asarray(self.capacity),
+            "fingerprints": np.asarray([fp for fp, _ in items]),
+            "bucket_keys": np.asarray(
+                [json.dumps(keys[fp]._asdict()) if fp in keys else ""
+                 for fp, _ in items]),
+        }
+        for i, (_, x) in enumerate(items):
+            payload[f"solution_{i}"] = np.asarray(x)
+        np.savez(path, **payload)
+        return path
+
+    @classmethod
+    def load(cls, path) -> "WarmStartCache":
+        """Restore a cache written by ``save``; rejects unknown versions.
+
+        The restored cache keeps the saved ``qtol``/``seed``/``capacity``
+        (fingerprints are a function of both, so lookups keep colliding
+        with pre-restart traffic) and starts with fresh hit/miss counters.
+        """
+        with np.load(str(path), allow_pickle=False) as z:
+            version = int(z["format_version"])
+            if version != cls._SAVE_VERSION:
+                raise ValueError(
+                    f"warm-start cache file {path!r} has format version "
+                    f"{version}; this build reads version "
+                    f"{cls._SAVE_VERSION}")
+            cache = cls(capacity=int(z["capacity"]), qtol=float(z["qtol"]),
+                        seed=int(z["seed"]))
+            fingerprints = [str(fp) for fp in z["fingerprints"]]
+            key_blobs = [str(s) for s in z["bucket_keys"]]
+            for i, fp in enumerate(fingerprints):
+                cache._store[fp] = np.asarray(z[f"solution_{i}"])
+                if key_blobs[i]:
+                    cache._keys[fp] = BucketKey(**json.loads(key_blobs[i]))
+        return cache
 
 
 class SolveService:
@@ -422,7 +499,8 @@ class SolveService:
 
     def _build_request(self, A, b, symmetric, positive_definite, spec,
                        solve, tol, maxiter, ridge, precond,
-                       warm_start: bool) -> _PendingRequest:
+                       warm_start: bool, backward: str = "exact",
+                       backward_iters: int = 0) -> _PendingRequest:
         """Admission: normalize, bucket-key, warm-start lookup (no enqueue)."""
         r = self._routing(spec, solve, tol, maxiter, ridge, precond)
         A_dense, b_flat, unravel, sym, pd = self._admit_operator(
@@ -449,9 +527,13 @@ class SolveService:
         key = BucketKey(d=d, solver=solver, precond=r["precond"],
                         symmetric=sym, positive_definite=pd,
                         dtype=str(dtype),
-                        tol=r["tol"], maxiter=r["maxiter"], ridge=r["ridge"])
+                        tol=r["tol"], maxiter=r["maxiter"], ridge=r["ridge"],
+                        backward=backward, backward_iters=backward_iters)
         fingerprint = init = None
-        if self.cache is not None and warm_start:
+        if self.cache is not None and warm_start and backward == "exact":
+            # approximate buckets skip the warm-start path entirely: the
+            # polynomial apply has no init to seed, and caching its
+            # truncated output would poison exact buckets' starts
             fingerprint = self.cache.fingerprint(A_dense, b_flat, key)
             init = self.cache.get(fingerprint)
             if init is not None and solver == "pallas_cg":
@@ -485,7 +567,8 @@ class SolveService:
 
     def submit_hypergrad(self, optimality_fun, x_star, theta, cotangent, *,
                          spec=None, solve=_UNSET, tol=_UNSET, maxiter=_UNSET,
-                         ridge=_UNSET, precond=_UNSET,
+                         ridge=_UNSET, precond=_UNSET, backward=_UNSET,
+                         backward_iters=_UNSET,
                          warm_start: bool = True) -> Future:
         """Enqueue one implicit hypergradient: resolves to ``vᵀ ∂x*(θ)``.
 
@@ -500,6 +583,15 @@ class SolveService:
         A mapping-carrying ``ImplicitDiffSpec`` may supply *both* the
         optimality mapping (pass ``optimality_fun=None``) and the routing;
         an explicit ``optimality_fun`` wins when both are given.
+
+        ``backward`` selects an approximate cotangent treatment
+        (``"one_step"``/``"neumann_k"``/``"jacobian_free"``, with
+        ``backward_iters`` the Neumann depth) — resolution order matches
+        the routing kwargs (service default "exact" < ``spec`` < explicit
+        keyword).  Approximate requests land in their own ``BucketKey``
+        arm, never sharing a compiled program (or warm starts) with exact
+        traffic, and their ``ServiceResult.info`` reports the
+        ``hypergrad_error_estimate`` relative residual.
         """
         if optimality_fun is None:
             if spec is None or spec.is_routing_only:
@@ -510,6 +602,27 @@ class SolveService:
         if not isinstance(theta, tuple):
             theta = (theta,)
         r = self._routing(spec, solve, tol, maxiter, ridge, precond)
+        bw = spec.backward if spec is not None else "exact"
+        bwk = spec.backward_iters if spec is not None else 8
+        if backward is not _UNSET:
+            bw = backward
+        if backward_iters is not _UNSET:
+            bwk = backward_iters
+        if bw not in ls.BACKWARD_MODES:
+            raise ValueError(f"unknown backward mode {bw!r}; expected one "
+                             f"of {ls.BACKWARD_MODES}")
+        if bw == "neumann_k" and int(bwk) < 1:
+            raise ValueError("backward='neumann_k' needs backward_iters >= "
+                             f"1; got {bwk}")
+        if bw != "exact" and r["precond"] == "block_jacobi":
+            raise ValueError(
+                "precond='block_jacobi' inverts the full flat block — that "
+                "would make the 'approximate' backward an exact solve; use "
+                "precond=None or 'jacobi' with approximate backward modes")
+        # one_step/jacobian_free don't consume a depth: pin the key arm to 0
+        # so e.g. one_step traffic with different spec defaults still shares
+        # one compiled program
+        bwk = int(bwk) if bw == "neumann_k" else 0
         solver = r["solve"]
         certified = solver != "auto" and ls.solver_is_symmetric(solver)
         A = ops.JacobianOperator(
@@ -526,7 +639,7 @@ class SolveService:
 
         pending = self._build_request(
             AT, cotangent, A.symmetric, False, spec, solve, tol, maxiter,
-            ridge, precond, warm_start)
+            ridge, precond, warm_start, backward=bw, backward_iters=bwk)
         pending.finish = finish
         return self._enqueue(pending)
 
@@ -547,13 +660,32 @@ class SolveService:
             return fn
         takes_init = key.solver != "pallas_cg"
 
-        def dispatch(A_stack, b_stack, init_stack):
-            op = ops.DenseOperator(A_stack, symmetric=key.symmetric,
-                                   positive_definite=key.positive_definite)
-            return ls.route_solve(
-                key.solver, op, b_stack, tol=key.tol, maxiter=key.maxiter,
-                ridge=key.ridge, precond=key.precond,
-                init=init_stack if takes_init else None, return_info=True)
+        if key.backward != "exact":
+            # approximate arm: the fixed-budget polynomial apply replaces
+            # the converged solve; no warm start (there is no init to
+            # seed), and the error estimate is always computed — it IS the
+            # approximate modes' honesty contract, at one extra matvec on
+            # an already-cheap dispatch
+            def dispatch(A_stack, b_stack, init_stack):
+                del init_stack
+                op = ops.DenseOperator(
+                    A_stack, symmetric=key.symmetric,
+                    positive_definite=key.positive_definite)
+                return ls.approx_inverse_apply(
+                    op, b_stack, backward=key.backward,
+                    backward_iters=max(key.backward_iters, 1),
+                    ridge=key.ridge, precond=key.precond, batch_ndim=1,
+                    tol=key.tol, error_estimate=True, return_info=True)
+        else:
+            def dispatch(A_stack, b_stack, init_stack):
+                op = ops.DenseOperator(A_stack, symmetric=key.symmetric,
+                                       positive_definite=key.positive_definite)
+                return ls.route_solve(
+                    key.solver, op, b_stack, tol=key.tol,
+                    maxiter=key.maxiter, ridge=key.ridge,
+                    precond=key.precond,
+                    init=init_stack if takes_init else None,
+                    return_info=True)
 
         fn = jax.jit(dispatch)
         with self._lock:
@@ -599,14 +731,17 @@ class SolveService:
         it = np.asarray(info.iterations).tolist()
         rn = np.asarray(info.residual).tolist()
         cv = np.asarray(info.converged).tolist()
+        est = info.hypergrad_error_estimate
+        est = [None] * cap if est is None else np.asarray(est).tolist()
         if not isinstance(it, list):        # scalar (unbatched) diagnostics
             it, rn, cv = [it] * cap, [rn] * cap, [cv] * cap
+            est = est if isinstance(est, list) else [est] * cap
         now = time.perf_counter()
         queue_wait = 0.0
         for i, req in enumerate(reqs):
             xi = x_host[i]
             if req.fingerprint is not None and self.cache is not None:
-                self.cache.put(req.fingerprint, xi)
+                self.cache.put(req.fingerprint, xi, key=req.key)
             queue_t = max(now - solve_t - req.enqueue_t, 0.0)
             queue_wait += queue_t
             try:
@@ -617,7 +752,8 @@ class SolveService:
                 req.future.set_result(ServiceResult(
                     uid=req.uid, x=payload,
                     info=SolveInfo(iterations=it[i], residual=rn[i],
-                                   converged=cv[i]),
+                                   converged=cv[i],
+                                   hypergrad_error_estimate=est[i]),
                     queue_time=queue_t, solve_time=solve_t,
                     bucket_size=n, bucket_capacity=cap,
                     warm_start=req.init is not None))

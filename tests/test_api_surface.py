@@ -139,3 +139,74 @@ def test_runtime_service_public_surface():
                 _resolve_auto(op, b, precond, None)
             assert svc_warm._resolve_solver(pd, precond) == \
                 _resolve_auto(op, b, precond, b)
+
+
+def test_backward_mode_surface():
+    """The approximate-backward feature's public contract: the mode tuple,
+    the spec fields (with their defaults), and the polynomial apply."""
+    from repro.core import linear_solve as ls
+    assert ls.BACKWARD_MODES == ("exact", "one_step", "neumann_k",
+                                 "jacobian_free")
+    assert callable(ls.approx_inverse_apply)
+    assert ls.approx_matvec_count("jacobian_free") == 0
+
+    spec = repro.core.ImplicitDiffSpec(optimality_fun=lambda x: x)
+    assert spec.backward == "exact"
+    assert spec.backward_iters == 8
+    assert spec.error_estimate is True
+    assert spec.backward_kwargs() == {"backward": "exact",
+                                      "backward_iters": 8}
+
+    fields = set(repro.core.ImplicitDiffSpec.__dataclass_fields__)
+    assert {"backward", "backward_iters", "error_estimate"} <= fields
+    # info structures expose the accounting field, defaulted off
+    assert ls.SolveInfo._field_defaults["hypergrad_error_estimate"] is None
+    from repro.core.solver_runtime import OptInfo
+    assert OptInfo._field_defaults["hypergrad_error_estimate"] is None
+
+
+def test_submit_hypergrad_signature():
+    """``SolveService.submit_hypergrad`` carries the approximate-backward
+    selection; the deprecated decorator shims must NOT."""
+    import inspect
+
+    import repro.runtime as rt
+    params = inspect.signature(rt.SolveService.submit_hypergrad).parameters
+    assert "backward" in params and "backward_iters" in params
+
+    from repro.core import custom_fixed_point, custom_root
+    for fn in (custom_root, custom_fixed_point):
+        p = inspect.signature(fn).parameters
+        assert "backward" in p and p["backward"].default == "exact"
+    # the runtime solvers default to the exact backward
+    solver = repro.core.GradientDescent(lambda x, t: ((x - t) ** 2).sum())
+    assert solver.backward == "exact"
+    assert solver.diff_spec().backward == "exact"
+
+
+def test_bench_smoke_report_includes_approx_rows():
+    """The committed smoke report must be green and carry the
+    error-vs-cost rows of the approximate backward modes (the fast lane
+    asserts the artifact the bench lane regenerates)."""
+    import json
+    import os
+
+    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_smoke.json")
+    with open(path) as f:
+        report = json.load(f)
+    assert report["failed"] == []
+    approx = [r for r in report["rows"] if r["name"].startswith(
+        "approx_backward_")]
+    modes_seen = {m for m in ("one_step", "neumann_k", "jacobian_free")
+                  for r in approx if m in r["name"]}
+    assert modes_seen == {"one_step", "neumann_k", "jacobian_free"}, approx
+    for row in approx:
+        if "exact" not in row["name"]:
+            assert "est=" in row["derived"], row
+            assert "speedup=" in row["derived"], row
+    # interpret-mode Pallas rows are tagged and excluded from the summary
+    interp = [r["name"] for r in report["rows"]
+              if "interpret-mode" in r["derived"]]
+    assert interp, "kernel micro rows lost their interpret-mode tag"
+    summary = report["speedup_summary"]
+    assert summary and not set(interp) & set(summary["rows"])

@@ -1,0 +1,486 @@
+"""Approximate backward modes: parity, accounting, and routing.
+
+Covers the ``backward="one_step" | "neumann_k" | "jacobian_free"`` feature
+end-to-end: the raw polynomial apply (hand formulas, preconditioned
+Richardson, monotone error estimates), the wrapped decorators in BOTH
+autodiff directions, the solver runtime's ``estimate_hypergrad_error``,
+bilevel/DEQ threading, the solve service's approximate buckets, the
+``WarmStartCache`` save/load satellite, and the deprecated shims'
+``backward=`` rejection.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bilevel, diff_api
+from repro.core import linear_solve as ls
+from repro.core import solver_runtime as sr
+from repro.core.implicit_diff import (custom_fixed_point,
+                                      custom_fixed_point_jvp, custom_root,
+                                      custom_root_jvp)
+from repro.core.implicit_layer import deq_fixed_point
+from repro.runtime.solve_service import (BucketKey, SolveService,
+                                         WarmStartCache)
+
+
+def _spd(key, d, rho):
+    """``A = I − ρS`` with ``‖S‖₂ = 1``: eigenvalues in [1−ρ, 1+ρ]."""
+    S = jax.random.normal(key, (d, d))
+    S = (S + S.T) / 2.0
+    S = S / jnp.linalg.norm(S, 2)
+    return jnp.eye(d) - rho * S
+
+
+def _neumann_ref(A, v, k):
+    u = v
+    for _ in range(k):
+        u = u + (v - A @ u)
+    return u
+
+
+@pytest.fixture
+def spd6(rng):
+    A = _spd(rng, 6, 0.3)
+    b = jax.random.normal(jax.random.fold_in(rng, 1), (6,))
+    return A, b
+
+
+class TestApproxInverseApply:
+    """The raw polynomial apply against hand formulas."""
+
+    def test_jacobian_free_is_identity(self, spd6):
+        A, b = spd6
+        u = ls.approx_inverse_apply(lambda v: A @ v, b,
+                                    backward="jacobian_free")
+        np.testing.assert_allclose(u, b, rtol=1e-12)
+
+    def test_one_step_hand_formula(self, spd6):
+        A, b = spd6
+        u = ls.approx_inverse_apply(lambda v: A @ v, b, backward="one_step")
+        np.testing.assert_allclose(u, 2.0 * b - A @ b, rtol=1e-12)
+
+    def test_neumann_k_polynomial(self, spd6):
+        A, b = spd6
+        for k in (1, 3, 5):
+            u = ls.approx_inverse_apply(lambda v: A @ v, b,
+                                        backward="neumann_k",
+                                        backward_iters=k)
+            np.testing.assert_allclose(u, _neumann_ref(A, b, k), rtol=1e-10)
+
+    def test_neumann_k1_equals_one_step(self, spd6):
+        A, b = spd6
+        u1 = ls.approx_inverse_apply(lambda v: A @ v, b, backward="one_step")
+        uk = ls.approx_inverse_apply(lambda v: A @ v, b,
+                                     backward="neumann_k", backward_iters=1)
+        np.testing.assert_allclose(u1, uk, rtol=1e-12)
+
+    def test_neumann_large_k_matches_exact(self, spd6):
+        A, b = spd6
+        u = ls.approx_inverse_apply(lambda v: A @ v, b,
+                                    backward="neumann_k", backward_iters=60)
+        np.testing.assert_allclose(u, jnp.linalg.solve(A, b), atol=1e-8)
+
+    def test_preconditioned_neumann_fixes_negated_operator(self, rng):
+        # A = −H (stationarity declaration): plain Neumann diverges,
+        # jacobi-preconditioned Richardson restores convergence.
+        H = _spd(rng, 6, 0.3)
+        b = jax.random.normal(jax.random.fold_in(rng, 1), (6,))
+        mv = lambda v: -(H @ v)
+        u_plain, info_plain = ls.approx_inverse_apply(
+            mv, b, backward="neumann_k", backward_iters=10, return_info=True)
+        u_prec, info_prec = ls.approx_inverse_apply(
+            mv, b, backward="neumann_k", backward_iters=10, precond="jacobi",
+            return_info=True)
+        assert float(info_plain.hypergrad_error_estimate) > 1.0  # diverged
+        assert float(info_prec.hypergrad_error_estimate) < 5e-2
+        np.testing.assert_allclose(u_prec, jnp.linalg.solve(-H, b),
+                                   atol=5e-2)
+        del u_plain
+
+    def test_error_estimate_monotone_in_k(self, spd6):
+        A, b = spd6
+        ests = []
+        for k in (1, 2, 4, 8, 16):
+            _, info = ls.approx_inverse_apply(
+                lambda v: A @ v, b, backward="neumann_k", backward_iters=k,
+                return_info=True)
+            ests.append(float(info.hypergrad_error_estimate))
+        assert all(e1 > e2 for e1, e2 in zip(ests, ests[1:])), ests
+
+    def test_matvec_accounting(self, spd6):
+        A, b = spd6
+        assert ls.approx_matvec_count("jacobian_free") == 0
+        assert ls.approx_matvec_count("one_step") == 1
+        assert ls.approx_matvec_count("neumann_k", 5) == 5
+        calls = []
+
+        def mv(v):
+            # debug.callback counts EXECUTIONS (the fori_loop body traces
+            # once but runs k times)
+            jax.debug.callback(lambda _: calls.append(1), jnp.zeros(()))
+            return A @ v
+
+        for mode, k, expect in (("jacobian_free", 1, 0), ("one_step", 1, 1),
+                                ("neumann_k", 4, 4)):
+            calls.clear()
+            jax.block_until_ready(ls.approx_inverse_apply(
+                mv, b, backward=mode, backward_iters=k))
+            jax.effects_barrier()
+            assert len(calls) == expect, (mode, len(calls))
+
+    def test_info_fields_and_estimate_off(self, spd6):
+        A, b = spd6
+        u, info = ls.approx_inverse_apply(
+            lambda v: A @ v, b, backward="neumann_k", backward_iters=3,
+            return_info=True)
+        assert int(info.iterations) == 3
+        assert info.hypergrad_error_estimate is not None
+        _, info_off = ls.approx_inverse_apply(
+            lambda v: A @ v, b, backward="neumann_k", backward_iters=3,
+            error_estimate=False, return_info=True)
+        assert info_off.hypergrad_error_estimate is None
+        del u
+
+    def test_rejects_exact_and_bad_iters(self, spd6):
+        A, b = spd6
+        with pytest.raises(ValueError, match="route 'exact'"):
+            ls.approx_inverse_apply(lambda v: A @ v, b, backward="exact")
+        with pytest.raises(ValueError, match="backward_iters"):
+            ls.approx_inverse_apply(lambda v: A @ v, b,
+                                    backward="neumann_k", backward_iters=0)
+
+
+class TestSpecValidation:
+    def test_unknown_mode_rejected(self):
+        with pytest.raises(ValueError, match="backward"):
+            diff_api.ImplicitDiffSpec(optimality_fun=lambda x, t: x,
+                                      backward="bogus")
+
+    def test_neumann_needs_positive_iters(self):
+        with pytest.raises(ValueError, match="backward_iters"):
+            diff_api.ImplicitDiffSpec(optimality_fun=lambda x, t: x,
+                                      backward="neumann_k", backward_iters=0)
+
+    def test_backward_kwargs_roundtrip(self):
+        spec = diff_api.ImplicitDiffSpec(optimality_fun=lambda x, t: x,
+                                         backward="neumann_k",
+                                         backward_iters=5)
+        assert spec.backward_kwargs() == {"backward": "neumann_k",
+                                          "backward_iters": 5}
+
+
+class TestWrappedModeParity:
+    """Every mode, both autodiff directions, through the decorators."""
+
+    d = 8
+
+    def _solver(self, A, **kw):
+        Ainv = jnp.linalg.inv(A)
+
+        def F(x, theta):
+            return theta - A @ x
+
+        return custom_root(F, solve="cg", tol=1e-10, **kw)(
+            lambda init, t: Ainv @ t)
+
+    @pytest.mark.parametrize("mode,k", [("exact", 1), ("one_step", 1),
+                                        ("jacobian_free", 1),
+                                        ("neumann_k", 2), ("neumann_k", 6)])
+    def test_vjp_and_jvp_match_polynomial(self, rng, mode, k):
+        A = _spd(rng, self.d, 0.3)
+        c = jax.random.normal(jax.random.fold_in(rng, 1), (self.d,))
+        th = jax.random.normal(jax.random.fold_in(rng, 2), (self.d,))
+        v = jax.random.normal(jax.random.fold_in(rng, 3), (self.d,))
+        solver = self._solver(A, backward=mode, backward_iters=k)
+
+        if mode == "exact":
+            ref = lambda w: jnp.linalg.solve(A, w)
+        elif mode == "jacobian_free":
+            ref = lambda w: w
+        elif mode == "one_step":
+            ref = lambda w: 2.0 * w - A @ w
+        else:
+            ref = lambda w: _neumann_ref(A, w, k)
+
+        g = jax.grad(lambda t: c @ solver(jnp.zeros(self.d), t))(th)
+        np.testing.assert_allclose(g, ref(c), atol=1e-7)  # Aᵀ = A
+
+        _, dx = jax.jvp(lambda t: solver(jnp.zeros(self.d), t), (th,), (v,))
+        np.testing.assert_allclose(dx, ref(v), atol=1e-7)
+
+    def test_neumann_large_k_recovers_exact_grad(self, rng):
+        A = _spd(rng, self.d, 0.3)
+        th = jax.random.normal(jax.random.fold_in(rng, 2), (self.d,))
+        exact = self._solver(A)
+        approx = self._solver(A, backward="neumann_k", backward_iters=60)
+        loss = lambda s: (lambda t: jnp.sum(s(jnp.zeros(self.d), t) ** 2))
+        np.testing.assert_allclose(jax.grad(loss(approx))(th),
+                                   jax.grad(loss(exact))(th), atol=1e-7)
+
+    def test_fixed_point_decorator_takes_backward(self, rng):
+        # contractive T: neumann_k is the phantom-gradient approximation
+        W = 0.4 * _spd(rng, self.d, 0.5)
+
+        def T(x, t):
+            return W @ x + t
+
+        x_inf = jnp.linalg.solve(jnp.eye(self.d) - W, jnp.ones(self.d))
+
+        def fp_solver(init, t):
+            return x_inf * 0 + jnp.linalg.solve(jnp.eye(self.d) - W, t)
+
+        th = jax.random.normal(jax.random.fold_in(rng, 2), (self.d,))
+        g_ex = jax.grad(lambda t: jnp.sum(
+            custom_fixed_point(T, solve="cg")(fp_solver)(None, t)))(th)
+        g_nk = jax.grad(lambda t: jnp.sum(
+            custom_fixed_point(T, backward="neumann_k", backward_iters=40)(
+                fp_solver)(None, t)))(th)
+        np.testing.assert_allclose(g_nk, g_ex, atol=1e-6)
+
+
+class TestVmapOneBatchedPass:
+    """Acceptance: the approximate backward under ``jax.vmap`` executes ONE
+    batched polynomial pass — the traced-F evaluation count is independent
+    of the batch size."""
+
+    def _counted_grad(self, rng, B, mode, k):
+        d = 4
+        A = _spd(rng, d, 0.3)
+        Ainv = jnp.linalg.inv(A)
+        executed = []
+
+        def F(x, theta):
+            jax.debug.callback(lambda _: executed.append(1), jnp.zeros(()))
+            return theta - A @ x
+
+        solver = custom_root(F, backward=mode, backward_iters=k)(
+            lambda init, t: Ainv @ t)
+        loss = lambda t: jnp.sum(solver(jnp.zeros(d), t) ** 2)
+        thetas = jax.random.normal(jax.random.fold_in(rng, 1), (B, d))
+        g = jax.vmap(jax.grad(loss))(thetas)
+        jax.effects_barrier()
+        return len(executed), g
+
+    @pytest.mark.parametrize("mode,k", [("one_step", 1), ("neumann_k", 3),
+                                        ("jacobian_free", 1)])
+    def test_count_independent_of_batch(self, rng, mode, k):
+        n1, _ = self._counted_grad(rng, 1, mode, k)
+        n8, g8 = self._counted_grad(rng, 8, mode, k)
+        assert n1 == n8, (f"{mode}: F executed {n8} times at B=8 vs {n1} "
+                          "at B=1 — the backward did not batch")
+        assert g8.shape == (8, 4)
+
+
+class TestDeprecatedShimsRejectBackward:
+    def test_custom_root_jvp_rejects(self):
+        F = lambda x, t: t - x
+        with pytest.raises(TypeError, match="backward"):
+            custom_root_jvp(F, backward="one_step")
+        with pytest.raises(TypeError, match="backward"):
+            custom_root_jvp(F, backward_iters=4)
+
+    def test_custom_fixed_point_jvp_rejects(self):
+        T = lambda x, t: 0.5 * x + t
+        with pytest.raises(TypeError, match="backward"):
+            custom_fixed_point_jvp(T, backward="jacobian_free")
+
+
+class TestSolverRuntime:
+    def _gd(self, A, **kw):
+        return sr.GradientDescent(fun=lambda x, t: 0.5 * x @ A @ x - t @ x,
+                                  maxiter=400, tol=1e-11, **kw)
+
+    def test_estimate_hypergrad_error(self, rng):
+        d = 6
+        A = _spd(rng, d, 0.3)
+        th = jax.random.normal(jax.random.fold_in(rng, 1), (d,))
+        ests = []
+        for k in (2, 6):
+            gd = self._gd(A, backward="neumann_k", backward_iters=k,
+                          precond="jacobi")
+            params, _ = gd.run(jnp.zeros(d), th)
+            ests.append(float(gd.estimate_hypergrad_error(params, th)))
+        assert ests[1] < ests[0] < 1.0, ests
+
+    def test_bilevel_populates_estimate(self, rng):
+        d = 6
+        A = _spd(rng, d, 0.3)
+        gd = self._gd(A, precond="jacobi")
+        outer = lambda x, t: 0.5 * jnp.sum((x - 1.0) ** 2)
+        sol = bilevel.solve_bilevel(outer, gd, jnp.zeros(d), jnp.zeros(d),
+                                    outer_steps=2, backward="neumann_k",
+                                    backward_iters=6)
+        est = sol.inner_info.hypergrad_error_estimate
+        assert est is not None and float(est) < 0.05
+        sol_exact = bilevel.solve_bilevel(outer, gd, jnp.zeros(d),
+                                          jnp.zeros(d), outer_steps=2)
+        assert sol_exact.inner_info.hypergrad_error_estimate is None
+
+    def test_deq_neumann_k_matches_exact(self, rng):
+        d = 6
+        cell = lambda z, x, w: jnp.tanh(w * z * 0.3 + x)
+        x_in = jax.random.normal(rng, (d,))
+        out = lambda xx, **kw: jnp.sum(
+            deq_fixed_point(cell, jnp.zeros(d), xx, 0.5, fwd_tol=1e-10,
+                            **kw))
+        g_ex = jax.grad(lambda xx: out(xx, bwd_solve="normal_cg"))(x_in)
+        g_nk = jax.grad(lambda xx: out(xx, backward="neumann_k",
+                                       backward_iters=30))(x_in)
+        np.testing.assert_allclose(g_nk, g_ex, atol=1e-5)
+
+
+class TestSolveService:
+    def _system(self, rng, d=6):
+        A = _spd(rng, d, 0.3)
+        th = jax.random.normal(jax.random.fold_in(rng, 1), (d,))
+        ct = jax.random.normal(jax.random.fold_in(rng, 2), (d,))
+        F = lambda x, t: t - A @ x
+        return A, th, ct, F, jnp.linalg.solve(A, th)
+
+    def test_approx_buckets_and_estimates(self, rng):
+        A, th, ct, F, x_star = self._system(rng)
+        svc = SolveService()
+        futs = {
+            "exact": svc.submit_hypergrad(F, x_star, th, ct),
+            "one_step": svc.submit_hypergrad(F, x_star, th, ct,
+                                             backward="one_step"),
+            "neumann_k": svc.submit_hypergrad(F, x_star, th, ct,
+                                              backward="neumann_k",
+                                              backward_iters=8),
+            "jacobian_free": svc.submit_hypergrad(F, x_star, th, ct,
+                                                  backward="jacobian_free"),
+        }
+        svc.flush()
+        res = {m: f.result() for m, f in futs.items()}
+        np.testing.assert_allclose(res["one_step"].x[0], 2 * ct - A @ ct,
+                                   atol=1e-9)
+        np.testing.assert_allclose(res["jacobian_free"].x[0], ct,
+                                   atol=1e-12)
+        np.testing.assert_allclose(res["exact"].x[0],
+                                   jnp.linalg.solve(A, ct), atol=1e-5)
+        # distinct matvec budgets prove distinct bucket arms
+        assert [res[m].info.iterations for m in
+                ("one_step", "neumann_k", "jacobian_free")] == [1, 8, 0]
+        assert (res["neumann_k"].info.hypergrad_error_estimate
+                < res["one_step"].info.hypergrad_error_estimate)
+
+    def test_spec_default_and_override(self, rng):
+        A, th, ct, F, x_star = self._system(rng)
+        spec = diff_api.ImplicitDiffSpec(optimality_fun=F,
+                                         backward="neumann_k",
+                                         backward_iters=4)
+        svc = SolveService()
+        f_spec = svc.submit_hypergrad(F, x_star, th, ct, spec=spec)
+        f_over = svc.submit_hypergrad(F, x_star, th, ct, spec=spec,
+                                      backward="exact")
+        svc.flush()
+        assert int(f_spec.result().info.iterations) == 4
+        np.testing.assert_allclose(f_over.result().x[0],
+                                   jnp.linalg.solve(A, ct), atol=1e-5)
+
+    def test_approx_requests_never_enter_cache(self, rng):
+        A, th, ct, F, x_star = self._system(rng)
+        svc = SolveService()
+        svc.submit_hypergrad(F, x_star, th, ct, backward="one_step")
+        svc.flush()
+        assert len(svc.cache) == 0
+        svc.submit_hypergrad(F, x_star, th, ct)
+        svc.flush()
+        assert len(svc.cache) == 1
+
+    def test_block_jacobi_approx_rejected(self, rng):
+        A, th, ct, F, x_star = self._system(rng)
+        svc = SolveService()
+        with pytest.raises(ValueError, match="block_jacobi"):
+            svc.submit_hypergrad(F, x_star, th, ct, backward="one_step",
+                                 precond="block_jacobi")
+
+    def test_unknown_backward_rejected(self, rng):
+        A, th, ct, F, x_star = self._system(rng)
+        svc = SolveService()
+        with pytest.raises(ValueError, match="backward"):
+            svc.submit_hypergrad(F, x_star, th, ct, backward="bogus")
+
+
+class TestWarmStartCachePersistence:
+    def _populated(self, rng, n=3):
+        cache = WarmStartCache(capacity=8)
+        d = 5
+        for i in range(n):
+            A = _spd(jax.random.fold_in(rng, i), d, 0.2)
+            b = jax.random.normal(jax.random.fold_in(rng, 100 + i), (d,))
+            key = BucketKey(d=d, solver="cg", precond=None, symmetric=True,
+                            positive_definite=True, dtype="float64",
+                            tol=1e-6, maxiter=100 + i, ridge=0.0)
+            fp = cache.fingerprint(np.asarray(A), np.asarray(b), key)
+            cache.put(fp, np.linalg.solve(np.asarray(A), np.asarray(b)),
+                      key=key)
+        return cache
+
+    def test_save_load_roundtrip(self, rng, tmp_path):
+        cache = self._populated(rng)
+        path = cache.save(os.path.join(tmp_path, "warm"))
+        assert path.endswith(".npz")
+        loaded = WarmStartCache.load(path)
+        assert len(loaded) == len(cache)
+        assert loaded.capacity == cache.capacity
+        for fp, x in cache._store.items():
+            np.testing.assert_allclose(loaded._store[fp], x)
+            assert loaded._keys[fp] == cache._keys[fp]
+            assert isinstance(loaded._keys[fp], BucketKey)
+
+    def test_loaded_cache_serves_lookups(self, rng, tmp_path):
+        cache = self._populated(rng, n=2)
+        path = cache.save(os.path.join(tmp_path, "warm.npz"))
+        loaded = WarmStartCache.load(path)
+        for fp in cache._store:
+            assert loaded.get(fp) is not None
+
+    def test_version_mismatch_rejected(self, rng, tmp_path):
+        cache = self._populated(rng, n=1)
+        path = cache.save(os.path.join(tmp_path, "warm.npz"))
+        with np.load(path, allow_pickle=False) as z:
+            payload = {k: z[k] for k in z.files}
+        payload["format_version"] = np.asarray(99)
+        np.savez(path, **payload)
+        with pytest.raises(ValueError, match="version"):
+            WarmStartCache.load(path)
+
+
+class TestShardedApprox:
+    def test_sharded_neumann_matches_dense(self, rng):
+        from repro.distributed.sharded_operators import SolveSharding
+        from jax.sharding import Mesh, PartitionSpec as P
+        d, B = 6, len(jax.devices())
+        A = _spd(rng, d, 0.3)
+        thetas = jax.random.normal(jax.random.fold_in(rng, 1), (B, d))
+
+        def F(x, theta):
+            return theta - x @ A.T
+
+        mesh = Mesh(np.asarray(jax.devices()), ("data",))
+        sharding = SolveSharding(mesh, P("data", None), batch_ndim=1,
+                                 theta_specs=(P("data", None),))
+        spec = diff_api.ImplicitDiffSpec(
+            optimality_fun=F, sharding=sharding, backward="neumann_k",
+            backward_iters=8)
+        Ainv = jnp.linalg.inv(A)
+        solver = diff_api.implicit_diff(spec)(lambda init, t: t @ Ainv.T)
+        g = jax.grad(lambda t: jnp.sum(solver(jnp.zeros((B, d)), t)))(thetas)
+        ref = jax.vmap(lambda _:
+                       _neumann_ref(A, jnp.ones(d), 8))(jnp.arange(B))
+        np.testing.assert_allclose(g, ref, atol=1e-7)
+
+    def test_sharded_string_precond_rejected(self, rng):
+        from repro.distributed.sharded_operators import SolveSharding
+        from jax.sharding import Mesh, PartitionSpec as P
+        mesh = Mesh(np.asarray(jax.devices()), ("data",))
+        sharding = SolveSharding(mesh, P("data", None), batch_ndim=1)
+        F = lambda x, t: t - x
+        with pytest.raises(ValueError, match="precond"):
+            diff_api.root_vjp(F, jnp.ones((1, 2)), (jnp.ones((1, 2)),),
+                              jnp.ones((1, 2)), sharding=sharding,
+                              backward="one_step", precond="jacobi")

@@ -119,3 +119,28 @@ def test_property_gmres_equals_bicgstab(seed, d):
     xg = ls.solve_gmres(lambda v: A @ v, b, tol=1e-12)
     xb = ls.solve_bicgstab(lambda v: A @ v, b, tol=1e-12)
     np.testing.assert_allclose(xg, xb, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), d=st.integers(2, 16),
+       rho=st.floats(0.05, 0.9))
+def test_property_hypergrad_error_estimate_monotone_in_k(seed, d, rho):
+    """Property: on any contraction ``A = I − ρS`` (``‖S‖₂ = ρ < 1``), the
+    ``neumann_k`` ``hypergrad_error_estimate`` decreases monotonically in
+    the truncation depth k — the error-vs-cost accounting the approximate
+    backward modes promise."""
+    key = jax.random.PRNGKey(seed)
+    S = jax.random.normal(key, (d, d))
+    S = (S + S.T) / 2.0
+    S = S / jnp.linalg.norm(S, 2)
+    A = jnp.eye(d) - rho * S
+    b = jax.random.normal(jax.random.fold_in(key, 1), (d,))
+    ests = []
+    for k in (1, 2, 4, 8):
+        _, info = ls.approx_inverse_apply(
+            lambda v: A @ v, b, backward="neumann_k", backward_iters=k,
+            return_info=True)
+        ests.append(float(info.hypergrad_error_estimate))
+    assert all(e1 >= e2 for e1, e2 in zip(ests, ests[1:])), ests
+    # and the depth-k estimate is the contraction factor to the power k+1
+    assert ests[-1] <= rho ** 9 + 1e-12
