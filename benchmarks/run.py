@@ -19,10 +19,13 @@ Prints ``name,us_per_call,derived`` CSV rows.
           at 64 concurrent requests, warm vs cold cache
   approx  approximate backward modes (one_step / neumann_k / jacobian_free)
           error-vs-cost sweep against the exact converged backward
+  stochastic stochastic vs full-batch bilevel hypergradients at growing
+          dataset size (B=64 quadratic sweep + LM data-scale demo with
+          the hypergrad cosine-similarity gate)
   roofline per-(arch x shape) terms from the dry-run artifacts
 
 ``--smoke`` runs a fast CI subset (kernels + batched + bilevel + fwdrev +
-oproute + sharded + service + approx) and writes the rows to
+oproute + sharded + service + approx + stochastic) and writes the rows to
 ``BENCH_smoke.json`` (override with ``--out``) for artifact upload.  The
 report's ``speedup_summary`` aggregates every ``speedup=..x`` derived tag,
 excluding interpret-mode Pallas rows (CPU interpreter timings are
@@ -34,10 +37,10 @@ import traceback
 
 
 SMOKE_BENCHES = ["kernels", "batched", "bilevel", "fwdrev", "oproute",
-                 "sharded", "service", "approx"]
+                 "sharded", "service", "approx", "stochastic"]
 # accept run(emit, smoke=True)
 SMOKE_KWARG_BENCHES = {"batched", "bilevel", "fwdrev", "oproute", "sharded",
-                       "service", "approx"}
+                       "service", "approx", "stochastic"}
 
 
 def main() -> None:
@@ -55,7 +58,8 @@ def main() -> None:
                             fwd_vs_rev_hypergrad, jacobian_precision,
                             kernels_micro, molecular_dynamics,
                             operator_routing, roofline_report,
-                            sharded_solve, solve_service, svm_hyperopt)
+                            sharded_solve, solve_service,
+                            stochastic_bilevel, svm_hyperopt)
     from benchmarks.common import Collector, emit, summarize_speedups
     all_benches = {
         "fig3": jacobian_precision.run,
@@ -71,6 +75,7 @@ def main() -> None:
         "sharded": sharded_solve.run,
         "service": solve_service.run,
         "approx": approx_backward.run,
+        "stochastic": stochastic_bilevel.run,
         "roofline": roofline_report.run,
     }
     if args.only:

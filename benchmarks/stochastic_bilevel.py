@@ -1,0 +1,216 @@
+"""Stochastic vs full-batch bilevel hypergradients at growing dataset size.
+
+Part A — strongly-convex quadratic (per-feature-regularized ridge
+regression, hypergradient w.r.t. the d log-regularizers): at each dataset
+size ``n`` the full-batch baseline runs ``GradientDescent`` over all ``n``
+examples with the converged exact backward, while the stochastic path runs
+one epoch of minibatch ``SGD`` (B=64) with Polyak tail averaging and takes
+the hypergradient at the averaged iterate through a
+``SampledJacobianOperator`` (the class-default ``neumann_k`` + Jacobi
+treatment).  Both are timed end-to-end (inner solve + backward) and the
+hypergradient **cosine similarity** between the two is asserted ≥ 0.9 —
+a drifted stochastic hypergradient raises instead of emitting a row.
+
+Part B — the data-scale LM demo, compacted: domain reweighting of a
+``SyntheticLMStream`` training set (n ≥ 64·B examples) with a stochastic
+``Adam`` inner solver.  Emits the stochastic-vs-full hypergrad cosine at
+θ₀ (asserted ≥ 0.9) and the outer validation-loss drop over a short
+``solve_bilevel`` run (asserted > 0).
+
+Row format::
+
+    stochastic_quad_full_n<n>  , us , n=..,residual=..
+    stochastic_quad_sgd_n<n>_B64 , us , n=..,cos=..,est=..,speedup=..x
+    stochastic_lm_datascale_B<B> , us , n=..,cos=..,val_drop=..
+
+Run: PYTHONPATH=src python -m benchmarks.run --only stochastic
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_fn
+from repro.core import GradientDescent, bilevel
+from repro.stochastic import SGD, Adam, MinibatchSampler
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _cosine(g1, g2):
+    """Cosine similarity between two gradient pytrees."""
+    l1 = jax.tree_util.tree_leaves(g1)
+    l2 = jax.tree_util.tree_leaves(g2)
+    dot = sum(jnp.vdot(a, b).real for a, b in zip(l1, l2))
+    n1 = jnp.sqrt(sum(jnp.vdot(a, a).real for a in l1))
+    n2 = jnp.sqrt(sum(jnp.vdot(b, b).real for b in l2))
+    return float(dot / jnp.maximum(n1 * n2, 1e-30))
+
+
+# ---------------------------------------------------------------------------
+# Part A: quadratic, growing n
+# ---------------------------------------------------------------------------
+
+def _quad_point(emit_fn, n, d=16, B=64, seed=0):
+    key = jax.random.PRNGKey(seed)
+    kx, kw, ke = jax.random.split(key, 3)
+    X = jax.random.normal(kx, (n, d)) / jnp.sqrt(d)
+    w_true = jax.random.normal(kw, (d,))
+    y = X @ w_true + 0.1 * jax.random.normal(ke, (n,))
+    lam = jnp.full((d,), -2.0)          # per-feature log-regularizers
+
+    def fun(w, batch, lam):
+        Xb, yb = batch
+        r = Xb @ w - yb
+        return 0.5 * jnp.mean(r ** 2) + 0.5 * jnp.sum(jnp.exp(lam) * w ** 2)
+
+    def outer_loss(w, lam):
+        return 0.5 * jnp.sum((w - w_true) ** 2)
+
+    w0 = jnp.zeros(d)
+
+    # full-batch baseline: converged GD + converged exact backward
+    full = GradientDescent(lambda w, lam: fun(w, (X, y), lam),
+                           stepsize=0.5, maxiter=400, tol=1e-10,
+                           solve="cg")
+
+    def hyper_full(lam):
+        return jax.grad(lambda t: outer_loss(full.run(w0, t)[0], t))(lam)
+
+    hyper_full = jax.jit(hyper_full)
+    g_full = hyper_full(lam)
+    t_full = time_fn(lambda: hyper_full(lam), iters=3)
+    x_full, info_full = jax.jit(full.run)(w0, lam)
+    emit_fn(f"stochastic_quad_full_n{n}", t_full,
+            f"n={n},residual={float(info_full.error):.1e}")
+
+    # stochastic path: one epoch of SGD, Polyak tail, sampled backward
+    sampler = MinibatchSampler(data=(X, y), batch_size=B, seed=seed)
+    sgd = SGD(fun, sampler=sampler,
+              stepsize=lambda k: 0.5 / (1.0 + 0.02 * k),
+              epochs=1, averaging="polyak",
+              average_from=sampler.num_batches // 2,
+              backward_batches=4, backward_iters=10)
+
+    def hyper_sgd(lam):
+        return jax.grad(lambda t: outer_loss(sgd.run(w0, t)[0], t))(lam)
+
+    hyper_sgd = jax.jit(hyper_sgd)
+    g_sgd = hyper_sgd(lam)
+    t_sgd = time_fn(lambda: hyper_sgd(lam), iters=3)
+    cos = _cosine(g_sgd, g_full)
+    if cos < 0.9:
+        raise RuntimeError(
+            f"stochastic_quad n={n}: hypergrad cosine {cos:.3f} < 0.9 "
+            "against the full-batch baseline")
+    ct = jax.grad(outer_loss, argnums=0)(sgd.run(w0, lam)[0], lam)
+    est = float(sgd.estimate_hypergrad_error(sgd.run(w0, lam)[0], lam,
+                                             cotangent=ct))
+    emit_fn(f"stochastic_quad_sgd_n{n}_B{B}", t_sgd,
+            f"n={n},cos={cos:.3f},est={est:.2e},"
+            f"speedup={t_full / t_sgd:.1f}x")
+
+
+# ---------------------------------------------------------------------------
+# Part B: LM data-scale demo (compact)
+# ---------------------------------------------------------------------------
+
+def _lm_datascale(emit_fn, outer_steps=4):
+    from repro.data.pipeline import DataConfig, SyntheticLMStream
+
+    vocab, seq_len, B = 32, 8, 16
+    steps_per_domain = 16               # 2 × 16 × 32 = 1024 = 64·B examples
+
+    def collect(seed, corrupt):
+        cfg = DataConfig(vocab_size=vocab, seq_len=seq_len,
+                         global_batch=32, seed=seed)
+        stream = SyntheticLMStream(cfg)
+        xs, ys = zip(*(stream.batch_at(s) for s in range(steps_per_domain)))
+        x, y = np.concatenate(xs, axis=0), np.concatenate(ys, axis=0)
+        if corrupt:
+            rng = np.random.default_rng(seed + 999)
+            y = rng.integers(0, vocab, size=y.shape).astype(np.int32)
+        return x, y
+
+    x0, y0 = collect(0, corrupt=False)
+    x1, y1 = collect(1, corrupt=True)
+    x = np.concatenate([x0, x1], axis=0)
+    y = np.concatenate([y0, y1], axis=0)
+    dom = np.concatenate([np.zeros(len(x0), np.int32),
+                          np.ones(len(x1), np.int32)])
+    n = len(x)
+    assert n >= 64 * B, (n, B)          # dataset ≥ 64× minibatch
+
+    val_stream = SyntheticLMStream(DataConfig(
+        vocab_size=vocab, seq_len=seq_len, global_batch=32, seed=0))
+    xv, yv = zip(*(val_stream.batch_at(steps_per_domain + s)
+                   for s in range(4)))
+    xv = jnp.asarray(np.concatenate(xv, axis=0))
+    yv = jnp.asarray(np.concatenate(yv, axis=0))
+
+    def example_ce(W, xb, yb):
+        logp = jax.nn.log_softmax(W[xb], axis=-1)
+        ce = -jnp.take_along_axis(logp, yb[..., None], axis=-1)[..., 0]
+        return jnp.mean(ce, axis=-1)
+
+    def fun(W, batch, lam):
+        xb, (yb, db) = batch
+        mix = jax.nn.softmax(lam)
+        return (jnp.mean(2.0 * mix[db] * example_ce(W, xb, yb))
+                + 1e-2 * jnp.sum(W ** 2))
+
+    def outer_loss(W, lam):
+        return jnp.mean(example_ce(W, xv, yv))
+
+    sampler = MinibatchSampler(
+        data=(jnp.asarray(x), (jnp.asarray(y), jnp.asarray(dom))),
+        batch_size=B, seed=0)
+    adam = Adam(fun, sampler=sampler, stepsize=5e-2, epochs=2,
+                averaging="polyak", average_from=sampler.num_batches,
+                backward="exact", solve="cg", precond=None,
+                backward_batches=4, linsolve_tol=1e-4, linsolve_maxiter=100)
+    W0 = jnp.zeros((vocab, vocab))
+    lam0 = jnp.zeros(2)
+
+    # stochastic-vs-full hypergrad cosine at θ₀
+    def hyper_sto(lam):
+        return jax.grad(lambda t: outer_loss(adam.run(W0, t)[0], t))(lam)
+
+    full = GradientDescent(lambda W, lam: fun(W, sampler.data, lam),
+                           stepsize=2.0, maxiter=300, tol=1e-8, solve="cg")
+
+    def hyper_full(lam):
+        return jax.grad(lambda t: outer_loss(full.run(W0, t)[0], t))(lam)
+
+    g_sto = jax.jit(hyper_sto)(lam0)
+    g_full = jax.jit(hyper_full)(lam0)
+    cos = _cosine(g_sto, g_full)
+    if cos < 0.9:
+        raise RuntimeError(
+            f"stochastic_lm_datascale: hypergrad cosine {cos:.3f} < 0.9 "
+            "against the full-batch baseline")
+
+    # short outer run: validation loss must decrease
+    t = time_fn(lambda: jax.jit(hyper_sto)(lam0), iters=2)
+    sol = bilevel.solve_bilevel(outer_loss, adam, lam0, W0,
+                                outer_steps=outer_steps, outer_lr=2.0,
+                                momentum=0.5)
+    val_drop = float(sol.outer_values[0] - sol.outer_values[-1])
+    if val_drop <= 0.0:
+        raise RuntimeError(
+            f"stochastic_lm_datascale: outer val loss did not decrease "
+            f"({sol.outer_values[0]:.4f} -> {sol.outer_values[-1]:.4f})")
+    emit_fn(f"stochastic_lm_datascale_B{B}", t,
+            f"n={n},cos={cos:.3f},val_drop={val_drop:.2e}")
+
+
+def run(emit_fn, smoke: bool = False):
+    """Sweep dataset sizes (Part A) and run the LM data-scale demo (B)."""
+    sizes = (1024, 4096) if smoke else (1024, 4096, 16384)
+    for n in sizes:
+        _quad_point(emit_fn, n)
+    _lm_datascale(emit_fn, outer_steps=3 if smoke else 6)
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    run(emit, smoke=True)

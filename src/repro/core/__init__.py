@@ -3,8 +3,8 @@
 Public API re-exports:
   pytree-native linear operators (the shared matvec abstraction under the
   solve registry, the diff API, the runtime and the kernels):
-    LinearOperator protocol, JacobianOperator, DenseOperator, RidgeShifted,
-    BlockDiagonal, ComposedOperator, as_operator
+    LinearOperator protocol, JacobianOperator, SampledJacobianOperator,
+    DenseOperator, RidgeShifted, BlockDiagonal, ComposedOperator, as_operator
                                — repro.core.operators
   implicit-diff API (mode-polymorphic: one wrapper serves jax.grad/jacrev
   AND jax.jvp/jacfwd):
@@ -31,7 +31,8 @@ namespace by ``implicit_diff`` the *function* (the API entry point);
 ``import repro.core.implicit_diff`` still reaches the submodule.
 """
 from repro.core.operators import (LinearOperator, JacobianOperator,
-                                  DenseOperator, RidgeShifted, BlockDiagonal,
+                                  SampledJacobianOperator, DenseOperator,
+                                  RidgeShifted, BlockDiagonal,
                                   ComposedOperator, as_operator)
 from repro.core.implicit_diff import (custom_root, custom_fixed_point,
                                       custom_root_jvp, custom_fixed_point_jvp,

@@ -237,7 +237,12 @@ def solve_bilevel(outer_loss: Callable,
     solver running an approximate mode (and ``error_estimate=True``, the
     default), each step's ``inner_info.hypergrad_error_estimate`` reports
     the relative residual of the cotangent system at the outer loss's
-    cotangent — the error-vs-cost accounting of the cheap modes.
+    cotangent — the error-vs-cost accounting of the cheap modes.  A
+    stochastic inner solver (``repro.stochastic.StochasticSolver``) gets
+    the same accounting even under ``backward="exact"``: its backward
+    system is built from *sampled* minibatches, so the estimate re-measures
+    the residual against the full-batch operator, capturing the operator
+    sampling error on top of any truncation error.
     """
     implicit_solver = _make_inner_runner(
         inner_solver, inner_objective, fixed_point, solve, inner_tol,
@@ -257,8 +262,14 @@ def solve_bilevel(outer_loss: Callable,
 
     est_solver = getattr(implicit_solver, "solver", None)
     estimate_fn = None
-    if est_solver is not None and est_solver.backward != "exact" \
-            and est_solver.error_estimate:
+    # Approximate backward modes AND stochastic inner solvers both deliver a
+    # hypergradient whose backward system differs from the exact full-batch
+    # one — a StochasticSolver solves against a sampled Jacobian operator
+    # even under backward="exact".  Either way the estimate re-measures the
+    # cotangent residual against the FULL-batch operator.
+    if est_solver is not None and est_solver.error_estimate and (
+            est_solver.backward != "exact"
+            or getattr(est_solver, "is_stochastic", False)):
         def estimate_fn(x_star, theta):
             ct = jax.grad(outer_loss, argnums=0)(x_star, theta)
             return est_solver.estimate_hypergrad_error(x_star, theta,

@@ -142,6 +142,19 @@ class ImplicitDiffSpec:
     return_info=True)``, ``IterativeSolver.estimate_hypergrad_error``) spend
     one extra matvec on the relative-residual honesty check.
 
+    ``system_operator`` overrides how the implicit system's ``A`` is
+    *built* (not how it is solved): a factory
+    ``(x_star, theta_args, *, symmetric) -> LinearOperator`` returning the
+    full ``A = -∂₁F(x*, θ)`` **including the negation**, where
+    ``symmetric`` is the routing layer's certification hint (``True`` when
+    the routed solver is symmetric-only, else ``None`` — the factory may
+    strengthen it from structural knowledge, e.g. a sampled Hessian of a
+    per-batch gradient mapping).  This is how the stochastic layer swaps
+    in a ``SampledJacobianOperator`` whose matvec averages Hessian-vector
+    products over resampled minibatches while ``B = ∂₂F`` stays exact.
+    The factory is called with the same ``theta`` tuple the residual
+    receives.  Mutually exclusive with ``sharding``.
+
     ``sharding`` (a ``repro.distributed.sharded_operators.SolveSharding``)
     places the implicit system on a mesh: the ``JacobianOperator`` inherits
     the primal solution's mesh + PartitionSpecs, the classic solver names
@@ -166,8 +179,13 @@ class ImplicitDiffSpec:
     backward: str = "exact"
     backward_iters: int = 8
     error_estimate: bool = True
+    system_operator: Optional[Callable] = None
 
     def __post_init__(self):
+        if self.system_operator is not None and self.sharding is not None:
+            raise ValueError(
+                "system_operator and sharding are mutually exclusive: a "
+                "factory-built system has no mesh placement contract")
         if self.optimality_fun is not None and \
                 self.fixed_point_fun is not None:
             raise ValueError("provide at most one of optimality_fun / "
@@ -226,7 +244,8 @@ class ImplicitDiffSpec:
 # ---------------------------------------------------------------------------
 
 def _implicit_system_operator(F: Callable, x_star, theta_args: tuple,
-                              solve, sharding=None) -> ops.LinearOperator:
+                              solve, sharding=None,
+                              system_operator=None) -> ops.LinearOperator:
     """``A = -∂₁F(x*, θ)`` as a ``JacobianOperator``.
 
     The symmetry flag is set at construction — routing a symmetric-only
@@ -234,6 +253,11 @@ def _implicit_system_operator(F: Callable, x_star, theta_args: tuple,
     every downstream consumer (transpose reuse, ``custom_linear_solve``'s
     ``symmetric=``, route validation, preconditioner derivation) reads it
     off the operator.
+
+    ``system_operator`` (see ``ImplicitDiffSpec``) replaces the default
+    construction entirely: the factory receives ``(x_star, theta_args)``
+    plus the certification hint and must return the full (negated)
+    operator — e.g. the stochastic layer's ``SampledJacobianOperator``.
 
     With ``sharding`` set, the operator is placed on the mesh: the primal
     point and every theta argument become ``shard_map`` operands (specs
@@ -243,6 +267,19 @@ def _implicit_system_operator(F: Callable, x_star, theta_args: tuple,
     """
     certified = solve != "auto" and ls.solver_is_symmetric(solve)
     sym = True if certified else None
+    if system_operator is not None:
+        if sharding is not None:
+            raise ValueError("system_operator and sharding are mutually "
+                             "exclusive")
+        A = system_operator(x_star, theta_args, symmetric=sym)
+        if not isinstance(A, ops.LinearOperator):
+            raise TypeError("system_operator factory must return a "
+                            f"LinearOperator; got {type(A)!r}")
+        if certified and A.symmetric is False:
+            raise ValueError(
+                f"routed solver {solve!r} is symmetric-only but the "
+                "system_operator factory declared symmetric=False")
+        return A
     if sharding is None:
         return ops.JacobianOperator(
             lambda x: F(x, *theta_args), x_star, negate=True, symmetric=sym)
@@ -301,7 +338,8 @@ def root_vjp(F: Callable, x_star, theta_args: tuple, cotangent,
              solve="normal_cg", tol: float = 1e-6, maxiter: int = 1000,
              ridge: float = 0.0, precond=None, sharding=None,
              backward: str = "exact", backward_iters: int = 8,
-             error_estimate: bool = False, return_info: bool = False):
+             error_estimate: bool = False, return_info: bool = False,
+             system_operator=None):
     """VJP through the implicitly-defined root: returns vᵀ ∂x*(θ) per θ arg.
 
     Solve Aᵀ u = v  (A = -∂₁F),  then  vᵀJ = uᵀB  (B = ∂₂F).
@@ -328,7 +366,8 @@ def root_vjp(F: Callable, x_star, theta_args: tuple, cotangent,
     # solvers — no host gather).
     if backward != "exact":
         _check_approx_routing(precond, sharding)
-    A = _implicit_system_operator(F, x_star, theta_args, solve, sharding)
+    A = _implicit_system_operator(F, x_star, theta_args, solve, sharding,
+                                  system_operator)
     out = _backward_apply(
         A.T, cotangent, solve=solve, tol=tol, maxiter=maxiter, ridge=ridge,
         precond=precond, backward=backward, backward_iters=backward_iters,
@@ -348,7 +387,8 @@ def root_jvp(F: Callable, x_star, theta_args: tuple, tangents: tuple,
              solve="normal_cg", tol: float = 1e-6, maxiter: int = 1000,
              ridge: float = 0.0, precond=None, sharding=None,
              backward: str = "exact", backward_iters: int = 8,
-             error_estimate: bool = False, return_info: bool = False):
+             error_estimate: bool = False, return_info: bool = False,
+             system_operator=None):
     """JVP through the implicitly-defined root: J · v.
 
     Solve A (Jv) = B v  with  Bv = ∂₂F · v  computed by one JVP of F in θ.
@@ -364,7 +404,8 @@ def root_jvp(F: Callable, x_star, theta_args: tuple, tangents: tuple,
         return F(x_star, *targs)
 
     _, Bv = jax.jvp(f_of_theta, theta_args, tangents)
-    A = _implicit_system_operator(F, x_star, theta_args, solve, sharding)
+    A = _implicit_system_operator(F, x_star, theta_args, solve, sharding,
+                                  system_operator)
     out = _backward_apply(
         A, Bv, solve=solve, tol=tol, maxiter=maxiter, ridge=ridge,
         precond=precond, backward=backward, backward_iters=backward_iters,
@@ -493,8 +534,11 @@ def _tangent_root_solve(spec: ImplicitDiffSpec, residual: Callable, x_star,
 
     # One JacobianOperator per direction: A = -∂₁F(x*, θ), with the
     # symmetry certificate picked up at construction (see
-    # ``_implicit_system_operator``).
-    A = _implicit_system_operator(residual, x_star, theta, spec.solve)
+    # ``_implicit_system_operator``).  A spec-level system_operator factory
+    # (the stochastic layer's sampled Hessian) replaces the construction;
+    # B θ̇ above stays the exact ∂₂F — only A is sampled.
+    A = _implicit_system_operator(residual, x_star, theta, spec.solve,
+                                  system_operator=spec.system_operator)
 
     if spec.backward != "exact" and not transposable:
         return ls.approx_inverse_apply(
@@ -634,8 +678,9 @@ def _wrap_vjp(spec: ImplicitDiffSpec, solver: Callable):
             return residual(x, *_merge_theta(nondiff_idx, nondiff_vals, dts))
 
         grads = root_vjp(F_diff, x_star, diff_theta, ct, solve=spec.solve,
-                         sharding=spec.sharding, **spec.routing_kwargs(),
-                         **spec.backward_kwargs())
+                         sharding=spec.sharding,
+                         system_operator=spec.system_operator,
+                         **spec.routing_kwargs(), **spec.backward_kwargs())
         zero_init = jax.tree_util.tree_map(jnp.zeros_like, init)
         return (zero_init,) + tuple(grads)
 

@@ -340,6 +340,71 @@ class JacobianOperator(LinearOperator):
             else out
 
 
+class SampledJacobianOperator(LinearOperator):
+    """Monte-Carlo estimate of an expectation Jacobian ``E_b[∂₁f(x₀, b)]``.
+
+    ``fun(x, batch)`` maps the domain pytree to itself for one minibatch
+    (the canonical case: a minibatch gradient mapping, whose Jacobian is a
+    minibatch Hessian); ``batches`` is a pytree whose leaves carry a
+    leading resample axis of length ``k``.  ``matvec`` vmaps one JVP per
+    batch and averages over the resample axis — ``k`` Hessian-vector
+    products per application when ``fun`` is a gradient mapping.  The
+    average is an unbiased estimate of the full-batch Jacobian-vector
+    product whose variance shrinks like ``1/k``; when the ``k`` batches
+    are equal-sized and partition the dataset, the average IS the
+    full-batch product exactly (the stochastic implicit-diff layer's
+    ``backward_data="full"`` escape hatch relies on this identity).
+
+    ``negate`` flips the sign (the implicit system solves against
+    ``A = -∂₁F``); ``symmetric=True`` certifies every per-batch Jacobian
+    is symmetric (``fun`` a per-batch gradient mapping), which makes the
+    mean symmetric and lets the cotangent solve reuse ``matvec``.
+    """
+
+    def __init__(self, fun: Callable, primal, batches, *,
+                 negate: bool = False, batch_ndim: int = 0,
+                 symmetric: Optional[bool] = None,
+                 positive_definite: bool = False):
+        super().__init__(primal, batch_ndim=batch_ndim, symmetric=symmetric,
+                         positive_definite=positive_definite)
+        leaves = jax.tree_util.tree_leaves(batches)
+        if not leaves:
+            raise ValueError("batches must be a non-empty pytree whose "
+                             "leaves carry a leading resample axis")
+        self.fun = fun
+        self.primal = primal
+        self.batches = batches
+        self.negate = negate
+        self.num_samples = int(leaves[0].shape[0])
+
+    def _mean(self, stacked):
+        sign = -1.0 if self.negate else 1.0
+        return jax.tree_util.tree_map(
+            lambda leaf: sign * jnp.mean(leaf, axis=0), stacked)
+
+    def matvec(self, v):
+        """Resample-averaged JVP of the per-batch map at the primal."""
+        def one(batch):
+            _, jv = jax.jvp(lambda x: self.fun(x, batch),
+                            (self.primal,), (v,))
+            return jv
+
+        return self._mean(jax.vmap(one)(self.batches))
+
+    def rmatvec(self, v):
+        """Resample-averaged VJP (reuses ``matvec`` under declared
+        symmetry).  Linearized per call, not cached on the instance — see
+        ``LinearOperator.rmatvec``."""
+        if self.symmetric:
+            return self.matvec(v)
+
+        def one(batch):
+            _, vjp_fun = jax.vjp(lambda x: self.fun(x, batch), self.primal)
+            return vjp_fun(v)[0]
+
+        return self._mean(jax.vmap(one)(self.batches))
+
+
 class DenseOperator(LinearOperator):
     """An explicit matrix ``(d, d)`` (or batched ``(B, d, d)``) acting on
     pytrees through a ravel.  ``diagonal``/``materialize`` are O(1)."""

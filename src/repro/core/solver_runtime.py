@@ -302,6 +302,7 @@ class IterativeSolver:
         _, info = diff_api.root_vjp(
             spec.residual_fun, params, theta, cotangent, solve=spec.solve,
             sharding=spec.sharding, error_estimate=True, return_info=True,
+            system_operator=spec.system_operator,
             **spec.routing_kwargs(), **spec.backward_kwargs())
         return info.hypergrad_error_estimate
 

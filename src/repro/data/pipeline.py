@@ -68,33 +68,110 @@ class SyntheticLMStream:
 
 
 class PrefetchIterator:
-    """Background-thread double buffering (overlap data gen with compute)."""
+    """Background-thread double buffering with seekable random access.
+
+    Sequential use is unchanged: ``next(it)`` yields ``(step, batch)`` in
+    order from ``start_step``.  On top of that:
+
+      * ``batch_at(step)`` — a *seekable* accessor: consecutive steps are
+        served straight from the prefetch buffer; any other step seeks
+        (discarding stale buffered batches via a generation counter) and
+        resumes prefetching from there.  This is what lets consumers that
+        address data by step — ``repro.stochastic.MinibatchSampler`` and
+        restart-after-preemption training loops — sit on a prefetched
+        stream without giving up determinism.
+      * clean shutdown — ``close()`` is idempotent, signals the worker and
+        *joins* the thread; the context-manager form scopes it.  ``daemon``
+        stays True by default (an unclosed iterator never blocks
+        interpreter exit) but can be disabled where dangling daemon
+        threads are unwanted (e.g. under test runners that assert on
+        thread leaks).
+    """
 
     def __init__(self, stream: SyntheticLMStream, start_step: int = 0,
-                 depth: int = 2):
+                 depth: int = 2, daemon: bool = True):
         self.stream = stream
         self.q: "queue.Queue" = queue.Queue(maxsize=depth)
         self.step = start_step
+        self._lock = threading.Lock()
+        self._gen = 0               # bumped by seek(); stale batches dropped
+        self._produce_step = start_step
+        self._next_step = start_step
         self._stop = threading.Event()
-        self.thread = threading.Thread(target=self._worker, daemon=True)
+        self.thread = threading.Thread(target=self._worker, daemon=daemon)
         self.thread.start()
 
     def _worker(self):
-        step = self.step
         while not self._stop.is_set():
+            with self._lock:
+                gen, step = self._gen, self._produce_step
+                self._produce_step = step + 1
             batch = self.stream.batch_at(step)
             while not self._stop.is_set():
+                with self._lock:
+                    if gen != self._gen:    # a seek invalidated this batch
+                        break
                 try:
-                    self.q.put((step, batch), timeout=0.1)
+                    self.q.put((gen, step, batch), timeout=0.1)
                     break
                 except queue.Full:
                     continue
-            step += 1
+
+    def __iter__(self):
+        return self
 
     def __next__(self):
-        step, batch = self.q.get()
-        return step, batch
+        while True:
+            try:
+                gen, step, batch = self.q.get(timeout=0.1)
+            except queue.Empty:
+                if self._stop.is_set():
+                    raise StopIteration from None
+                continue
+            if gen != self._gen:            # drop batches from before a seek
+                continue
+            self._next_step = step + 1
+            return step, batch
+
+    def seek(self, step: int):
+        """Restart prefetching at ``step``; buffered batches are discarded.
+
+        The generation counter makes this race-free against the worker: a
+        batch produced under an old generation is dropped at the queue (by
+        the worker) or at the consumer (by ``__next__``), never served.
+        """
+        with self._lock:
+            self._gen += 1
+            self._produce_step = step
+            self._next_step = step
+        while True:                          # drain stale buffered batches
+            try:
+                self.q.get_nowait()
+            except queue.Empty:
+                return
+
+    def batch_at(self, step: int):
+        """The batch for ``step`` — buffered when sequential, seek otherwise.
+
+        Equivalent to ``stream.batch_at(step)`` (the stream is a pure
+        function of ``(seed, step)``) but served from the prefetch buffer
+        whenever ``step`` continues the current run.
+        """
+        if step != self._next_step:
+            self.seek(step)
+        got, batch = next(self)
+        assert got == step, (got, step)
+        return batch
 
     def close(self):
+        """Stop the worker and join it (idempotent)."""
         self._stop.set()
-        self.thread.join(timeout=2)
+        if self.thread.is_alive():
+            self.thread.join(timeout=2)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

@@ -1,0 +1,36 @@
+"""Stochastic inner solvers: minibatch bilevel optimization at data scale.
+
+The subsystem that lets implicit differentiation ride on *stochastic*
+inner solvers (the paper only needs an approximate root of the optimality
+mapping — Blondel et al. 2022, §3.3):
+
+  * :class:`MinibatchSampler` — deterministic ``(seed, step)``-keyed
+    sampling: indices host-side (trace-time constants), gathers on
+    device; restart-safe and jit/vmap-safe.
+  * :class:`StochasticSolver` — the protocol on the ``IterativeSolver``
+    seam, optimality declared in expectation; :class:`SGD`,
+    :class:`MomentumSGD`, :class:`Adam` instances;
+    :func:`run_stochastic` the shared scan driver with Polyak/EMA
+    averaging and a full-batch residual diagnostic.
+  * implicit diff at the averaged iterate through a sampled Jacobian
+    operator (``repro.core.SampledJacobianOperator``) and the PR-7
+    approximate backward modes.
+  * :func:`make_stochastic_train_step` / :func:`stochastic_data_iter` —
+    host-side adapters onto ``repro.runtime.train_loop``.
+
+See ``docs/stochastic.md`` for the contracts and a data-scale
+reweighting walkthrough.
+"""
+from repro.stochastic.sampler import MinibatchSampler
+from repro.stochastic.solvers import (AVERAGING_MODES, BACKWARD_DATA_MODES,
+                                      Adam, MomentumSGD, SGD,
+                                      StochasticSolver, run_stochastic)
+from repro.stochastic.host import (make_stochastic_train_step,
+                                   stochastic_data_iter)
+
+__all__ = [
+    "MinibatchSampler",
+    "StochasticSolver", "SGD", "MomentumSGD", "Adam", "run_stochastic",
+    "AVERAGING_MODES", "BACKWARD_DATA_MODES",
+    "make_stochastic_train_step", "stochastic_data_iter",
+]

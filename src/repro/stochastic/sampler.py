@@ -1,0 +1,145 @@
+"""Deterministic ``(seed, step)``-keyed minibatch sampling.
+
+The stochastic solver layer declares its optimality mapping *in
+expectation* over a data distribution; everything downstream (restart
+safety, bit-identical replays, variance-reduced backward operators)
+hinges on minibatch selection being a pure function of ``(seed, step)``.
+:class:`MinibatchSampler` therefore computes indices **host-side** with
+NumPy (so they are trace-time constants — jit/vmap never see data
+movement logic) and gathers rows **on device** with ``jnp.take``.
+
+Two independent index streams are derived from the same seed:
+
+* the *forward* stream ``(seed, 0, step)`` drives the training
+  minibatches consumed by :func:`repro.stochastic.run_stochastic`;
+* the *backward* stream ``(seed, 1, j)`` draws the ``k`` resampled
+  minibatches that :class:`repro.core.SampledJacobianOperator` averages
+  Hessian-vector products over.
+
+Keeping the streams disjoint means the backward operator's variance is
+independent of where the forward loop stopped.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _leading_dim(data: Any) -> int:
+    """The (common) leading-axis length of every leaf in ``data``."""
+    leaves = jax.tree_util.tree_leaves(data)
+    if not leaves:
+        raise ValueError("MinibatchSampler needs a non-empty data pytree.")
+    sizes = {int(np.shape(leaf)[0]) for leaf in leaves}
+    if len(sizes) != 1:
+        raise ValueError(
+            f"data leaves disagree on leading axis length: {sorted(sizes)}")
+    return sizes.pop()
+
+
+@dataclasses.dataclass(frozen=True)
+class MinibatchSampler:
+    """Deterministic, restart-safe minibatch sampler over an in-memory pytree.
+
+    ``data`` is any pytree whose leaves share a leading example axis of
+    length ``n``; a minibatch is the same pytree with the leading axis
+    gathered down to ``batch_size``.  Sampling is *without replacement
+    within a batch* and keyed purely by ``(seed, step)``: the same seed
+    replays the identical index trajectory, and a run restarted at step
+    ``k`` continues exactly where the original left off.
+    """
+
+    data: Any
+    batch_size: int
+    seed: int = 0
+
+    def __post_init__(self):
+        """Validate the batch size against the dataset length."""
+        n = self.num_examples
+        if not 0 < self.batch_size <= n:
+            raise ValueError(
+                f"batch_size={self.batch_size} must be in [1, n={n}]")
+
+    @property
+    def num_examples(self) -> int:
+        """Dataset length ``n`` (leading-axis length of every leaf)."""
+        return _leading_dim(self.data)
+
+    @property
+    def num_batches(self) -> int:
+        """Minibatches per epoch, ``n // batch_size``."""
+        return self.num_examples // self.batch_size
+
+    def _rng(self, *key: int) -> np.random.Generator:
+        """A NumPy generator keyed by ``(seed, *key)`` (pure, host-side)."""
+        return np.random.default_rng(
+            np.random.SeedSequence((self.seed,) + key))
+
+    def indices(self, step: int) -> np.ndarray:
+        """Forward-stream indices for ``step``: shape ``(batch_size,)``."""
+        return self._rng(0, int(step)).choice(
+            self.num_examples, size=self.batch_size, replace=False)
+
+    def batch_indices(self, start_step: int, num_steps: int) -> np.ndarray:
+        """Stacked forward indices for steps ``[start, start + num)``.
+
+        Shape ``(num_steps, batch_size)`` — the whole index plan of a
+        ``lax.scan`` inner loop, computed host-side at trace time.
+        """
+        return np.stack(
+            [self.indices(s) for s in range(start_step,
+                                            start_step + num_steps)])
+
+    def gather(self, idx) -> Any:
+        """Device-side gather of rows ``idx`` from every data leaf."""
+        idx = jnp.asarray(idx)
+        return jax.tree_util.tree_map(
+            lambda leaf: jnp.take(jnp.asarray(leaf), idx, axis=0), self.data)
+
+    def batch_at(self, step: int) -> Any:
+        """The minibatch for ``step`` — pure in ``(seed, step)``."""
+        return self.gather(self.indices(step))
+
+    def backward_batches(self, k: int) -> Any:
+        """``k`` resampled minibatches stacked on a new leading axis.
+
+        Drawn from the backward stream ``(seed, 1, j)`` so they are
+        decorrelated from the forward trajectory; feed the result to
+        :class:`repro.core.SampledJacobianOperator`, whose matvec
+        averages Hessian-vector products over this axis.
+        """
+        idx = np.stack([self._rng(1, j).choice(
+            self.num_examples, size=self.batch_size, replace=False)
+            for j in range(k)])
+        return self.gather(idx)
+
+    @classmethod
+    def from_stream(cls, stream, num_steps: int, *,
+                    batch_size: Optional[int] = None,
+                    seed: Optional[int] = None,
+                    start_step: int = 0) -> "MinibatchSampler":
+        """Materialize a sampler from a ``batch_at(step)`` data stream.
+
+        Concatenates ``num_steps`` consecutive stream batches (e.g. from
+        :class:`repro.data.SyntheticLMStream` or a seekable
+        :class:`repro.data.PrefetchIterator`) along the example axis into
+        one in-memory dataset of ``num_steps * stream_batch`` examples.
+        ``batch_size`` defaults to the stream's own batch size and
+        ``seed`` to the stream config's seed when available.
+        """
+        batches = [stream.batch_at(start_step + s) for s in range(num_steps)]
+        data = jax.tree_util.tree_map(
+            lambda *leaves: jnp.concatenate(leaves, axis=0), *batches)
+        if batch_size is None:
+            batch_size = _leading_dim(batches[0])
+        if seed is None:
+            # SyntheticLMStream carries its DataConfig as .cfg; a
+            # PrefetchIterator exposes the stream one level down.
+            cfg = getattr(stream, "cfg", None) or getattr(
+                getattr(stream, "stream", None), "cfg", None)
+            seed = int(getattr(cfg, "seed", 0))
+        return cls(data=data, batch_size=batch_size, seed=seed)

@@ -16,8 +16,9 @@ import repro.core
 # the submodules that importing repro.core necessarily binds on the package.
 EXPECTED_SURFACE = {
     # pytree-native linear operators
-    "LinearOperator", "JacobianOperator", "DenseOperator", "RidgeShifted",
-    "BlockDiagonal", "ComposedOperator", "as_operator",
+    "LinearOperator", "JacobianOperator", "SampledJacobianOperator",
+    "DenseOperator", "RidgeShifted", "BlockDiagonal", "ComposedOperator",
+    "as_operator",
     # implicit-diff API (mode-polymorphic)
     "ImplicitDiffSpec", "implicit_diff",
     "custom_root", "custom_fixed_point",
@@ -182,6 +183,53 @@ def test_submit_hypergrad_signature():
     solver = repro.core.GradientDescent(lambda x, t: ((x - t) ** 2).sum())
     assert solver.backward == "exact"
     assert solver.diff_spec().backward == "exact"
+
+
+def test_stochastic_public_surface():
+    """The stochastic layer re-exports the data-scale solver seam, and the
+    spec grew the ``system_operator`` hook it plugs into."""
+    import repro.stochastic as sto
+    for name in ("MinibatchSampler", "StochasticSolver", "SGD",
+                 "MomentumSGD", "Adam", "run_stochastic",
+                 "make_stochastic_train_step", "stochastic_data_iter"):
+        assert callable(getattr(sto, name)), name
+    assert sto.AVERAGING_MODES == ("polyak", "ema", "last")
+    assert sto.BACKWARD_DATA_MODES == ("sampled", "full")
+    # the spec hook the sampled backward rides on (None = classic path)
+    fields = set(repro.core.ImplicitDiffSpec.__dataclass_fields__)
+    assert "system_operator" in fields
+    spec = repro.core.ImplicitDiffSpec(optimality_fun=lambda x: x)
+    assert spec.system_operator is None
+    # stochastic instances are IterativeSolvers (one runtime seam) and are
+    # marked for the bilevel driver's error accounting
+    import jax.numpy as jnp
+    sampler = sto.MinibatchSampler(data=jnp.ones((4, 2)), batch_size=2)
+    solver = sto.SGD(lambda x, b, t: jnp.sum(x ** 2), sampler=sampler)
+    assert isinstance(solver, repro.core.IterativeSolver)
+    assert solver.is_stochastic
+    assert solver.backward == "neumann_k"       # truncated by default
+    assert solver.precond == "jacobi"           # the PR-7 pairing
+    assert solver.diff_spec().system_operator is not None
+
+
+def test_bench_smoke_report_includes_stochastic_rows():
+    """The committed smoke report carries the stochastic-vs-full rows with
+    the cosine gate recorded."""
+    import json
+    import os
+
+    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_smoke.json")
+    with open(path) as f:
+        report = json.load(f)
+    assert report["failed"] == []
+    rows = [r for r in report["rows"] if r["name"].startswith("stochastic_")]
+    quad = [r for r in rows if "_sgd_" in r["name"]]
+    lm = [r for r in rows if "lm_datascale" in r["name"]]
+    assert quad and lm, rows
+    for r in quad:
+        assert "cos=" in r["derived"] and "speedup=" in r["derived"], r
+    for r in lm:
+        assert "cos=" in r["derived"] and "val_drop=" in r["derived"], r
 
 
 def test_bench_smoke_report_includes_approx_rows():
