@@ -1,0 +1,108 @@
+"""Offline autotuning sweep: populate the dispatch TuningCache by timing.
+
+Two candidate families, both recorded through ``analysis.autotune`` into
+the process-default ``TuningCache`` (and optionally persisted with
+``--save``, for shipping a pre-tuned cache via ``REPRO_AUTOTUNE_CACHE``):
+
+  * Pallas batched-CG ``(block_b, lanes-padded d')`` schedules per
+    ``(B, d)`` point — after this sweep, ``batched_cg(block_b="auto")``
+    (and therefore ``pallas_cg`` routes, the solve service's buckets and
+    ``IterativeSolver`` backward solves) resolves the measured-fastest
+    tile.  Off-TPU the sweep times the kernel's interpret-mode grid,
+    where ``block_b`` controls the emulated program count — the same
+    schedule trade-off, observable without hardware — so rows are tagged
+    ``interpret-mode`` (excluded from speedup statistics).  The
+    ``tuned_vs_block8`` tag compares the legacy hardcoded schedule
+    against the tuned pick from the SAME measured medians (≥ 1.0x by
+    construction: the legacy schedule is itself a candidate).
+  * solver/mesh candidates at the canonical hypergradient regime
+    (B=64, d=16): the single-device dense route vs ``sharded_cg`` at
+    every admissible mesh extent.  ``auto_mesh_size`` then has measured
+    entries to rank, and the ``dispatch=mesh=<n>`` row documents what it
+    picked (the CI gate asserts the pick never loses to single-device).
+
+Run inside ``benchmarks/run.py --smoke`` (BEFORE the sharded benchmark,
+so auto-dispatch rows downstream see a tuned cache) or standalone::
+
+    python -m benchmarks.autotune_sweep --smoke --save tuned.json
+"""
+import argparse
+
+from benchmarks.common import emit
+
+# (B, d) points for the block-schedule sweep — small on purpose: the
+# interpret-mode grid costs milliseconds per program, and schedule
+# *ranking* only needs the relative tile trade-off.  (64, 16) is the
+# canonical hypergradient regime, where taller tiles beat the legacy
+# block_b=8 by ~3x in the emulated grid.
+BLOCKB_POINTS_SMOKE = [(16, 8), (64, 16)]
+BLOCKB_POINTS_FULL = [(8, 8), (16, 8), (32, 8), (64, 8), (16, 32),
+                      (32, 32), (64, 16), (16, 64)]
+
+# the mesh-crossover regime BENCH_smoke.json showed oversharding at
+MESH_REGIME = (64, 16)
+
+
+def run(emit_fn=emit, smoke: bool = False, save: str = None):
+    import jax
+
+    from repro.analysis import autotune
+
+    cache = autotune.default_cache()
+    backend = autotune.current_backend()
+
+    # --- Pallas batched-CG block-schedule sweep ---------------------------
+    interpret = backend != "tpu"
+    for B, d in (BLOCKB_POINTS_SMOKE if smoke else BLOCKB_POINTS_FULL):
+        recs = autotune.measure_block_schedule(
+            B, d, interpret=interpret, cache=cache,
+            iters=3 if smoke else 5)
+        legacy = autotune.default_block_b(B, d)
+        tuned = autotune.choose_block_b(B, d, cache=cache)
+        ratio = recs[legacy].seconds / recs[tuned].seconds
+        emit_fn(f"autotune_blockb_B{B}_d{d}", recs[tuned].seconds,
+                f"interpret-mode,tuned_vs_block8={ratio:.1f}x,"
+                f"dispatch=block_b={tuned}")
+
+    # --- solver/mesh candidates at the crossover regime -------------------
+    B, d = MESH_REGIME
+    single = autotune.single_device_solver(True, d)
+    rec_si = autotune.measure_solver(single, B, d, cache=cache,
+                                     iters=2 if smoke else 5)
+    emit_fn(f"autotune_single_B{B}_d{d}", rec_si.seconds,
+            f"solver={single},baseline")
+    best = None
+    for m in autotune.mesh_candidates(B):
+        rec = autotune.measure_solver("sharded_cg", B, d, mesh_size=m,
+                                      cache=cache, iters=2 if smoke else 5)
+        emit_fn(f"autotune_mesh{m}_B{B}_d{d}", rec.seconds,
+                f"sharded/single={rec.seconds / rec_si.seconds:.2f}x")
+        if best is None or rec.seconds < best[1]:
+            best = (m, rec.seconds)
+    n_auto = autotune.auto_mesh_size(B, d, cache=cache)
+    t_auto = cache.get(autotune.TuningKey(
+        backend, "sharded_cg", B, d, "float32", n_auto)).seconds
+    emit_fn(f"autotune_mesh_auto_B{B}_d{d}", t_auto,
+            f"sharded/single={t_auto / rec_si.seconds:.2f}x,"
+            f"dispatch=mesh={n_auto}+solver=sharded_cg,auto-selected")
+    assert n_auto == best[0], \
+        f"auto_mesh_size picked {n_auto}, measured best is {best[0]}"
+
+    if save:
+        path = cache.save(save)
+        print(f"saved tuning cache ({len(cache)} entries) to {path}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast sweep (fewer points, fewer timing reps)")
+    ap.add_argument("--save", default=None,
+                    help="persist the populated TuningCache to this path")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(smoke=args.smoke, save=args.save)
+
+
+if __name__ == "__main__":
+    main()

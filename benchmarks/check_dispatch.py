@@ -1,0 +1,68 @@
+"""CI dispatch-regression gate: the autotuner must never CHOOSE a loser.
+
+Reads a BENCH json report and checks every ``auto-selected`` row (the
+mesh extent ``auto_mesh_size`` actually picked, tagged
+``dispatch=mesh=<n>`` by ``benchmarks/sharded_solve.py`` and
+``benchmarks/autotune_sweep.py``): its ``sharded/single`` ratio must
+stay ≤ the threshold (default 1.1).  Individual sweep rows MAY lose —
+that's the curve the tuner learns from — but the selected point losing
+means the cost model regressed.
+
+Usage::
+
+    python -m benchmarks.check_dispatch BENCH_sharded.json [--max-ratio 1.1]
+
+Exits nonzero (naming the offending rows) on regression, or when the
+report contains no auto-selected rows at all (a gate that checks nothing
+must fail loudly, not pass silently).
+"""
+import argparse
+import json
+import re
+import sys
+
+
+def check(report: dict, max_ratio: float = 1.1):
+    """Return (selected_rows, failures) for a parsed BENCH report."""
+    selected, failures = [], []
+    for row in report.get("rows", []):
+        derived = row.get("derived", "")
+        if "auto-selected" not in derived:
+            continue
+        m = re.search(r"sharded/single=([0-9.]+)x", derived)
+        if not m:
+            failures.append(f"{row['name']}: auto-selected row has no "
+                            "sharded/single ratio tag")
+            continue
+        ratio = float(m.group(1))
+        selected.append((row["name"], ratio))
+        if ratio > max_ratio:
+            failures.append(
+                f"{row['name']}: auto-dispatch selected a losing mesh "
+                f"(sharded/single={ratio}x > {max_ratio}x)")
+    if not selected and not failures:
+        failures.append("no auto-selected dispatch rows found in report — "
+                        "the gate has nothing to check (did the autotune/"
+                        "sharded benchmarks run?)")
+    return selected, failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("report", help="BENCH json report path")
+    ap.add_argument("--max-ratio", type=float, default=1.1,
+                    help="max allowed sharded/single for selected meshes")
+    args = ap.parse_args()
+    with open(args.report) as f:
+        report = json.load(f)
+    selected, failures = check(report, args.max_ratio)
+    for name, ratio in selected:
+        print(f"OK {name}: sharded/single={ratio}x <= {args.max_ratio}x")
+    if failures:
+        for msg in failures:
+            print(f"DISPATCH REGRESSION: {msg}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -41,6 +41,25 @@ def emit(name: str, seconds: float, derived: str = ""):
     print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
 
 
+def summarize_dispatch(rows):
+    """Aggregate ``dispatch=<decision>`` derived tags across report rows.
+
+    Every row where the autotuner made a dispatch decision (chosen
+    solver, mesh size, block_b) carries a ``dispatch=`` tag — tokens
+    joined by ``+``, e.g. ``dispatch=mesh=1+solver=sharded_cg`` — so the
+    report documents what the tuner picked.  Returns ``None`` when no
+    row carries one.
+    """
+    decisions = {}
+    for row in rows:
+        m = re.search(r"dispatch=([^,]+)", row.get("derived", ""))
+        if m:
+            decisions[row["name"]] = m.group(1)
+    if not decisions:
+        return None
+    return {"count": len(decisions), "rows": decisions}
+
+
 def summarize_speedups(rows):
     """Aggregate ``speedup=<x>x`` derived tags across report rows.
 

@@ -32,19 +32,24 @@ def run(emit_fn=emit):
     t = time_fn(lambda: wkv(r, kk, vv, w, u, interpret=True)[0], iters=2)
     emit_fn("kernel_rwkv_wkv_interp", t, "interpret-mode")
 
+    # interpret-mode rows assert parity, not speed: problem sizes are the
+    # smallest that still exercise the kernels' grids (PR 9 shrank them —
+    # the old 64x128 / B=16,d=64 shapes cost 170-278 ms/call of pure
+    # interpreter overhead in every smoke run)
     from repro.kernels.simplex_proj.ops import projection_simplex_batched
-    Y = jax.random.normal(key, (64, 128))
+    Y = jax.random.normal(key, (16, 32))
     t = time_fn(lambda: projection_simplex_batched(Y, 1.0, True), iters=2)
     emit_fn("kernel_simplex_proj_interp", t, "interpret-mode")
 
     from repro.kernels.batched_cg.kernel import batched_cg_pallas
     from repro.kernels.batched_cg.ref import batched_cg_ref
-    B, d = 16, 64
+    B, d = 4, 16
     R = jax.random.normal(key, (B, d, d), jnp.float32)
     A = jnp.einsum("bij,bkj->bik", R, R) + 8.0 * jnp.eye(d, dtype=jnp.float32)
     rhs = jax.random.normal(jax.random.fold_in(key, 5), (B, d), jnp.float32)
     t = time_fn(lambda: batched_cg_pallas(A, rhs, tol=1e-6, maxiter=d,
-                                          interpret=True), iters=2)
+                                          block_b=B, interpret=True),
+                iters=2)
     t_ref = time_fn(lambda: batched_cg_ref(A, rhs, tol=1e-6, maxiter=d),
                     iters=3)
     emit_fn("kernel_batched_cg_interp", t,

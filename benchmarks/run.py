@@ -12,6 +12,9 @@ Prints ``name,us_per_call,derived`` CSV rows.
   bilevel batched-vs-looped hypergradients through the solver runtime
   fwdrev  JVP-mode vs VJP-mode implicit Jacobians across (p, d) regimes
   oproute matrix-free vs auto-materialized dense operator-routing crossover
+  autotune offline tuning sweep: Pallas block_b schedules + solver/mesh
+          candidates, recorded into the dispatch TuningCache (runs before
+          "sharded" so downstream auto rows report tuned picks)
   sharded sharded vs single-device hypergradients (device-count scaling;
           run under XLA_FLAGS=--xla_force_host_platform_device_count=8
           for the full curve — the CI multi-device lane does)
@@ -25,22 +28,26 @@ Prints ``name,us_per_call,derived`` CSV rows.
   roofline per-(arch x shape) terms from the dry-run artifacts
 
 ``--smoke`` runs a fast CI subset (kernels + batched + bilevel + fwdrev +
-oproute + sharded + service + approx + stochastic) and writes the rows to
-``BENCH_smoke.json`` (override with ``--out``) for artifact upload.  The
-report's ``speedup_summary`` aggregates every ``speedup=..x`` derived tag,
-excluding interpret-mode Pallas rows (CPU interpreter timings are
-correctness-scale, not perf-scale).
+oproute + autotune + sharded + service + approx + stochastic) and writes
+the rows to ``BENCH_smoke.json`` (override with ``--out``) for artifact
+upload.  The report's ``speedup_summary`` aggregates every ``speedup=..x``
+derived tag, excluding interpret-mode Pallas rows (CPU interpreter timings
+are correctness-scale, not perf-scale); ``dispatch_summary`` collects the
+``dispatch=`` tags documenting every decision the autotuner made (chosen
+solver, mesh size, block_b).
 """
 import argparse
 import sys
 import traceback
 
 
+# "autotune" runs BEFORE "sharded": the sweep populates the in-process
+# TuningCache, so every auto-dispatch row downstream reports tuned picks
 SMOKE_BENCHES = ["kernels", "batched", "bilevel", "fwdrev", "oproute",
-                 "sharded", "service", "approx", "stochastic"]
+                 "autotune", "sharded", "service", "approx", "stochastic"]
 # accept run(emit, smoke=True)
-SMOKE_KWARG_BENCHES = {"batched", "bilevel", "fwdrev", "oproute", "sharded",
-                       "service", "approx", "stochastic"}
+SMOKE_KWARG_BENCHES = {"batched", "bilevel", "fwdrev", "oproute", "autotune",
+                       "sharded", "service", "approx", "stochastic"}
 
 
 def main() -> None:
@@ -53,14 +60,15 @@ def main() -> None:
                     help="JSON report path (with --smoke)")
     args = ap.parse_args()
 
-    from benchmarks import (approx_backward, batched_solve, bilevel_hypergrad,
-                            dictionary_learning, distillation,
-                            fwd_vs_rev_hypergrad, jacobian_precision,
-                            kernels_micro, molecular_dynamics,
-                            operator_routing, roofline_report,
-                            sharded_solve, solve_service,
+    from benchmarks import (approx_backward, autotune_sweep, batched_solve,
+                            bilevel_hypergrad, dictionary_learning,
+                            distillation, fwd_vs_rev_hypergrad,
+                            jacobian_precision, kernels_micro,
+                            molecular_dynamics, operator_routing,
+                            roofline_report, sharded_solve, solve_service,
                             stochastic_bilevel, svm_hyperopt)
-    from benchmarks.common import Collector, emit, summarize_speedups
+    from benchmarks.common import (Collector, emit, summarize_dispatch,
+                                   summarize_speedups)
     all_benches = {
         "fig3": jacobian_precision.run,
         "fig4": svm_hyperopt.run,
@@ -72,6 +80,7 @@ def main() -> None:
         "bilevel": bilevel_hypergrad.run,
         "fwdrev": fwd_vs_rev_hypergrad.run,
         "oproute": operator_routing.run,
+        "autotune": autotune_sweep.run,
         "sharded": sharded_solve.run,
         "service": solve_service.run,
         "approx": approx_backward.run,
@@ -103,6 +112,8 @@ def main() -> None:
         path = emit_fn.write_json(args.out, backend=jax.default_backend(),
                                   failed=failed,
                                   speedup_summary=summarize_speedups(
+                                      emit_fn.rows),
+                                  dispatch_summary=summarize_dispatch(
                                       emit_fn.rows))
         print(f"wrote {path}", file=sys.stderr)
     if failed:

@@ -15,6 +15,12 @@ multi-device lane forces 8 host devices), reporting ``sharded/single``
 time ratios per device count: the scaling curve the ROADMAP's
 sharded-solves item asked for.  On a 1-device process the curve degenerates
 to the n=1 row, which then measures pure shard_map overhead.
+
+The measured curve is fed into the dispatch ``TuningCache``, and a final
+row routes through ``launch.mesh.auto_mesh_size`` — the tuned path the
+examples use — tagged ``dispatch=mesh=<n>`` + ``auto-selected``.  The CI
+dispatch-regression gate (``benchmarks/check_dispatch.py``) asserts that
+row's ratio stays ≤ 1.1: the tuner must never *choose* a losing mesh.
 """
 import functools
 
@@ -26,7 +32,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from benchmarks.common import emit, time_fn
 from repro.core.diff_api import ImplicitDiffSpec, implicit_diff
 from repro.distributed.sharded_operators import SolveSharding
-from repro.launch.mesh import make_solve_mesh
+from repro.launch.mesh import auto_mesh_size, make_solve_mesh
 
 
 def _problem(key, B, m, d):
@@ -95,13 +101,35 @@ def run(emit_fn=emit, smoke: bool = False):
     while n <= n_dev and B % n == 0:
         counts.append(n)
         n *= 2
+    times = {}
     for n in counts:
         mesh = make_solve_mesh(devices=n)
         grad, put = _sharded_grad(mesh, X, y)
         theta_sh = put(theta)
         t_sh = time_fn(lambda: grad(theta_sh), iters=3)
+        times[n] = t_sh
         emit_fn(f"sharded_hypergrad_mesh{n}_B{B}_d{d}", t_sh,
                 f"sharded/single={t_sh / t_single:.2f}x")
+
+    # Feed the measured end-to-end curve into the dispatch TuningCache
+    # (keyed exactly as auto_mesh_size / should_shard look regimes up),
+    # then report the extent the tuned path picks.  These puts overwrite
+    # any raw-solve sweep entries from benchmarks/autotune_sweep.py with
+    # hypergrad-representative timings from THIS process.
+    from repro.analysis import autotune
+    backend = autotune.current_backend()
+    cache = autotune.default_cache()
+    cache.put(autotune.TuningKey(
+        backend, autotune.single_device_solver(True, d), B, d, "float32",
+        1), t_single)
+    for n, t_sh in times.items():
+        cache.put(autotune.TuningKey(
+            backend, "sharded_cg", B, d, "float32", n), t_sh)
+    n_auto = auto_mesh_size(B, d)
+    t_auto = times[n_auto]
+    emit_fn(f"sharded_hypergrad_auto_mesh{n_auto}_B{B}_d{d}", t_auto,
+            f"sharded/single={t_auto / t_single:.2f}x,"
+            f"dispatch=mesh={n_auto}+solver=sharded_cg,auto-selected")
 
 
 if __name__ == "__main__":

@@ -1,1 +1,1 @@
-from repro.analysis import hlo, roofline
+from repro.analysis import autotune, hlo, roofline

@@ -18,6 +18,15 @@ PEAK_FLOPS = 197e12          # bf16 per chip
 HBM_BW = 819e9               # bytes/s per chip
 ICI_BW = 50e9                # bytes/s per link
 
+# Iterative-solve extension (the autotune layer's cold-cache estimate).
+# A psum over instance-sharding axes is latency-bound at solver scales
+# (two scalar reductions per CG iteration), so it is modeled as a fixed
+# per-iteration latency rather than ICI bytes.  Pure *batch* sharding has
+# no cross-device communication at all (the reduce hook is the identity);
+# its real-world overhead is host-side dispatch, which the roofline
+# deliberately omits — that regime is what measured cache entries are for.
+PSUM_LATENCY_S = 1e-6
+
 
 @dataclasses.dataclass
 class RooflineTerms:
@@ -30,6 +39,9 @@ class RooflineTerms:
     model_flops: float
     useful_ratio: float
     chips: int
+    # per-iteration time of an iterative solve (0.0 for the step-level
+    # ``analyze`` path; set by ``analyze_solve``)
+    solve_iteration_s: float = 0.0
 
     @property
     def dominant(self) -> str:
@@ -74,6 +86,62 @@ def analyze(cost: Dict, coll_bytes: float, chips: int,
         model_flops=model_flops,
         useful_ratio=(model_flops / (flops * chips)) if flops else 0.0,
         chips=chips)
+
+
+def expected_solve_iters(d: int) -> int:
+    """Expected Krylov iteration count for a d-dim system.
+
+    CG terminates in at most ``d`` exact-arithmetic steps; at the
+    moderate conditioning the dispatch regimes care about, convergence to
+    typical tolerances takes O(sqrt(kappa)) iterations, which we proxy as
+    ``2·sqrt(d)`` with a floor of 8 (setup iterations dominate tiny
+    systems).
+    """
+    import math
+    return int(min(d, max(8, round(2.0 * math.sqrt(d)))))
+
+
+def analyze_solve(B: int, d: int, *, dtype_bytes: int = 4,
+                  iters: int = None, mesh_size: int = 1,
+                  instance_sharded: bool = False) -> RooflineTerms:
+    """Roofline estimate for one batched iterative solve (B systems, dim d).
+
+    Per iteration, each instance performs one dense-equivalent matvec
+    (2·d² FLOPs, d²·dtype_bytes operator bytes) plus O(d) vector updates;
+    a mesh of ``mesh_size`` chips divides the batch work evenly.  Sharded
+    *instance* dims add one latency-bound ``psum`` per iteration
+    (``PSUM_LATENCY_S``); pure batch sharding communicates nothing.  The
+    returned terms describe the WHOLE solve (``iters`` iterations,
+    defaulting to ``expected_solve_iters(d)``), with the per-iteration
+    time in ``solve_iteration_s``.  This is the autotune layer's
+    cold-cache fallback: relative, not absolute — host-side dispatch
+    overheads are out of model and belong to measured cache entries.
+    """
+    if iters is None:
+        iters = expected_solve_iters(d)
+    iters = max(int(iters), 1)
+    chips = max(int(mesh_size), 1)
+    flops_iter = B * (2.0 * d * d + 6.0 * d)
+    bytes_iter = B * (d * d + 6.0 * d) * float(dtype_bytes)
+    # per-device program cost, mirroring ``analyze``'s SPMD convention
+    per_chip_flops = iters * flops_iter / chips
+    per_chip_bytes = iters * bytes_iter / chips
+    compute_s = per_chip_flops / PEAK_FLOPS
+    memory_s = per_chip_bytes / HBM_BW
+    collective_s = (iters * PSUM_LATENCY_S
+                    if (instance_sharded and chips > 1) else 0.0)
+    model_flops = iters * 2.0 * B * d * d
+    return RooflineTerms(
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        hlo_flops=per_chip_flops,
+        hlo_bytes=per_chip_bytes,
+        collective_bytes=0.0,
+        model_flops=model_flops,
+        useful_ratio=model_flops / (per_chip_flops * chips),
+        chips=chips,
+        solve_iteration_s=max(compute_s, memory_s, collective_s) / iters)
 
 
 def model_flops_train(n_active_params: float, tokens: float) -> float:

@@ -794,12 +794,19 @@ MAX_DENSE_DIM = 512
 def solve_pallas_cg(matvec: Callable, b, *, init=None, tol: float = 1e-6,
                     maxiter: int = 1000, ridge: float = 0.0, precond=None,
                     return_info: bool = False, batch_ndim: int = 0,
-                    interpret: Optional[bool] = None, block_b: int = 8):
+                    interpret: Optional[bool] = None, block_b="auto"):
     """Materialize per-instance operators and run the fused Pallas CG kernel.
 
     Dense small-system regime (d ≤ ``MAX_DENSE_DIM``) that dominates
     hyperopt and DEQ workloads: the whole batch of (d × d) systems iterates
     inside one kernel, VMEM-resident, with per-instance convergence masks.
+
+    ``block_b`` defaults to ``"auto"``: the tile height resolves through
+    the autotuning cache (``analysis.autotune.choose_block_b``) per
+    ``(backend, B, d, dtype)``, falling back to the legacy schedule when
+    the regime was never swept — so the solve service's bucket dispatch
+    and ``IterativeSolver``'s backward solve ride tuned schedules with no
+    caller changes.  Pass an int to pin the schedule by hand.
     """
     if init is not None:
         raise ValueError("pallas_cg always starts from zero; warm starts "
@@ -920,6 +927,17 @@ def _resolve_auto(A, example, precond=None, init=None) -> str:
     a mesh-placed operator reaches runs inside ``shard_map`` with no host
     gather.
 
+    Sharded routing is COST-GATED (PR 9): the structural candidate above
+    only wins when ``analysis.autotune.should_shard`` predicts it beats
+    the single-device path at the operand's mesh size — measured tuning
+    entries first, roofline model cold (which preserves the structural
+    choice for batch sharding until measurements prove a regime loses).
+    A refused regime falls back to the MATRIX-FREE classic solver
+    (``cg``/``normal_cg``): the operator's matvec still runs its own
+    ``shard_map``, but the solve loop stays out of the losing sharded
+    dispatch.  Materializing fallbacks are never chosen — densifying a
+    mesh-placed operator yields per-shard pieces, not the global stack.
+
     Single-device: the dense small-system regime (d ≤ ``MAX_DENSE_DIM``)
     auto-materializes: SPD operators take the fused ``pallas_cg`` kernel
     (falling back to the batched ``dense_gmres`` when a preconditioner or a
@@ -933,11 +951,19 @@ def _resolve_auto(A, example, precond=None, init=None) -> str:
     spd = A.positive_definite if isinstance(A, LinearOperator) else False
     d = _ravel1(example).shape[0]
     if getattr(A, "is_sharded", False):
-        if spd:
-            return "sharded_cg"
-        if d <= MAX_DENSE_DIM and not A.instance_sharded:
-            return "sharded_dense_gmres"
-        return "sharded_normal_cg"
+        from repro.analysis import autotune  # lazy: avoid import cycle
+        Bn, _, dtype = autotune.operator_regime(A)
+        plain = precond is None and init is None
+        if autotune.should_shard(Bn, d, mesh_size=int(A.mesh.size),
+                                 instance_sharded=A.instance_sharded,
+                                 spd=spd, dtype=dtype, precond=precond,
+                                 plain=plain):
+            if spd:
+                return "sharded_cg"
+            if d <= MAX_DENSE_DIM and not A.instance_sharded:
+                return "sharded_dense_gmres"
+            return "sharded_normal_cg"
+        return "cg" if spd else "normal_cg"
     if d <= MAX_DENSE_DIM:
         plain = precond is None and init is None
         return "pallas_cg" if spd and plain else "dense_gmres"
@@ -960,9 +986,36 @@ _SHARDED_UPGRADE = {"cg": "sharded_cg", "normal_cg": "sharded_normal_cg",
                     "lu": "sharded_dense_gmres"}
 
 
-def _upgrade_for_sharded(method, matvec):
-    if not callable(method) and getattr(matvec, "is_sharded", False):
-        return _SHARDED_UPGRADE.get(method, method)
+def _upgrade_for_sharded(method, matvec, *, precond=None):
+    """Upgrade a classic solver name for a mesh-placed operand — when the
+    cost model approves the operand's mesh size.
+
+    Matrix-free upgrades (``cg``/``normal_cg``) are COST-GATED through
+    ``analysis.autotune.should_shard``: with measured evidence that this
+    (B, d, mesh) regime loses to the single-device path, the classic name
+    is kept (its matvec still runs under the operator's ``shard_map``;
+    only the solve-loop dispatch stays single-device).  MATERIALIZING
+    names (``pallas_cg``/``lu``/``dense_gmres``) always upgrade: their
+    single-device forms would densify a mesh-placed operator into
+    per-shard pieces, so the sharded variant is a correctness matter, not
+    a tuning choice.  ``mesh.size == 1`` always upgrades (a 1-device mesh
+    IS the single-device path, under the declared placement).
+    """
+    if callable(method) or not getattr(matvec, "is_sharded", False):
+        return method
+    target = _SHARDED_UPGRADE.get(method)
+    if target is None:
+        return method
+    spec = _REGISTRY.get(method)
+    if spec is not None and not spec.matrix_free:
+        return target
+    from repro.analysis import autotune  # lazy: avoid import cycle
+    Bn, d, dtype = autotune.operator_regime(matvec)
+    if autotune.should_shard(Bn, d, mesh_size=int(matvec.mesh.size),
+                             instance_sharded=matvec.instance_sharded,
+                             spd=bool(spec and spec.symmetric_only),
+                             dtype=dtype, precond=precond):
+        return target
     return method
 
 
@@ -1003,7 +1056,7 @@ def route_solve(solve, matvec, b, *, tol: float = 1e-6, maxiter: int = 1000,
         if isinstance(matvec, LinearOperator) and matvec.batch_ndim == 1:
             example = jax.tree_util.tree_map(lambda l: l[0], b)
         solve = _resolve_auto(matvec, example, precond, init)
-    solve = _upgrade_for_sharded(solve, matvec)
+    solve = _upgrade_for_sharded(solve, matvec, precond=precond)
     if callable(solve):
         if precond is not None:
             raise ValueError("precond requires a registry solver name; "
@@ -1026,11 +1079,11 @@ def route_solve(solve, matvec, b, *, tol: float = 1e-6, maxiter: int = 1000,
     if return_info:
         kwargs["return_info"] = True
     if isinstance(matvec, LinearOperator) and matvec.batch_ndim == 1 \
-            and not getattr(matvec, "is_sharded", False) \
             and not spec.name.startswith("sharded_"):
-        # sharded operators/solvers read batchedness off the operator
-        # themselves (inside shard_map); plain batch-aware operators get
-        # the whole batch dispatched as ONE masked solve
+        # sharded SOLVERS read batchedness off the operator themselves
+        # (inside shard_map); every other batch-aware operator — including
+        # a mesh-placed one whose sharded upgrade the cost model refused —
+        # gets the whole batch dispatched as ONE masked solve
         kwargs["batch_ndim"] = 1
     return spec.fn(matvec, b, **kwargs)
 
@@ -1157,7 +1210,7 @@ def solve(matvec: Callable, b, *, method="cg", batch_axes: Optional[int] = None,
             example = jax.tree_util.tree_map(
                 lambda l: jnp.take(l, 0, axis=int(batch_axes)), b)
         method = _resolve_auto(matvec, example, precond, init)
-    method = _upgrade_for_sharded(method, matvec)
+    method = _upgrade_for_sharded(method, matvec, precond=precond)
     if callable(method):
         if batch_axes is not None:
             raise ValueError("batch_axes requires a registry solver name; "

@@ -56,7 +56,7 @@ _solve.defvjp(_fwd, _bwd)
 
 
 def batched_cg(A, b, *, tol: float = 1e-6, maxiter: Optional[int] = None,
-               block_b: int = 8, interpret: Optional[bool] = None,
+               block_b=8, interpret: Optional[bool] = None,
                pad_lanes: bool = False):
     """Solve the batch of SPD systems A[i] x[i] = b[i] in one fused kernel.
 
@@ -68,7 +68,11 @@ def batched_cg(A, b, *, tol: float = 1e-6, maxiter: Optional[int] = None,
       b: (B, d) right-hand sides ((batched) pytree for operator input).
       tol: relative residual tolerance per instance.
       maxiter: CG iteration cap (default: d, the exact-arithmetic bound).
-      block_b: instances per Pallas program (VMEM tile height).
+      block_b: instances per Pallas program (VMEM tile height), or
+        ``"auto"`` to resolve a tuned tile for this ``(backend, B, d,
+        dtype)`` from the autotuning cache (host-side, at trace time;
+        falls back to the legacy default-8 schedule when the regime was
+        never swept — see ``analysis.autotune.choose_block_b``).
       interpret: True forces Pallas interpret mode; None auto-selects the
         pure-JAX reference path off-TPU and the compiled kernel on TPU.
       pad_lanes: embed d into the next multiple of the 128-lane VMEM tile
@@ -94,6 +98,12 @@ def batched_cg(A, b, *, tol: float = 1e-6, maxiter: Optional[int] = None,
     B, d, _ = A.shape
     if maxiter is None:
         maxiter = d
+    if block_b == "auto":
+        # resolved HOST-SIDE before the custom-VJP call (block_b is a
+        # nondiff static arg): shapes are concrete even under jit tracing
+        from repro.analysis import autotune
+        block_b = autotune.choose_block_b(B, d, dtype=str(A.dtype),
+                                          pad_lanes=pad_lanes)
     if interpret is None and jax.default_backend() != "tpu":
         interpret = None   # sentinel: ref path (see _solve)
     elif interpret is None:

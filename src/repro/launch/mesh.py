@@ -22,6 +22,27 @@ def make_host_mesh(data: int = 1, model: int = 1):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+def auto_mesh_size(B: int, d: int, *, spd: bool = True,
+                   dtype: str = "float32", max_devices: int = None) -> int:
+    """The cost-model-selected 1-D solve-mesh extent for a (B, d) regime.
+
+    Thin front end over ``analysis.autotune.auto_mesh_size``: candidates
+    are power-of-two extents dividing ``B`` up to the local device count,
+    ranked by measured tuning-cache entries when any exist and by the
+    roofline solve model otherwise.  Pair with ``make_solve_mesh``::
+
+        n = auto_mesh_size(B, d)
+        mesh = make_solve_mesh(devices=n)
+
+    so examples and benchmarks pick their extent empirically instead of
+    hardcoding "all devices" (which BENCH showed oversharding at mesh=8
+    for B=64, d=16).
+    """
+    from repro.analysis import autotune
+    return autotune.auto_mesh_size(B, d, spd=spd, dtype=dtype,
+                                   max_devices=max_devices)
+
+
 def make_solve_mesh(devices: int = None, axis: str = "data"):
     """1-D mesh for sharded linear solves (``ShardedOperator`` and the
     ``sharded_*`` registry solvers).

@@ -1,0 +1,288 @@
+"""Autotuned dispatch: tuning cache, cost model, crossover gating.
+
+Decision tests seed the ``TuningCache`` explicitly, so they are
+deterministic at any device count; the paths that build a real 8-extent
+mesh are guarded on the process device count (the CI multidevice lane
+forces ``XLA_FLAGS=--xla_force_host_platform_device_count=8``).  The
+persistence tests mirror the ``WarmStartCache`` save/load suite:
+round-trip, version rejection, and the env-var pre-load that ships a
+pre-tuned cache with a deployment.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from jax.sharding import PartitionSpec as P
+
+from repro.analysis import autotune, roofline
+from repro.core import linear_solve as ls
+from repro.core import operators as ops
+from repro.distributed.sharded_operators import ShardedOperator
+from repro.launch.mesh import auto_mesh_size, make_solve_mesh
+
+N_DEV = len(jax.devices())
+BACKEND = jax.default_backend()
+
+needs_8 = pytest.mark.skipif(
+    N_DEV < 8, reason="needs XLA_FLAGS=--xla_force_host_platform_"
+                      "device_count=8 (the CI multidevice lane)")
+
+
+def _key(solver, B, d, mesh_size=1, variant=""):
+    return autotune.TuningKey(BACKEND, solver, B, d, "float32", mesh_size,
+                              "", variant)
+
+
+def _seeded(B, d, *, sharded_loses, mesh_sizes=(2, 4, 8), spd=True):
+    """A cache where every sharded candidate measures 2x worse (or 2x
+    better) than the measured single-device route."""
+    cache = autotune.TuningCache()
+    single = autotune.single_device_solver(spd, d)
+    sharded = "sharded_cg" if spd else "sharded_normal_cg"
+    cache.put(_key(single, B, d), 1e-3)
+    for m in mesh_sizes:
+        cache.put(_key(sharded, B, d, mesh_size=m),
+                  2e-3 if sharded_loses else 5e-4)
+    return cache
+
+
+def _spd_batch(B, d, seed=0):
+    # explicit float32: the repo enables x64, and the regime dtype is part
+    # of the TuningKey the seeded caches are written under
+    rng = np.random.RandomState(seed)
+    C = rng.randn(B, d, d) / np.sqrt(d)
+    A = np.einsum("bji,bjk->bik", C, C) + 0.5 * np.eye(d)
+    return jnp.asarray(A, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# TuningCache persistence (the WarmStartCache pattern)
+# ---------------------------------------------------------------------------
+
+class TestTuningCache:
+
+    def test_put_get_lookup(self):
+        cache = autotune.TuningCache()
+        rec = cache.put(_key("cg", 8, 4), 1.5e-3, samples=5)
+        assert cache.get(_key("cg", 8, 4)) == rec
+        assert cache.lookup(backend=BACKEND, solver="cg", B=8, d=4) == rec
+        assert cache.get(_key("cg", 8, 5)) is None
+        assert len(cache) == 1 and _key("cg", 8, 4) in cache
+
+    def test_save_load_round_trip(self, tmp_path):
+        cache = autotune.TuningCache()
+        cache.put(_key("pallas_cg", 64, 16), 4.2e-4)
+        cache.put(_key("sharded_cg", 64, 16, mesh_size=8), 1.3e-3,
+                  source="measured", samples=7)
+        cache.put(_key("batched_cg", 16, 8, variant="block_b=16"), 2e-5)
+        path = cache.save(tmp_path / "tuned")       # .json appended
+        assert path.endswith(".json")
+        restored = autotune.TuningCache.load(path)
+        assert restored.items() == cache.items()
+        rec = restored.get(_key("sharded_cg", 64, 16, mesh_size=8))
+        assert rec.seconds == pytest.approx(1.3e-3) and rec.samples == 7
+
+    def test_load_rejects_unknown_version(self, tmp_path):
+        import json
+        cache = autotune.TuningCache()
+        cache.put(_key("cg", 8, 4), 1e-3)
+        path = cache.save(tmp_path / "tuned.json")
+        blob = json.load(open(path))
+        blob["format_version"] = autotune.TuningCache._SAVE_VERSION + 1
+        with open(path, "w") as f:
+            json.dump(blob, f)
+        with pytest.raises(ValueError, match="format version"):
+            autotune.TuningCache.load(path)
+
+    def test_env_var_preloads_default_cache(self, tmp_path, monkeypatch):
+        cache = autotune.TuningCache()
+        cache.put(_key("sharded_cg", 64, 16, mesh_size=8), 9e-4)
+        path = cache.save(tmp_path / "shipped.json")
+        monkeypatch.setenv(autotune.CACHE_ENV_VAR, path)
+        prev = autotune.set_default_cache(None)     # force re-init
+        try:
+            loaded = autotune.default_cache()
+            assert loaded.get(
+                _key("sharded_cg", 64, 16, mesh_size=8)).seconds \
+                == pytest.approx(9e-4)
+        finally:
+            autotune.set_default_cache(prev)
+
+    def test_use_cache_scopes_default(self):
+        inner = autotune.TuningCache()
+        outer = autotune.default_cache()
+        with autotune.use_cache(inner):
+            assert autotune.default_cache() is inner
+        assert autotune.default_cache() is outer
+
+
+# ---------------------------------------------------------------------------
+# roofline solve model (the cold-cache fallback)
+# ---------------------------------------------------------------------------
+
+class TestRooflineSolve:
+
+    def test_mesh_divides_per_chip_work(self):
+        one = roofline.analyze_solve(64, 16, mesh_size=1)
+        eight = roofline.analyze_solve(64, 16, mesh_size=8)
+        assert eight.compute_s == pytest.approx(one.compute_s / 8)
+        assert eight.memory_s == pytest.approx(one.memory_s / 8)
+        assert one.collective_s == eight.collective_s == 0.0
+        assert one.solve_iteration_s > 0.0
+        assert one.chips == 1 and eight.chips == 8
+
+    def test_instance_sharding_pays_psum_latency(self):
+        t = roofline.analyze_solve(4, 600, mesh_size=8,
+                                   instance_sharded=True)
+        iters = roofline.expected_solve_iters(600)
+        assert t.collective_s == pytest.approx(
+            iters * roofline.PSUM_LATENCY_S)
+        # batch sharding communicates nothing
+        assert roofline.analyze_solve(4, 600, mesh_size=8).collective_s \
+            == 0.0
+
+    def test_terms_surface_solve_iteration(self):
+        t = roofline.analyze_solve(8, 32)
+        assert t.to_dict()["solve_iteration_s"] == t.solve_iteration_s
+        assert t.step_time_s == pytest.approx(
+            t.solve_iteration_s * roofline.expected_solve_iters(32))
+
+    def test_cold_cache_falls_back_to_roofline(self):
+        with autotune.use_cache(autotune.TuningCache()):
+            secs, source = autotune.predict_solve_seconds(
+                "sharded_cg", 64, 16, mesh_size=8)
+        assert source == "roofline" and secs > 0.0
+
+
+# ---------------------------------------------------------------------------
+# decisions (seeded — deterministic at any device count)
+# ---------------------------------------------------------------------------
+
+class TestDecisions:
+
+    def test_mesh1_always_shards(self):
+        with autotune.use_cache(_seeded(64, 16, sharded_loses=True)):
+            assert autotune.should_shard(64, 16, mesh_size=1)
+
+    def test_measured_loss_refuses_measured_win_accepts(self):
+        with autotune.use_cache(_seeded(64, 16, sharded_loses=True)):
+            assert not autotune.should_shard(64, 16, mesh_size=8)
+        with autotune.use_cache(_seeded(64, 16, sharded_loses=False)):
+            assert autotune.should_shard(64, 16, mesh_size=8)
+
+    def test_cold_roofline_keeps_batch_sharding(self):
+        with autotune.use_cache(autotune.TuningCache()):
+            assert autotune.should_shard(64, 16, mesh_size=8)
+            assert autotune.should_shard(16, 600, mesh_size=4, spd=False)
+
+    def test_auto_mesh_size_prefers_measured_argmin(self):
+        cache = _seeded(64, 16, sharded_loses=True)
+        cache.put(_key("sharded_cg", 64, 16, mesh_size=1), 8e-4)
+        cache.put(_key("sharded_cg", 64, 16, mesh_size=4), 3e-4)  # best
+        with autotune.use_cache(cache):
+            assert autotune.auto_mesh_size(64, 16, max_devices=8) == 4
+        # a single measured candidate outranks every modeled one
+        cache2 = autotune.TuningCache()
+        cache2.put(_key("sharded_cg", 64, 16, mesh_size=2), 1e-3)
+        with autotune.use_cache(cache2):
+            assert autotune.auto_mesh_size(64, 16, max_devices=8) == 2
+
+    def test_auto_mesh_size_cold_uses_all_devices(self):
+        with autotune.use_cache(autotune.TuningCache()):
+            assert autotune.auto_mesh_size(64, 16, max_devices=8) == 8
+            assert autotune.auto_mesh_size(4, 16, max_devices=8) == 4
+            assert autotune.auto_mesh_size(6, 16, max_devices=8) == 2
+
+    def test_launch_wrapper_returns_valid_extent(self):
+        n = auto_mesh_size(64, 16)
+        assert n >= 1 and 64 % n == 0 and n <= N_DEV
+
+    def test_choose_block_b_cold_is_legacy_schedule(self):
+        with autotune.use_cache(autotune.TuningCache()):
+            assert autotune.choose_block_b(64, 16) == \
+                autotune.default_block_b(64, 16) == 8
+            assert autotune.choose_block_b(4, 16) == 4   # shrunk divisor
+
+    def test_choose_block_b_measured_argmin(self):
+        cache = autotune.TuningCache()
+        cache.put(_key("batched_cg", 64, 16, variant="block_b=8"), 2e-4)
+        cache.put(_key("batched_cg", 64, 16, variant="block_b=32"), 9e-5)
+        with autotune.use_cache(cache):
+            assert autotune.choose_block_b(64, 16) == 32
+
+    def test_operator_regime_reads_batch_shape(self):
+        op = ops.DenseOperator(_spd_batch(8, 5), positive_definite=True)
+        assert autotune.operator_regime(op) == (8, 5, "float32")
+        single = ops.DenseOperator(jnp.eye(7, dtype=jnp.float32))
+        assert autotune.operator_regime(single) == (1, 7, "float32")
+
+
+# ---------------------------------------------------------------------------
+# dispatch integration: batched_cg(block_b="auto")
+# ---------------------------------------------------------------------------
+
+class TestBlockAuto:
+
+    def test_auto_matches_fixed_schedule(self):
+        from repro.kernels.batched_cg.ops import batched_cg
+        A = _spd_batch(8, 6)
+        b = jnp.asarray(np.random.RandomState(1).randn(8, 6))
+        x_auto = batched_cg(A, b, tol=1e-10, block_b="auto")
+        x_fixed = batched_cg(A, b, tol=1e-10, block_b=8)
+        np.testing.assert_allclose(x_auto, x_fixed, atol=1e-8)
+
+    def test_auto_resolves_tuned_tile_in_interpret_mode(self):
+        from repro.kernels.batched_cg.ops import batched_cg
+        A = _spd_batch(8, 6, seed=2)
+        b = jnp.asarray(np.random.RandomState(3).randn(8, 6))
+        cache = autotune.TuningCache()
+        cache.put(_key("batched_cg", 8, 6, variant="block_b=2"), 1e-5)
+        cache.put(_key("batched_cg", 8, 6, variant="block_b=8"), 9e-5)
+        with autotune.use_cache(cache):
+            x = batched_cg(A, b, tol=1e-10, block_b="auto", interpret=True)
+        x_ref = jnp.linalg.solve(A, b[..., None])[..., 0]
+        np.testing.assert_allclose(x, x_ref, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# dispatch integration: the mesh=8 crossover (the regression this PR fixes)
+# ---------------------------------------------------------------------------
+
+@needs_8
+class TestShardedCrossover:
+
+    def _op(self, B=64, d=16):
+        mesh = make_solve_mesh(devices=8)
+        return ShardedOperator(
+            ops.DenseOperator(_spd_batch(B, d), positive_definite=True),
+            mesh, P("data", None))
+
+    def test_seeded_loss_refuses_mesh8(self):
+        op = self._op()
+        with autotune.use_cache(_seeded(64, 16, sharded_loses=True)):
+            assert ls._resolve_auto(op, jnp.zeros(16)) == "cg"
+            assert ls._upgrade_for_sharded("cg", op) == "cg"
+            # materializing names upgrade REGARDLESS — densifying a
+            # mesh-placed operator yields per-shard pieces
+            assert ls._upgrade_for_sharded("pallas_cg", op) == "sharded_cg"
+            assert ls._upgrade_for_sharded("lu", op) == "sharded_dense_gmres"
+
+    def test_seeded_win_accepts_mesh8(self):
+        op = self._op()
+        with autotune.use_cache(_seeded(64, 16, sharded_loses=False)):
+            assert ls._resolve_auto(op, jnp.zeros(16)) == "sharded_cg"
+            assert ls._upgrade_for_sharded("cg", op) == "sharded_cg"
+
+    def test_refused_auto_solve_still_correct(self):
+        op = self._op(B=16, d=6)
+        dense = _spd_batch(16, 6)
+        b = jnp.asarray(np.random.RandomState(4).randn(16, 6))
+        x_ref = jnp.linalg.solve(dense, b[..., None])[..., 0]
+        with autotune.use_cache(_seeded(16, 6, sharded_loses=True)):
+            assert ls._resolve_auto(op, jnp.zeros(6)) == "cg"
+            x = ls.solve(op, b, method="auto", tol=1e-10)
+        np.testing.assert_allclose(x, x_ref, atol=1e-6)
+        with autotune.use_cache(_seeded(16, 6, sharded_loses=False)):
+            x_sh = ls.solve(op, b, method="auto", tol=1e-10)
+        np.testing.assert_allclose(x_sh, x_ref, atol=1e-6)

@@ -243,6 +243,7 @@ class TestShardedSolvers:
             ls.solve(dg_sh, jnp.ones(B), method="sharded_dense_gmres")
 
     def test_auto_routing_and_upgrade(self, rng, mesh):
+        from repro.analysis import autotune
         d = 6
         spd = ShardedOperator(
             ops.DenseOperator(_batched_spd(rng, B, d),
@@ -251,24 +252,52 @@ class TestShardedSolvers:
         gen = ShardedOperator(
             ops.DenseOperator(jnp.asarray(rng.randn(B, d, d)),
                               symmetric=False), mesh, P("data", None))
-        assert ls._resolve_auto(spd, jnp.zeros(d)) == "sharded_cg"
-        assert ls._resolve_auto(gen, jnp.zeros(d)) == "sharded_dense_gmres"
         big = ShardedOperator(
             ops.FunctionOperator(lambda v: v, jnp.zeros((B, 600)),
                                  batch_ndim=1), mesh, P("data", None))
-        assert ls._resolve_auto(big, jnp.zeros(600)) == "sharded_normal_cg"
-        # classic names upgrade once the operator carries a mesh
-        assert ls._upgrade_for_sharded("cg", spd) == "sharded_cg"
-        assert ls._upgrade_for_sharded("cg", ops.DenseOperator(
-            _batched_spd(rng, B, d))) == "cg"
-        b = jnp.asarray(rng.randn(B, d))
-        np.testing.assert_allclose(
-            ls.solve(spd, b, method="cg", tol=1e-10),
-            ls.solve(spd, b, method="sharded_cg", tol=1e-10), rtol=1e-12)
-        # materializing single-device solvers upgrade too (densifying a
-        # mesh-placed operator outside shard_map would gather)
-        assert ls._upgrade_for_sharded("pallas_cg", spd) == "sharded_cg"
-        assert ls._upgrade_for_sharded("lu", gen) == "sharded_dense_gmres"
+        # COLD cache: the roofline fallback predicts a win for batch
+        # sharding, so structural routing is unchanged (PR 9 contract)
+        with autotune.use_cache(autotune.TuningCache()):
+            assert ls._resolve_auto(spd, jnp.zeros(d)) == "sharded_cg"
+            assert ls._resolve_auto(gen, jnp.zeros(d)) == "sharded_dense_gmres"
+            assert ls._resolve_auto(big, jnp.zeros(600)) == "sharded_normal_cg"
+            # classic names upgrade once the operator carries a mesh
+            assert ls._upgrade_for_sharded("cg", spd) == "sharded_cg"
+            assert ls._upgrade_for_sharded("cg", ops.DenseOperator(
+                _batched_spd(rng, B, d))) == "cg"
+            b = jnp.asarray(rng.randn(B, d))
+            np.testing.assert_allclose(
+                ls.solve(spd, b, method="cg", tol=1e-10),
+                ls.solve(spd, b, method="sharded_cg", tol=1e-10), rtol=1e-12)
+            # materializing single-device solvers upgrade too (densifying a
+            # mesh-placed operator outside shard_map would gather)
+            assert ls._upgrade_for_sharded("pallas_cg", spd) == "sharded_cg"
+            assert ls._upgrade_for_sharded("lu", gen) == "sharded_dense_gmres"
+        # MEASURED crossover: the same regime with evidence it loses at
+        # this mesh extent refuses the matrix-free upgrade; with evidence
+        # it wins, accepts.  Keys are seeded at the operand's own regime
+        # (dtype included — the suite runs under x64).
+        Bn, dd, dtype = autotune.operator_regime(spd)
+        backend = autotune.current_backend()
+        single = autotune.single_device_solver(True, dd)
+
+        def seeded(sharded_ratio):
+            c = autotune.TuningCache()
+            c.put(autotune.TuningKey(backend, single, Bn, dd, dtype), 1e-3)
+            c.put(autotune.TuningKey(backend, "sharded_cg", Bn, dd, dtype,
+                                     int(mesh.size)), sharded_ratio * 1e-3)
+            return c
+
+        if mesh.size > 1:       # a 1-device mesh is always accepted
+            with autotune.use_cache(seeded(2.0)):
+                assert ls._resolve_auto(spd, jnp.zeros(d)) == "cg"
+                assert ls._upgrade_for_sharded("cg", spd) == "cg"
+                # ...but materializing names stay a correctness upgrade
+                assert ls._upgrade_for_sharded("pallas_cg", spd) \
+                    == "sharded_cg"
+        with autotune.use_cache(seeded(0.5)):
+            assert ls._resolve_auto(spd, jnp.zeros(d)) == "sharded_cg"
+            assert ls._upgrade_for_sharded("cg", spd) == "sharded_cg"
 
     def test_route_solve_auto_sizes_from_one_instance(self, rng, mesh):
         """route_solve's "auto" must size the system from ONE instance of a
