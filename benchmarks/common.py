@@ -65,13 +65,16 @@ def summarize_speedups(rows):
 
     Interpret-mode Pallas rows (``derived`` tagged ``interpret-mode``) are
     excluded: the CPU Pallas interpreter is a correctness vehicle and its
-    timings would poison any speedup statistic.  Returns ``None`` when no
-    row carries a speedup tag.
+    timings would poison any speedup statistic.  The names of excluded
+    rows are listed under ``skipped`` so the report never silently drops
+    a measurement.  Returns ``None`` when no row carries a speedup tag.
     """
     speedups = {}
+    skipped = []
     for row in rows:
         derived = row.get("derived", "")
         if "interpret-mode" in derived:
+            skipped.append(row["name"])
             continue
         m = re.search(r"speedup=([0-9.]+)x", derived)
         if m:
@@ -80,4 +83,5 @@ def summarize_speedups(rows):
         return None
     vals = sorted(speedups.values())
     return {"count": len(vals), "min": vals[0], "max": vals[-1],
-            "median": float(np.median(vals)), "rows": speedups}
+            "median": float(np.median(vals)), "rows": speedups,
+            "skipped": skipped}

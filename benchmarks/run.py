@@ -25,16 +25,20 @@ Prints ``name,us_per_call,derived`` CSV rows.
   stochastic stochastic vs full-batch bilevel hypergradients at growing
           dataset size (B=64 quadratic sweep + LM data-scale demo with
           the hypergrad cosine-similarity gate)
+  obs     observability overhead gates: disabled-mode telemetry must
+          stage a jaxpr-identical program (<= 2% by construction),
+          enabled-mode callbacks <= 15% wall-clock on the B=64 batched CG
   roofline per-(arch x shape) terms from the dry-run artifacts
 
 ``--smoke`` runs a fast CI subset (kernels + batched + bilevel + fwdrev +
-oproute + autotune + sharded + service + approx + stochastic) and writes
-the rows to ``BENCH_smoke.json`` (override with ``--out``) for artifact
-upload.  The report's ``speedup_summary`` aggregates every ``speedup=..x``
-derived tag, excluding interpret-mode Pallas rows (CPU interpreter timings
-are correctness-scale, not perf-scale); ``dispatch_summary`` collects the
-``dispatch=`` tags documenting every decision the autotuner made (chosen
-solver, mesh size, block_b).
+oproute + autotune + sharded + service + approx + stochastic + obs) and
+writes the rows to ``BENCH_smoke.json`` (override with ``--out``) for
+artifact upload.  The report's ``speedup_summary`` aggregates every
+``speedup=..x`` derived tag, excluding interpret-mode Pallas rows (CPU
+interpreter timings are correctness-scale, not perf-scale) whose names it
+lists under ``skipped``; ``dispatch_summary`` collects the ``dispatch=``
+tags documenting every decision the autotuner made (chosen solver, mesh
+size, block_b).
 """
 import argparse
 import sys
@@ -44,10 +48,11 @@ import traceback
 # "autotune" runs BEFORE "sharded": the sweep populates the in-process
 # TuningCache, so every auto-dispatch row downstream reports tuned picks
 SMOKE_BENCHES = ["kernels", "batched", "bilevel", "fwdrev", "oproute",
-                 "autotune", "sharded", "service", "approx", "stochastic"]
+                 "autotune", "sharded", "service", "approx", "stochastic",
+                 "obs"]
 # accept run(emit, smoke=True)
 SMOKE_KWARG_BENCHES = {"batched", "bilevel", "fwdrev", "oproute", "autotune",
-                       "sharded", "service", "approx", "stochastic"}
+                       "sharded", "service", "approx", "stochastic", "obs"}
 
 
 def main() -> None:
@@ -64,9 +69,9 @@ def main() -> None:
                             bilevel_hypergrad, dictionary_learning,
                             distillation, fwd_vs_rev_hypergrad,
                             jacobian_precision, kernels_micro,
-                            molecular_dynamics, operator_routing,
-                            roofline_report, sharded_solve, solve_service,
-                            stochastic_bilevel, svm_hyperopt)
+                            molecular_dynamics, obs_overhead,
+                            operator_routing, roofline_report, sharded_solve,
+                            solve_service, stochastic_bilevel, svm_hyperopt)
     from benchmarks.common import (Collector, emit, summarize_dispatch,
                                    summarize_speedups)
     all_benches = {
@@ -85,6 +90,7 @@ def main() -> None:
         "service": solve_service.run,
         "approx": approx_backward.run,
         "stochastic": stochastic_bilevel.run,
+        "obs": obs_overhead.run,
         "roofline": roofline_report.run,
     }
     if args.only:

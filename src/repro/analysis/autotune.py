@@ -46,9 +46,15 @@ import threading
 import time
 from typing import Callable, Dict, Iterable, List, NamedTuple, Optional, Tuple
 
+from repro.observability import metrics as obs_metrics
+
 # NOTE: repro.core / repro.distributed / repro.launch are imported lazily
 # inside functions — linear_solve consults this module at dispatch time,
-# so a top-level import either way would cycle.
+# so a top-level import either way would cycle.  repro.observability is
+# bottom-adjacent (imports nothing from repro), so it is safe up here;
+# the decision counters below are always-on host-side bookkeeping, not
+# gated telemetry — recording WHY dispatch chose a path costs one dict
+# lookup and never touches the device.
 
 _SHARD_ACCEPT_SLACK = 1.05   # shard when predicted <= single * slack
 
@@ -116,6 +122,10 @@ class TuningCache:
                            samples=int(samples))
         with self._mutex:
             self._store[TuningKey(*key)] = rec
+        obs_metrics.global_registry().counter(
+            "repro_autotune_cache_puts_total",
+            help="tuning-cache inserts by record source",
+            source=rec.source).inc()
         return rec
 
     def get(self, key: TuningKey) -> Optional[TuningRecord]:
@@ -396,8 +406,13 @@ def predict_solve_seconds(solver: str, B: int, d: int, *,
     key = TuningKey(backend or current_backend(), solver, int(B), int(d),
                     dtype, int(mesh_size), normalize_precond(precond))
     rec = cache.get(key)
+    counter = obs_metrics.global_registry().counter
     if rec is not None and rec.source == "measured":
+        counter("repro_autotune_predictions_total",
+                help="cost predictions by source", source="measured").inc()
         return rec.seconds, "measured"
+    counter("repro_autotune_predictions_total",
+            help="cost predictions by source", source="roofline").inc()
     return roofline_solve_seconds(
         B, d, dtype=dtype, mesh_size=mesh_size,
         instance_sharded=instance_sharded), "roofline"
@@ -436,8 +451,17 @@ def should_shard(B: int, d: int, *, mesh_size: int,
     work with zero communication) until measurements prove a regime
     loses — which is how the B=64/d=16 mesh=8 oversharding gets refused.
     """
+    counter = obs_metrics.global_registry().counter
+
+    def _decide(shard: bool, basis: str) -> bool:
+        counter("repro_autotune_shard_decisions_total",
+                help="sharding decisions by outcome and evidence basis",
+                decision="shard" if shard else "single",
+                basis=basis).inc()
+        return shard
+
     if mesh_size <= 1:
-        return True
+        return _decide(True, "trivial")
     cache = cache if cache is not None else default_cache()
     backend = backend or current_backend()
     sharded = "sharded_cg" if spd else "sharded_normal_cg"
@@ -449,12 +473,14 @@ def should_shard(B: int, d: int, *, mesh_size: int,
                                  1, pc))
     if rec_sh is not None and rec_si is not None:
         t_sh, t_si = rec_sh.seconds, rec_si.seconds
+        basis = "measured"
     else:
         t_sh = roofline_solve_seconds(B, d, dtype=dtype,
                                       mesh_size=mesh_size,
                                       instance_sharded=instance_sharded)
         t_si = roofline_solve_seconds(B, d, dtype=dtype, mesh_size=1)
-    return t_sh <= t_si * _SHARD_ACCEPT_SLACK
+        basis = "roofline"
+    return _decide(t_sh <= t_si * _SHARD_ACCEPT_SLACK, basis)
 
 
 def mesh_candidates(B: int, max_devices: Optional[int] = None) -> List[int]:

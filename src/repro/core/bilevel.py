@@ -31,6 +31,8 @@ import jax.numpy as jnp
 from repro.core import diff_api, optimality
 from repro.core.diff_api import ImplicitDiffSpec
 from repro.core.solver_runtime import IterativeSolver, OptInfo
+from repro.observability import events as obs_events
+from repro.observability import metrics as obs_metrics
 
 
 @dataclasses.dataclass
@@ -296,6 +298,16 @@ def solve_bilevel(outer_loss: Callable,
         vals.append(float(val))
         gnorms.append(float(jnp.sqrt(sum(
             jnp.vdot(x, x).real for x in jax.tree_util.tree_leaves(g)))))
+        # host-side telemetry: always count outer steps in the global
+        # registry (cheap, host-only); the per-step event is observe-gated
+        obs_metrics.global_registry().counter(
+            "repro_bilevel_steps_total",
+            help="outer optimization steps taken by solve_bilevel").inc()
+        obs_events.emit("bilevel_step",
+                        {"solver": type(inner_solver).__name__},
+                        outer_value=vals[-1], hypergrad_norm=gnorms[-1],
+                        inner_iterations=(None if info is None
+                                          else info.iterations))
     return BilevelSolution(theta=theta, x_star=x_star,
                            outer_values=jnp.asarray(vals),
                            hypergrad_norms=jnp.asarray(gnorms),

@@ -70,6 +70,7 @@ from jax import lax
 
 from repro.core import linear_solve as ls
 from repro.core import operators as ops
+from repro.observability import events as obs_events
 
 
 # ---------------------------------------------------------------------------
@@ -304,7 +305,8 @@ def _check_approx_routing(precond, sharding):
 
 def _backward_apply(A, rhs, *, solve, tol, maxiter, ridge, precond,
                     backward, backward_iters, batch_ndim: int,
-                    error_estimate: bool, return_info: bool):
+                    error_estimate: bool, return_info: bool,
+                    direction: str = "vjp"):
     """Apply the selected backward treatment of ``A`` to ``rhs``.
 
     ``backward="exact"`` routes the registry solver to convergence; the
@@ -315,23 +317,56 @@ def _backward_apply(A, rhs, *, solve, tol, maxiter, ridge, precond,
     ``‖rhs − A u‖/‖rhs‖`` at one extra matvec (uniformly recomputed even
     for exact solves: normal_cg's reported residual is the *normal
     equations'* residual, not the system's).
+
+    ``direction`` ("vjp" from ``root_vjp``, "jvp" from ``root_jvp``) only
+    tags the ``backward_start``/``backward_done`` telemetry events; with
+    observability enabled the registry paths force info out of the solver
+    so ``backward_done`` carries real diagnostics even when the caller
+    asked for none.
     """
+    observing = obs_events.observing()
+    tags = {"direction": direction, "backward": backward,
+            "matvec_budget": (-1 if backward == "exact" else
+                              ls.approx_matvec_count(backward,
+                                                     backward_iters)),
+            "solver": solve if isinstance(solve, str) else "custom"}
+    # custom exact-solve callables own their diagnostics (route_solve
+    # rejects return_info for them) — they get start/done without values
+    can_force = backward != "exact" or not callable(solve)
+    want_info = return_info
+    if observing:
+        return_info = return_info or can_force
     if backward != "exact":
-        return ls.approx_inverse_apply(
+        out = ls.approx_inverse_apply(
             A, rhs, backward=backward, backward_iters=backward_iters,
             ridge=ridge, precond=precond, batch_ndim=batch_ndim, tol=tol,
             error_estimate=error_estimate, return_info=return_info)
-    if not return_info:
-        return ls.route_solve(solve, A, rhs, tol=tol, maxiter=maxiter,
-                              ridge=ridge, precond=precond)
-    u, info = ls.route_solve(solve, A, rhs, tol=tol, maxiter=maxiter,
-                             ridge=ridge, precond=precond, return_info=True)
-    if error_estimate:
-        mv = ls._damped(A, ridge)
-        rn = ls._tree_l2(ls._tree_sub(rhs, mv(u)), batch_ndim)
-        est = rn / jnp.maximum(ls._tree_l2(rhs, batch_ndim), 1e-30)
-        info = info._replace(hypergrad_error_estimate=est)
-    return u, info
+    elif not return_info:
+        out = ls.route_solve(solve, A, rhs, tol=tol, maxiter=maxiter,
+                             ridge=ridge, precond=precond)
+    else:
+        u, info = ls.route_solve(solve, A, rhs, tol=tol, maxiter=maxiter,
+                                 ridge=ridge, precond=precond,
+                                 return_info=True)
+        if error_estimate:
+            mv = ls._damped(A, ridge)
+            rn = ls._tree_l2(ls._tree_sub(rhs, mv(u)), batch_ndim)
+            est = rn / jnp.maximum(ls._tree_l2(rhs, batch_ndim), 1e-30)
+            info = info._replace(hypergrad_error_estimate=est)
+        out = (u, info)
+    if not observing:
+        return out
+    if return_info:
+        u, info = out
+        extra = ({"hypergrad_error_estimate": info.hypergrad_error_estimate}
+                 if info.hypergrad_error_estimate is not None else {})
+        obs_events.jit_event_pair("backward_start", "backward_done", tags,
+                                  iterations=info.iterations,
+                                  residual=info.residual,
+                                  converged=info.converged, **extra)
+        return (u, info) if want_info else u
+    obs_events.jit_event_pair("backward_start", "backward_done", tags)
+    return out
 
 
 def root_vjp(F: Callable, x_star, theta_args: tuple, cotangent,
@@ -372,7 +407,8 @@ def root_vjp(F: Callable, x_star, theta_args: tuple, cotangent,
         A.T, cotangent, solve=solve, tol=tol, maxiter=maxiter, ridge=ridge,
         precond=precond, backward=backward, backward_iters=backward_iters,
         batch_ndim=0 if sharding is None else sharding.batch_ndim,
-        error_estimate=error_estimate, return_info=return_info)
+        error_estimate=error_estimate, return_info=return_info,
+        direction="vjp")
     u, info = out if return_info else (out, None)
 
     # uᵀ B = uᵀ ∂₂F : one more VJP, wrt the theta args.
@@ -410,7 +446,8 @@ def root_jvp(F: Callable, x_star, theta_args: tuple, tangents: tuple,
         A, Bv, solve=solve, tol=tol, maxiter=maxiter, ridge=ridge,
         precond=precond, backward=backward, backward_iters=backward_iters,
         batch_ndim=0 if sharding is None else sharding.batch_ndim,
-        error_estimate=error_estimate, return_info=return_info)
+        error_estimate=error_estimate, return_info=return_info,
+        direction="jvp")
     return out
 
 

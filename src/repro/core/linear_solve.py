@@ -54,6 +54,11 @@ from jax import lax
 from repro.core import operators
 from repro.core.operators import (LinearOperator, RavelView, _ravel1,
                                   jacobi_preconditioner, ravel_view)
+# bottom-adjacent telemetry (imports nothing from repro.core): solve events
+# are staged jit-safely behind the process-level observe() switch — with
+# observability disabled (default) every emission below is a trace-time
+# no-op and compiled programs are bit-identical to an uninstrumented build
+from repro.observability import events as obs_events
 
 
 # ---------------------------------------------------------------------------
@@ -280,6 +285,9 @@ def solve_cg(matvec: Callable, b, *, init=None, tol: float = 1e-6,
     atol2 = jnp.maximum(tol * b_norm, 1e-30) ** 2
     done0 = rr0 <= atol2
     it0 = jnp.zeros_like(b_norm, dtype=jnp.int32)
+    # trace-time flag: per-iteration telemetry is opt-in (a host callback
+    # per loop step); the default compiles an uninstrumented loop body
+    iter_events = obs_events.observing_iterations()
 
     def cond(state):
         k = state[-2]
@@ -308,6 +316,9 @@ def solve_cg(matvec: Callable, b, *, init=None, tol: float = 1e-6,
         rr = jnp.where(done, rr, rr1)
         it = it + jnp.logical_not(done)
         done = jnp.logical_or(done, rr <= atol2)
+        if iter_events:
+            obs_events.jit_event("iteration", {"solver": "cg"},
+                                 step=k + 1, residual_sq=rr)
         return x, r, p, rz, rr, it, k + 1, done
 
     x, r, _, _, rr, it, _, done = lax.while_loop(
@@ -781,6 +792,14 @@ def approx_inverse_apply(matvec: Callable, b, *, backward: str,
         rn = jnp.full(bn.shape, jnp.nan, dtype=bn.dtype)
         info = SolveInfo(iterations=spent, residual=rn,
                          converged=jnp.zeros(bn.shape, dtype=bool))
+    if obs_events.observing():
+        tags = _solve_event_tags(f"approx_{backward}", matvec, b,
+                                 {"batch_ndim": nb})
+        extra = ({"hypergrad_error_estimate": info.hypergrad_error_estimate}
+                 if info.hypergrad_error_estimate is not None else {})
+        obs_events.jit_event("solve", tags, iterations=info.iterations,
+                             residual=info.residual,
+                             converged=info.converged, **extra)
     return u, info
 
 
@@ -855,9 +874,84 @@ class SolverSpec:
 _REGISTRY: dict = {}
 
 
+def _solve_event_tags(name, matvec, b, kw) -> dict:
+    """Trace-time static tags for a solve event: solver, B, d, dtype (+
+    mesh_size for mesh-placed operators).  Shapes/dtypes are read off the
+    rhs tracers, so this is jit/vmap-safe."""
+    nb = kw.get("batch_ndim")
+    if nb is None and isinstance(matvec, LinearOperator):
+        nb = matvec.batch_ndim
+    nb = int(nb or 0)
+    leaves = jax.tree_util.tree_leaves(b)
+    B, total, dtype = 1, 0, ""
+    for leaf in leaves:
+        shape = tuple(getattr(leaf, "shape", ()))
+        size = 1
+        for s in shape:
+            size *= int(s)
+        total += size
+    if leaves:
+        first = getattr(leaves[0], "shape", ())
+        dtype = str(getattr(leaves[0], "dtype", ""))
+        if nb >= 1 and len(first) >= 1:
+            B = int(first[0])
+    tags = {"solver": str(name), "B": B, "d": total // max(B, 1),
+            "dtype": dtype}
+    if getattr(matvec, "is_sharded", False):
+        tags["mesh_size"] = int(matvec.mesh.size)
+    return tags
+
+
+def _observed(name: str, fn: Callable) -> Callable:
+    """Wrap a registry solver with jit-safe solve telemetry.
+
+    The wrapper is the instrumentation seam for *every* registry solver:
+    with observability off (the default) it is a pure pass-through, so
+    traced programs are bit-identical to an uninstrumented build.  With
+    ``observe(enabled=True)`` at trace time it forces ``return_info=True``
+    on the underlying solver and stages the ``solve_start``/``solve``
+    event pair carrying the per-instance diagnostics as ONE
+    ``jax.debug.callback`` (host callbacks dominate enabled-mode cost),
+    returning exactly what the caller asked for.  Because the seam sits
+    *outside* the sharded solvers' ``shard_map``, the callback fires once
+    per compiled program execution — not once per device.
+    """
+    @functools.wraps(fn)
+    def wrapper(matvec, b, **kw):
+        if not obs_events.observing():
+            return fn(matvec, b, **kw)
+        tags = _solve_event_tags(name, matvec, b, kw)
+        want_info = bool(kw.pop("return_info", False))
+        try:
+            x, info = fn(matvec, b, return_info=True, **kw)
+        except TypeError:
+            # a custom-registered solver outside the return_info contract:
+            # announce the solve, run it uninstrumented rather than fail
+            obs_events.jit_event("solve_start", tags)
+            if want_info:
+                return fn(matvec, b, return_info=True, **kw)
+            return fn(matvec, b, **kw)
+        extra = {}
+        if getattr(info, "hypergrad_error_estimate", None) is not None:
+            extra["hypergrad_error_estimate"] = info.hypergrad_error_estimate
+        obs_events.jit_event_pair("solve_start", "solve", tags,
+                                  iterations=info.iterations,
+                                  residual=info.residual,
+                                  converged=info.converged, **extra)
+        return (x, info) if want_info else x
+
+    wrapper.__wrapped__ = fn
+    return wrapper
+
+
 def register_solver(name: str, fn: Callable, **attrs) -> SolverSpec:
-    """Register (or override) a solver under ``name`` in the global registry."""
-    spec = SolverSpec(name=name, fn=fn, **attrs)
+    """Register (or override) a solver under ``name`` in the global registry.
+
+    The stored ``fn`` is wrapped with the jit-safe telemetry seam (see
+    ``_observed``) — a pure pass-through unless ``repro.observability``
+    is enabled at trace time.
+    """
+    spec = SolverSpec(name=name, fn=_observed(name, fn), **attrs)
     _REGISTRY[name] = spec
     return spec
 
@@ -877,10 +971,17 @@ def available_solvers():
 
 
 def get_solver(name_or_fn):
-    """Resolve a registry name (or pass through a callable) to a solver fn."""
+    """Resolve a registry name (or pass through a callable) to a solver fn.
+
+    Returns the function as *registered*: the registry stores solvers
+    behind the jit-safe telemetry seam (``_observed``), which is a
+    routing detail — it is unwrapped here, so
+    ``get_solver(name) is fn`` holds after ``register_solver(name, fn)``.
+    """
     if callable(name_or_fn):
         return name_or_fn
-    return get_spec(name_or_fn).fn
+    fn = get_spec(name_or_fn).fn
+    return getattr(fn, "__wrapped__", fn)
 
 
 def solver_is_symmetric(name_or_fn) -> bool:
@@ -1048,6 +1149,8 @@ def route_solve(solve, matvec, b, *, tol: float = 1e-6, maxiter: int = 1000,
     returns the per-instance ``SolveInfo``.  Both require a registry
     solver — custom callables own their initialization and diagnostics.
     """
+    requested = solve if isinstance(solve, str) else getattr(
+        solve, "__name__", "custom")
     if solve == "auto":
         # _resolve_auto sizes the system from ONE instance: batch-aware
         # operators (batch_ndim == 1, e.g. sharded batched systems) carry
@@ -1057,6 +1160,12 @@ def route_solve(solve, matvec, b, *, tol: float = 1e-6, maxiter: int = 1000,
             example = jax.tree_util.tree_map(lambda l: l[0], b)
         solve = _resolve_auto(matvec, example, precond, init)
     solve = _upgrade_for_sharded(solve, matvec, precond=precond)
+    if obs_events.observing():
+        routed = solve if isinstance(solve, str) else getattr(
+            solve, "__name__", "custom")
+        obs_events.emit("dispatch",
+                        dict(_solve_event_tags(routed, matvec, b, {}),
+                             requested=requested))
     if callable(solve):
         if precond is not None:
             raise ValueError("precond requires a registry solver name; "

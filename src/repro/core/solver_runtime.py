@@ -40,6 +40,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import diff_api, optimality
+from repro.observability import events as obs_events
 # tree math shared with the linear-solve engine (instance-shaped: the
 # runtime never carries an explicit batch axis — vmap supplies it)
 from repro.core.linear_solve import _tree_l2, _tree_sub
@@ -247,6 +248,9 @@ class IterativeSolver:
         params, state = lax.while_loop(cond, body, (init_params, state0))
         info = OptInfo(iterations=state.iter_num, error=state.error,
                        converged=state.error <= self.tol)
+        obs_events.jit_event("converged", {"solver": type(self).__name__},
+                             iterations=info.iterations, error=info.error,
+                             converged=info.converged)
         return params, info
 
     def diff_spec(self) -> diff_api.ImplicitDiffSpec:

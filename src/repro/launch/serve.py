@@ -29,9 +29,17 @@ from repro.models import decode_step, init_decode_state, init_params
 
 
 def serve_solves(args) -> None:
-    """Drive the solve service with synthetic SPD traffic; print metrics."""
+    """Drive the solve service with synthetic SPD traffic; print metrics.
+
+    Observability is enabled for the whole run (``--trace PATH`` also
+    streams a JSONL span/event trace for
+    ``python -m repro.observability.report``); the scheduler metrics come
+    from the service's ``MetricsRegistry`` snapshot and the full
+    Prometheus text exposition is printed once at exit.
+    """
     import numpy as np
 
+    from repro import observability as obs
     from repro.runtime.solve_service import SolveService, WarmStartCache
 
     rng = np.random.default_rng(args.seed)
@@ -41,27 +49,49 @@ def serve_solves(args) -> None:
         M = rng.standard_normal((d, d))
         problems.append((M @ M.T + d * np.eye(d), rng.standard_normal(d)))
 
-    svc = SolveService(max_batch=args.max_batch,
-                       cache=WarmStartCache(capacity=args.cache_capacity))
-    svc.start()                       # background scheduler thread
-    try:
-        for wave in ("cold", "warm"):     # wave 2 replays wave 1: cache hits
-            t0 = time.perf_counter()
-            futs = [svc.submit(A, b, positive_definite=True)
-                    for A, b in problems]
-            results = [f.result(timeout=60.0) for f in futs]
-            dt = time.perf_counter() - t0
-            iters = [int(r.info.iterations) for r in results]
-            print(f"[serve] {wave}: {n} requests d={d} in {dt*1e3:.1f}ms "
-                  f"({n / dt:.0f} req/s) iters(median)="
-                  f"{int(np.median(iters))} "
-                  f"warm_started={sum(r.warm_start for r in results)}")
-    finally:
-        svc.stop()
-    m = svc.metrics_summary()
-    print(f"[serve] dispatches={m['dispatches']} compiled={m['compiled']} "
-          f"occupancy={m['occupancy']:.2f} hit_rate={m['hit_rate']:.2f} "
-          f"cache_size={m['cache_size']}")
+    # enable BEFORE constructing the service: programs jitted while
+    # disabled would stay uninstrumented until re-traced
+    with obs.observe(enabled=True, trace_path=args.trace):
+        svc = SolveService(max_batch=args.max_batch,
+                           cache=WarmStartCache(
+                               capacity=args.cache_capacity))
+        svc.start()                   # background scheduler thread
+        try:
+            for wave in ("cold", "warm"):   # wave 2 replays wave 1: hits
+                t0 = time.perf_counter()
+                futs = [svc.submit(A, b, positive_definite=True)
+                        for A, b in problems]
+                results = [f.result(timeout=60.0) for f in futs]
+                dt = time.perf_counter() - t0
+                iters = [int(r.info.iterations) for r in results]
+                print(f"[serve] {wave}: {n} requests d={d} in "
+                      f"{dt*1e3:.1f}ms ({n / dt:.0f} req/s) "
+                      f"iters(median)={int(np.median(iters))} "
+                      f"warm_started={sum(r.warm_start for r in results)}")
+        finally:
+            svc.stop()
+        snap = svc.metrics_snapshot()
+
+        def _val(name, default=0.0):
+            values = snap.get(name, {}).get("values", {})
+            v = values.get("", default)
+            return v["sum"] if isinstance(v, dict) else v
+
+        dispatches = _val("repro_service_dispatches_total")
+        print(f"[serve] dispatches={int(dispatches)} "
+              f"compiled={int(_val('repro_service_compiled_programs'))} "
+              f"occupancy="
+              f"{_val('repro_service_occupancy_sum') / max(dispatches, 1):.2f} "
+              f"hit_rate={svc.hit_rate:.2f} "
+              f"cache_size={len(svc.cache) if svc.cache else 0}")
+        print("[serve] prometheus exposition:")
+        print(svc.registry.to_prometheus(), end="")
+        tracer = obs.current_tracer()
+        if tracer is not None:
+            tracer.flush()
+            n_spans = sum(1 for r in tracer.records()
+                          if r.get("type") == "span")
+            print(f"[serve] trace: {tracer.path} ({n_spans} spans)")
 
 
 def main():
@@ -84,6 +114,9 @@ def main():
                     help="solve-service: bucket capacity ceiling")
     ap.add_argument("--cache-capacity", type=int, default=256,
                     help="solve-service: warm-start cache capacity")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="solve-service: write a JSONL span/event trace "
+                         "(summarize with repro.observability.report)")
     args = ap.parse_args()
 
     if args.solve_service:

@@ -1,0 +1,56 @@
+"""Observability: jit-safe solve telemetry, span tracing, and metrics.
+
+A bottom-adjacent subsystem (it imports nothing above
+``repro.core.operators`` — in fact nothing from ``repro`` at all), so
+every layer of the stack can report through it without import cycles:
+
+  * **events** (``repro.observability.events``) — the ``SolveEvent``
+    stream: solver iteration counts, residuals, backward-solve
+    diagnostics, emitted jit-safely from inside compiled programs via
+    ``jax.debug.callback`` behind the process-level :func:`observe`
+    switch (a trace-time no-op when off: zero disabled-mode overhead);
+  * **spans** (``repro.observability.spans``) — a host-side tracer
+    writing JSONL traces with monotonic timestamps and parent ids
+    (request lifecycles in the solve service, ``span("dispatch")``
+    blocks anywhere);
+  * **metrics** (``repro.observability.metrics``) — a
+    ``MetricsRegistry`` of counters/gauges/histograms with a frozen JSON
+    snapshot and Prometheus text exposition;
+  * **report** (``repro.observability.report``) — loads JSONL traces and
+    summarizes p50/p95/p99 latency, iterations-per-solve histograms and
+    per-bucket breakdowns (also a CLI:
+    ``python -m repro.observability.report trace.jsonl``).
+
+See ``docs/observability.md`` for the full schema, lifecycle diagram and
+overhead numbers.
+"""
+from repro.observability.events import (EVENT_KINDS, SolveEvent,
+                                        clear_recorded, emit, jit_event,
+                                        jit_event_pair, observe, observing,
+                                        observing_iterations, recorded,
+                                        subscribe)
+from repro.observability.metrics import (DEFAULT_BUCKETS, ITERATION_BUCKETS,
+                                         LATENCY_BUCKETS, Counter, Gauge,
+                                         Histogram, MetricsRegistry,
+                                         global_registry,
+                                         reset_global_registry)
+from repro.observability.report import (format_summary, load_trace,
+                                        summarize)
+from repro.observability.spans import (Span, Tracer, configure_tracer,
+                                       current_tracer, remove_tracer, span)
+
+__all__ = [
+    # events
+    "EVENT_KINDS", "SolveEvent", "observe", "observing",
+    "observing_iterations", "emit", "jit_event", "jit_event_pair",
+    "subscribe", "recorded", "clear_recorded",
+    # metrics
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "global_registry",
+    "reset_global_registry", "DEFAULT_BUCKETS", "ITERATION_BUCKETS",
+    "LATENCY_BUCKETS",
+    # spans
+    "Span", "Tracer", "configure_tracer", "current_tracer",
+    "remove_tracer", "span",
+    # report
+    "load_trace", "summarize", "format_summary",
+]

@@ -74,6 +74,9 @@ from jax.flatten_util import ravel_pytree
 from repro.core import linear_solve as ls
 from repro.core import operators as ops
 from repro.core.linear_solve import MAX_DENSE_DIM, SolveInfo
+from repro.observability import events as obs_events
+from repro.observability import spans as obs_spans
+from repro.observability.metrics import LATENCY_BUCKETS, MetricsRegistry
 
 # "argument not given" marker, distinct from None: an explicit ``None`` is a
 # real override (e.g. ``precond=None`` clears a spec's preconditioner).
@@ -101,6 +104,14 @@ class BucketKey(NamedTuple):
     # "jacobian_free"; backward_iters is the neumann_k depth, 0 otherwise)
     backward: str = "exact"
     backward_iters: int = 0
+
+
+def _bucket_label(key: BucketKey) -> str:
+    """Compact, stable bucket tag for spans/events (trace breakdowns)."""
+    label = f"{key.solver}:d={key.d}:{key.dtype}"
+    if key.backward != "exact":
+        label += f":{key.backward}"
+    return label
 
 
 def bucket_capacity(n: int, max_batch: int = 64) -> int:
@@ -156,6 +167,7 @@ class _PendingRequest:
     init: Optional[np.ndarray]   # cached warm-start solution, if any
     finish: Optional[Callable]   # post-solve hook (hypergrad θ-VJP)
     enqueue_t: float = 0.0
+    admit_t: float = 0.0         # admission start (span tracing)
 
 
 class WarmStartCache:
@@ -373,17 +385,45 @@ class SolveService:
         self._queue: "collections.deque[_PendingRequest]" = \
             collections.deque()
         self._compiled: dict = {}          # (BucketKey, cap) -> jitted fn
-        self._lock = threading.Lock()
+        # reentrant: the MetricsRegistry below shares this lock, so every
+        # instrument update inside a service critical section — and a
+        # snapshot taken against one — stays atomic without deadlocking
+        self._lock = threading.RLock()
         self._uid = itertools.count()      # atomic next(): uids never collide
         self._inflight = 0                 # requests popped but not resolved
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
-        self.metrics = {
-            "requests": 0, "dispatches": 0, "instances": 0, "padded": 0,
-            "occupancy_sum": 0.0, "queue_wait_sum": 0.0,
-            "solve_time_sum": 0.0, "compiled": 0,
-            "cache_hits": 0, "cache_misses": 0, "cache_evictions": 0,
-        }
+        self.registry = MetricsRegistry(lock=self._lock)
+        reg = self.registry
+        self._m_requests = reg.counter(
+            "repro_service_requests_total", help="requests admitted")
+        self._m_dispatches = reg.counter(
+            "repro_service_dispatches_total", help="batched dispatches run")
+        self._m_instances = reg.counter(
+            "repro_service_instances_total",
+            help="real (non-padding) instances dispatched")
+        self._m_padded = reg.counter(
+            "repro_service_padded_total",
+            help="padding slots dispatched alongside real instances")
+        self._m_occupancy_sum = reg.gauge(
+            "repro_service_occupancy_sum",
+            help="sum over dispatches of real/capacity occupancy")
+        self._m_solve_time = reg.histogram(
+            "repro_service_solve_seconds", buckets=LATENCY_BUCKETS,
+            help="wall-clock seconds per batched dispatch")
+        self._m_queue_wait = reg.histogram(
+            "repro_service_queue_wait_seconds", buckets=LATENCY_BUCKETS,
+            help="per-request seconds between enqueue and dispatch start")
+        self._m_compiled = reg.gauge(
+            "repro_service_compiled_programs",
+            help="distinct (BucketKey, capacity) programs compiled")
+        self._m_cache_hits = reg.gauge(
+            "repro_service_cache_hits", help="warm-start cache hits")
+        self._m_cache_misses = reg.gauge(
+            "repro_service_cache_misses", help="warm-start cache misses")
+        self._m_cache_evictions = reg.gauge(
+            "repro_service_cache_evictions",
+            help="warm-start cache LRU evictions")
 
     # -- admission -----------------------------------------------------------
 
@@ -494,7 +534,7 @@ class SolveService:
         pending.enqueue_t = time.perf_counter()
         with self._lock:
             self._queue.append(pending)
-            self.metrics["requests"] += 1
+            self._m_requests.inc()
         return pending.future
 
     def _build_request(self, A, b, symmetric, positive_definite, spec,
@@ -502,6 +542,7 @@ class SolveService:
                        warm_start: bool, backward: str = "exact",
                        backward_iters: int = 0) -> _PendingRequest:
         """Admission: normalize, bucket-key, warm-start lookup (no enqueue)."""
+        admit_t = time.perf_counter()
         r = self._routing(spec, solve, tol, maxiter, ridge, precond)
         A_dense, b_flat, unravel, sym, pd = self._admit_operator(
             A, b, symmetric, positive_definite)
@@ -538,10 +579,12 @@ class SolveService:
             init = self.cache.get(fingerprint)
             if init is not None and solver == "pallas_cg":
                 init = None     # pallas_cg always starts from zero
+            obs_events.emit("cache_hit" if init is not None
+                            else "cache_miss", {"solver": solver, "d": d})
         return _PendingRequest(uid=next(self._uid), key=key, A=A_dense,
                                b=b_flat, unravel=unravel, future=Future(),
                                fingerprint=fingerprint, init=init,
-                               finish=None)
+                               finish=None, admit_t=admit_t)
 
     def submit(self, A, b, *, symmetric: Optional[bool] = None,
                positive_definite: bool = False, spec=None, solve=_UNSET,
@@ -692,7 +735,7 @@ class SolveService:
             # concurrent flushers may race to build the same program; keep
             # the first so compiled-program identity stays stable
             fn = self._compiled.setdefault((key, cap), fn)
-            self.metrics["compiled"] = len(self._compiled)
+            self._m_compiled.set(len(self._compiled))
         return fn
 
     def _dispatch_bucket(self, key: BucketKey, reqs) -> None:
@@ -701,6 +744,10 @@ class SolveService:
         cap = bucket_capacity(n, self.max_batch)
         d = key.d
         dtype = np.dtype(key.dtype)
+        label = _bucket_label(key)
+        obs_events.emit("dispatch", {"bucket": label, "solver": key.solver},
+                        n=n, capacity=cap)
+        stage_t = time.perf_counter()
         # host-side staging: padded slots get identity systems with zero
         # rhs/init (they converge at while_loop entry); the jitted dispatch
         # transfers each stacked buffer to device ONCE per flush
@@ -718,14 +765,15 @@ class SolveService:
         t0 = time.perf_counter()
         x, info = fn(A_stack, b_stack, init_stack)
         x = jax.block_until_ready(x)
-        solve_t = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        solve_t = t1 - t0
 
         with self._lock:
-            self.metrics["dispatches"] += 1
-            self.metrics["instances"] += n
-            self.metrics["padded"] += cap - n
-            self.metrics["occupancy_sum"] += n / cap
-            self.metrics["solve_time_sum"] += solve_t
+            self._m_dispatches.inc()
+            self._m_instances.inc(n)
+            self._m_padded.inc(cap - n)
+            self._m_occupancy_sum.inc(n / cap)
+            self._m_solve_time.observe(solve_t)
 
         x_host = np.asarray(x)
         it = np.asarray(info.iterations).tolist()
@@ -736,14 +784,13 @@ class SolveService:
         if not isinstance(it, list):        # scalar (unbatched) diagnostics
             it, rn, cv = [it] * cap, [rn] * cap, [cv] * cap
             est = est if isinstance(est, list) else [est] * cap
-        now = time.perf_counter()
-        queue_wait = 0.0
+        tracer = obs_spans.current_tracer()
         for i, req in enumerate(reqs):
             xi = x_host[i]
             if req.fingerprint is not None and self.cache is not None:
                 self.cache.put(req.fingerprint, xi, key=req.key)
-            queue_t = max(now - solve_t - req.enqueue_t, 0.0)
-            queue_wait += queue_t
+            queue_t = max(t0 - req.enqueue_t, 0.0)
+            deliver_t = time.perf_counter()
             try:
                 payload = xi if req.unravel is None \
                     else req.unravel(jnp.asarray(xi))
@@ -759,12 +806,31 @@ class SolveService:
                     warm_start=req.init is not None))
             except Exception as exc:
                 req.future.set_exception(exc)
+            if tracer is not None:
+                # the request lifecycle crosses threads (submitter admits
+                # and enqueues; this — possibly the scheduler — thread
+                # dispatches and delivers), so the segments are recorded
+                # from measured timestamps under an explicit parent id
+                end = time.perf_counter()
+                root = tracer.record_span(
+                    "request", req.admit_t, end, uid=req.uid, bucket=label,
+                    warm_start=req.init is not None, iterations=it[i])
+                tracer.record_span("admission", req.admit_t, req.enqueue_t,
+                                   parent=root)
+                tracer.record_span("queue", req.enqueue_t, t0, parent=root)
+                tracer.record_span("solve", t0, t1, parent=root,
+                                   bucket=label)
+                tracer.record_span("delivery", deliver_t, end, parent=root)
+        if tracer is not None:
+            tracer.record_span("dispatch", stage_t, time.perf_counter(),
+                               bucket=label, n=n, capacity=cap)
         with self._lock:
-            self.metrics["queue_wait_sum"] += queue_wait
+            self._m_queue_wait.observe_many(
+                max(t0 - req.enqueue_t, 0.0) for req in reqs)
             if self.cache is not None:
-                self.metrics["cache_hits"] = self.cache.hits
-                self.metrics["cache_misses"] = self.cache.misses
-                self.metrics["cache_evictions"] = self.cache.evictions
+                self._m_cache_hits.set(self.cache.hits)
+                self._m_cache_misses.set(self.cache.misses)
+                self._m_cache_evictions.set(self.cache.evictions)
 
     def flush(self) -> int:
         """Drain the queue: dispatch every bucket once; returns #requests.
@@ -849,10 +915,35 @@ class SolveService:
     # -- metrics -------------------------------------------------------------
 
     @property
+    def metrics(self) -> dict:
+        """Frozen scheduler-counter snapshot (the legacy flat-dict shape).
+
+        Built atomically under the service lock from the
+        :class:`MetricsRegistry` instruments, so a read never observes a
+        torn multi-counter update mid-dispatch.  The returned dict is a
+        copy — mutating it does not touch the service.
+        """
+        with self._lock:
+            return {
+                "requests": int(self._m_requests.value),
+                "dispatches": int(self._m_dispatches.value),
+                "instances": int(self._m_instances.value),
+                "padded": int(self._m_padded.value),
+                "occupancy_sum": self._m_occupancy_sum.value,
+                "queue_wait_sum": self._m_queue_wait.sum,
+                "solve_time_sum": self._m_solve_time.sum,
+                "compiled": int(self._m_compiled.value),
+                "cache_hits": int(self._m_cache_hits.value),
+                "cache_misses": int(self._m_cache_misses.value),
+                "cache_evictions": int(self._m_cache_evictions.value),
+            }
+
+    @property
     def occupancy(self) -> float:
         """Mean bucket occupancy (real requests / padded capacity)."""
-        n = self.metrics["dispatches"]
-        return self.metrics["occupancy_sum"] / n if n else 0.0
+        with self._lock:
+            n = self._m_dispatches.value
+            return self._m_occupancy_sum.value / n if n else 0.0
 
     @property
     def hit_rate(self) -> float:
@@ -862,11 +953,29 @@ class SolveService:
     @property
     def throughput(self) -> float:
         """Requests served per second of batched solve time."""
-        t = self.metrics["solve_time_sum"]
-        return self.metrics["instances"] / t if t > 0 else 0.0
+        with self._lock:
+            t = self._m_solve_time.sum
+            return self._m_instances.value / t if t > 0 else 0.0
 
     def metrics_summary(self) -> dict:
-        """One flat dict of scheduler metrics (CLI / benchmark reporting)."""
-        return dict(self.metrics, occupancy=self.occupancy,
-                    hit_rate=self.hit_rate, throughput=self.throughput,
-                    cache_size=len(self.cache) if self.cache else 0)
+        """One flat dict of scheduler metrics (CLI / benchmark reporting).
+
+        Atomic under the service lock: the counter snapshot and the
+        derived rates come from ONE critical section, so concurrent
+        dispatches can never skew e.g. ``throughput`` against
+        ``instances``.
+        """
+        with self._lock:
+            return dict(self.metrics, occupancy=self.occupancy,
+                        hit_rate=self.hit_rate, throughput=self.throughput,
+                        cache_size=len(self.cache) if self.cache else 0)
+
+    def metrics_snapshot(self) -> dict:
+        """Full structured registry snapshot (names/labels/histograms).
+
+        The JSON-ready form of every service instrument — see
+        ``MetricsRegistry.snapshot``; taken atomically under the service
+        lock.  ``to_prometheus()`` on :attr:`registry` renders the same
+        data in Prometheus text exposition format.
+        """
+        return self.registry.snapshot()

@@ -49,6 +49,7 @@ from jax import lax
 
 from repro.core import diff_api
 from repro.core import operators as ops
+from repro.observability import events as obs_events
 from repro.core.linear_solve import _tree_l2, _tree_sub
 from repro.core.solver_runtime import (IterativeSolver, OptInfo, _inf_like,
                                        _kw, _tree_axpy)
@@ -128,6 +129,14 @@ def run_stochastic(solver: "StochasticSolver", init_params, *theta,
     error = solver.l2_optimality_error(x_star, *theta)
     info = OptInfo(iterations=state.iter_num, error=error,
                    converged=error <= solver.tol)
+    # staged AFTER the scan (never inside it — the loop body stays free of
+    # host callbacks, preserving the restart/vmap contract above); a
+    # trace-time no-op unless observability is enabled
+    obs_events.jit_event("converged",
+                         {"solver": type(solver).__name__,
+                          "averaging": str(solver.averaging)},
+                         iterations=info.iterations, error=info.error,
+                         converged=info.converged)
     return x_star, info
 
 

@@ -1,0 +1,449 @@
+"""Observability subsystem tests: metrics, spans, jit-safe events, parity.
+
+The contract under test, layer by layer:
+
+  * ``MetricsRegistry`` — counter/gauge/histogram semantics, frozen
+    snapshots, Prometheus text exposition, kind-conflict rejection;
+  * ``Tracer`` — span nesting (ambient parents), cross-thread
+    ``record_span``, JSONL round-trip through ``report.load_trace``;
+  * events — the ``observe()`` switch compiles to a TRACE-TIME no-op when
+    off (the jaxpr carries no callback), and when on, the per-solve
+    events' diagnostics agree exactly with the ``SolveInfo`` the caller
+    receives (the parity acceptance criterion);
+  * the solve service — per-request lifecycle spans and registry counters
+    agree with the ``ServiceResult`` futures;
+  * sharded solves — the registry-seam instrumentation fires exactly ONE
+    solve event per compiled program execution, not one per device
+    (asserted on however many devices the process sees; the CI
+    multidevice lane forces 8).
+"""
+import json
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from jax.sharding import PartitionSpec as P
+
+from repro import observability as obs
+from repro.core import diff_api
+from repro.core import linear_solve as ls
+from repro.core import operators as ops
+from repro.observability import report
+from repro.observability.metrics import ITERATION_BUCKETS, MetricsRegistry
+from repro.observability.spans import Tracer
+
+
+@pytest.fixture(autouse=True)
+def _clean_observability():
+    """Every test starts with observability off and empty global sinks."""
+    obs.clear_recorded()
+    obs.reset_global_registry()
+    yield
+    assert not obs.observing(), "a test leaked observe(enabled=True)"
+    obs.remove_tracer()
+    obs.clear_recorded()
+    obs.reset_global_registry()
+
+
+def _spd(rng, d):
+    M = rng.standard_normal((d, d))
+    return M @ M.T + d * np.eye(d)
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+class TestMetricsRegistry:
+
+    def test_counter_gauge_histogram_semantics(self):
+        reg = MetricsRegistry()
+        c = reg.counter("c_total")
+        c.inc()
+        c.inc(2)
+        assert c.value == 3
+        with pytest.raises(ValueError, match="only go up"):
+            c.inc(-1)
+        g = reg.gauge("g")
+        g.set(5)
+        g.inc(-2)
+        assert g.value == 3
+        h = reg.histogram("h_seconds", buckets=(1.0, 10.0))
+        h.observe_many([0.5, 5.0, 50.0])
+        state = h.state()
+        assert state["count"] == 3
+        assert state["buckets"] == {1.0: 1, 10.0: 2}   # cumulative
+        assert state["sum"] == pytest.approx(55.5)
+
+    def test_get_or_create_and_label_identity(self):
+        reg = MetricsRegistry()
+        a = reg.counter("events_total", kind="solve")
+        b = reg.counter("events_total", kind="solve")
+        other = reg.counter("events_total", kind="dispatch")
+        assert a is b and a is not other
+        a.inc()
+        snap = reg.snapshot()
+        assert snap["events_total"]["values"]['kind="solve"'] == 1
+        assert snap["events_total"]["values"]['kind="dispatch"'] == 0
+
+    def test_kind_conflict_rejected(self):
+        reg = MetricsRegistry()
+        reg.counter("x_total")
+        with pytest.raises(ValueError, match="already registered"):
+            reg.gauge("x_total")
+
+    def test_snapshot_is_frozen_copy(self):
+        reg = MetricsRegistry()
+        reg.counter("n_total").inc()
+        snap = reg.snapshot()
+        snap["n_total"]["values"][""] = 999
+        assert reg.snapshot()["n_total"]["values"][""] == 1
+        json.dumps(reg.snapshot())                     # JSON-ready
+
+    def test_prometheus_exposition_format(self):
+        reg = MetricsRegistry()
+        reg.counter("req_total", help="requests", kind="solve").inc(4)
+        reg.histogram("lat_seconds", buckets=(0.1, 1.0)).observe(0.05)
+        text = reg.to_prometheus()
+        assert "# HELP req_total requests" in text
+        assert "# TYPE req_total counter" in text
+        assert 'req_total{kind="solve"} 4' in text
+        assert "# TYPE lat_seconds histogram" in text
+        assert 'lat_seconds_bucket{le="0.1"} 1' in text
+        assert 'lat_seconds_bucket{le="+Inf"} 1' in text
+        assert "lat_seconds_sum 0.05" in text
+        assert "lat_seconds_count 1" in text
+
+    def test_shared_lock_snapshot_atomicity(self):
+        """A snapshot taken while the owner holds the shared lock waits:
+        multi-instrument updates inside owner critical sections can never
+        be observed torn."""
+        lock = threading.RLock()
+        reg = MetricsRegistry(lock=lock)
+        a, b = reg.counter("a_total"), reg.counter("b_total")
+        stop = threading.Event()
+
+        def writer():
+            while not stop.is_set():
+                with lock:              # a == b inside every critical section
+                    a.inc()
+                    b.inc()
+
+        t = threading.Thread(target=writer, daemon=True)
+        t.start()
+        try:
+            for _ in range(200):
+                snap = reg.snapshot()
+                assert snap["a_total"]["values"][""] == \
+                    snap["b_total"]["values"][""]
+        finally:
+            stop.set()
+            t.join(timeout=5.0)
+
+
+# ---------------------------------------------------------------------------
+# spans and the trace report
+# ---------------------------------------------------------------------------
+
+class TestSpans:
+
+    def test_nesting_and_parent_ids(self, tmp_path):
+        path = tmp_path / "trace.jsonl"
+        tr = Tracer(path)
+        with tr.span("outer") as outer:
+            with tr.span("inner") as inner:
+                assert inner.parent_id == outer.span_id
+        tr.close()
+        records = report.load_trace(path)
+        by_name = {r["name"]: r for r in records}
+        assert by_name["inner"]["parent"] == by_name["outer"]["id"]
+        assert by_name["outer"]["parent"] is None
+        # inner closed first and nests inside outer's interval
+        assert by_name["inner"]["ts"] >= by_name["outer"]["ts"]
+        assert by_name["inner"]["dur"] <= by_name["outer"]["dur"]
+
+    def test_record_span_cross_thread(self):
+        tr = Tracer()
+        root = tr.record_span("request", 1.0, 3.0, uid=7)
+        tr.record_span("queue", 1.0, 2.0, parent=root)
+        recs = tr.records()
+        assert recs[1]["parent"] == root
+        assert recs[1]["dur"] == pytest.approx(1.0)
+        assert recs[0]["tags"] == {"uid": 7}
+
+    def test_module_span_noop_without_tracer(self):
+        assert obs.current_tracer() is None
+        with obs.span("anything") as sp:     # must not raise
+            assert sp is None
+
+    def test_report_summarize(self):
+        records = [
+            {"type": "span", "name": "solve", "id": 1, "parent": None,
+             "ts": 0.0, "dur": 0.010, "tags": {"bucket": "cg:d=8"}},
+            {"type": "span", "name": "solve", "id": 2, "parent": None,
+             "ts": 1.0, "dur": 0.030, "tags": {"bucket": "cg:d=8"}},
+            {"type": "event", "kind": "solve", "ts": 0.01, "span": 1,
+             "tags": {"solver": "cg"}, "values": {"iterations": [3, 9, -1]}},
+        ]
+        s = report.summarize(records)
+        assert s["spans"]["solve"]["count"] == 2
+        assert s["spans"]["solve"]["p50_ms"] == pytest.approx(10.0)
+        assert s["events"] == {"solve": 1}
+        assert s["iterations_histogram"] == {"2-3": 1, "8-15": 1}  # -1 skipped
+        assert s["buckets"]["cg:d=8"]["count"] == 2
+        assert "solve" in report.format_summary(s)
+
+
+# ---------------------------------------------------------------------------
+# jit-safe events
+# ---------------------------------------------------------------------------
+
+class TestEvents:
+
+    def test_disabled_mode_stages_nothing(self):
+        """The zero-overhead guarantee: with observe off the jaxpr of a
+        routed solve contains no callback at all."""
+        A = jnp.eye(4) * 2.0
+        mv = lambda v: A @ v
+        jaxpr = str(jax.make_jaxpr(
+            lambda b: ls.route_solve("cg", mv, b))(jnp.ones(4)))
+        assert "callback" not in jaxpr
+
+    def test_enabled_mode_stages_callback(self):
+        A = jnp.eye(4) * 2.0
+        mv = lambda v: A @ v
+        with obs.observe(enabled=True):
+            jaxpr = str(jax.make_jaxpr(
+                lambda b: ls.route_solve("cg", mv, b))(jnp.ones(4)))
+        assert "callback" in jaxpr
+
+    def test_observe_handle_restores_state(self):
+        assert not obs.observing()
+        with obs.observe(enabled=True, iteration_events=True):
+            assert obs.observing() and obs.observing_iterations()
+            with obs.observe(enabled=False):
+                assert not obs.observing()
+            assert obs.observing()
+        assert not obs.observing() and not obs.observing_iterations()
+
+    def test_solve_event_matches_solve_info(self):
+        """Parity: the solve event carries exactly the SolveInfo the
+        caller gets — iterations, residual, convergence — under jit."""
+        rng = np.random.default_rng(0)
+        A = jnp.asarray(_spd(rng, 8))
+        b = jnp.asarray(rng.standard_normal(8))
+        mv = lambda v: A @ v
+        with obs.observe(enabled=True, record=True):
+            fn = jax.jit(lambda b: ls.route_solve(
+                "cg", mv, b, tol=1e-10, return_info=True))
+            x, info = fn(b)
+            jax.block_until_ready(x)
+            events = [e for e in obs.recorded() if e.kind == "solve"]
+        assert len(events) == 1
+        ev = events[0]
+        assert ev.tags["solver"] == "cg"
+        assert ev.tags["d"] == 8
+        assert int(np.asarray(ev.values["iterations"])) == \
+            int(info.iterations)
+        assert float(np.asarray(ev.values["residual"])) == \
+            pytest.approx(float(info.residual))
+        assert bool(np.asarray(ev.values["converged"])) == \
+            bool(info.converged)
+
+    def test_iteration_events_opt_in(self):
+        rng = np.random.default_rng(1)
+        A = jnp.asarray(_spd(rng, 6))
+        b = jnp.asarray(rng.standard_normal(6))
+        mv = lambda v: A @ v
+        with obs.observe(enabled=True, record=True):
+            x, info = ls.solve_cg(mv, b, tol=1e-10, return_info=True)
+            jax.block_until_ready(x)
+            assert not [e for e in obs.recorded() if e.kind == "iteration"]
+        with obs.observe(enabled=True, record=True, iteration_events=True):
+            x, info = ls.solve_cg(mv, b, tol=1e-10, return_info=True)
+            jax.block_until_ready(x)
+            steps = [e for e in obs.recorded() if e.kind == "iteration"]
+        assert len(steps) == int(info.iterations)
+
+    def test_backward_events_carry_direction_and_estimate(self):
+        def F(x, theta):
+            return theta - 1.25 * x      # A = 1.25: Neumann converges
+        x_star = jnp.asarray(4.8)
+        theta = (jnp.asarray(6.0),)
+        ct = jnp.asarray(1.0)
+        with obs.observe(enabled=True, record=True):
+            grads, info = diff_api.root_vjp(
+                F, x_star, theta, ct, solve="cg", backward="neumann_k",
+                backward_iters=4, error_estimate=True, return_info=True)
+            jax.block_until_ready(grads)
+            done = [e for e in obs.recorded() if e.kind == "backward_done"]
+        assert len(done) == 1
+        ev = done[0]
+        assert ev.tags["direction"] == "vjp"
+        assert ev.tags["backward"] == "neumann_k"
+        assert ev.tags["matvec_budget"] == 4
+        assert float(np.asarray(ev.values["hypergrad_error_estimate"])) == \
+            pytest.approx(float(info.hypergrad_error_estimate))
+
+    def test_events_bridge_into_global_registry(self):
+        rng = np.random.default_rng(2)
+        A = jnp.asarray(_spd(rng, 8))
+        b = jnp.asarray(rng.standard_normal(8))
+        with obs.observe(enabled=True):
+            x, info = ls.route_solve("cg", lambda v: A @ v, b, tol=1e-10,
+                                     return_info=True)
+            jax.block_until_ready(x)
+        snap = obs.global_registry().snapshot()
+        counts = snap["repro_events_total"]["values"]
+        assert counts['kind="solve",solver="cg"'] == 1
+        hist = snap["repro_solve_iterations"]["values"]['solver="cg"']
+        assert hist["count"] == 1
+        assert hist["sum"] == float(info.iterations)
+        assert tuple(hist["buckets"]) == ITERATION_BUCKETS
+
+    def test_subscriber_receives_events_and_unsubscribes(self):
+        seen = []
+        unsub = obs.subscribe(seen.append)
+        with obs.observe(enabled=True):
+            obs.emit("dispatch", {"solver": "cg"})
+        assert [e.kind for e in seen] == ["dispatch"]
+        unsub()
+        with obs.observe(enabled=True):
+            obs.emit("dispatch", {"solver": "cg"})
+        assert len(seen) == 1
+
+    def test_emit_noop_when_disabled(self):
+        obs.emit("dispatch", {"solver": "cg"})
+        assert obs.recorded() == ()
+        assert "repro_events_total" not in obs.global_registry().snapshot()
+
+
+# ---------------------------------------------------------------------------
+# solve service parity
+# ---------------------------------------------------------------------------
+
+class TestServiceObservability:
+
+    def test_request_spans_and_counters_match_results(self, tmp_path):
+        from repro.runtime.solve_service import SolveService
+
+        rng = np.random.default_rng(3)
+        d, n = 6, 5
+        path = tmp_path / "svc.jsonl"
+        with obs.observe(enabled=True, trace_path=path):
+            svc = SolveService()
+            futs = [svc.submit(_spd(rng, d), rng.standard_normal(d),
+                               positive_definite=True) for _ in range(n)]
+            svc.flush()
+            results = [f.result(timeout=30.0) for f in futs]
+            obs.current_tracer().flush()
+            records = report.load_trace(path)
+
+        # one lifecycle per request, with every segment parented under it
+        spans = [r for r in records if r["type"] == "span"]
+        requests = [s for s in spans if s["name"] == "request"]
+        assert len(requests) == n
+        ids = {s["id"] for s in requests}
+        for seg in ("admission", "queue", "solve", "delivery"):
+            segs = [s for s in spans if s["name"] == seg]
+            assert len(segs) == n
+            assert all(s["parent"] in ids for s in segs)
+        # span tags agree with the per-request SolveInfo
+        by_uid = {s["tags"]["uid"]: s for s in requests}
+        for r in results:
+            assert by_uid[r.uid]["tags"]["iterations"] == \
+                int(r.info.iterations)
+
+        # registry counters agree with the futures
+        m = svc.metrics
+        assert m["requests"] == n
+        assert m["instances"] == n
+        assert m["dispatches"] == 1
+        text = svc.registry.to_prometheus()
+        assert f"repro_service_requests_total {n}" in text
+        assert "repro_service_solve_seconds_count 1" in text
+
+    def test_metrics_property_is_frozen_copy(self):
+        from repro.runtime.solve_service import SolveService
+
+        svc = SolveService()
+        m = svc.metrics
+        m["requests"] = 999
+        assert svc.metrics["requests"] == 0
+
+    def test_snapshot_atomic_under_service_lock(self):
+        """metrics_snapshot must come from the SAME lock the dispatch
+        path updates under — a scrape during a dispatch critical section
+        sees either all of its updates or none."""
+        from repro.runtime.solve_service import SolveService
+
+        svc = SolveService()
+        with svc._lock:
+            svc._m_dispatches.inc()
+            svc._m_instances.inc(4)
+            snap = svc.metrics_snapshot()    # reentrant, consistent
+        assert snap["repro_service_dispatches_total"]["values"][""] == 1
+        assert snap["repro_service_instances_total"]["values"][""] == 4
+
+
+# ---------------------------------------------------------------------------
+# sharded solves: once per program, not per device
+# ---------------------------------------------------------------------------
+
+class TestShardedEventSemantics:
+
+    def test_one_solve_event_per_compiled_program(self):
+        from repro.distributed.sharded_operators import ShardedOperator
+        from repro.launch.mesh import make_solve_mesh
+
+        rng = np.random.RandomState(0)
+        Bn, d = 16, 6
+        C = jnp.asarray(rng.randn(Bn, d, d)) / np.sqrt(d)
+        A = jnp.einsum("bji,bjk->bik", C, C) + 0.5 * jnp.eye(d)
+        mesh = make_solve_mesh()
+        sh = ShardedOperator(ops.DenseOperator(A, positive_definite=True),
+                             mesh, P("data", None))
+        b = jnp.asarray(rng.randn(Bn, d))
+        with obs.observe(enabled=True, record=True):
+            x, info = ls.solve(sh, b, method="sharded_cg", tol=1e-10,
+                               return_info=True)
+            jax.block_until_ready(x)
+            events = [e for e in obs.recorded() if e.kind == "solve"]
+        # exactly ONE event for the whole program — not one per device —
+        # because the telemetry seam sits outside shard_map
+        assert len(events) == 1
+        ev = events[0]
+        assert ev.tags["solver"] == "sharded_cg"
+        assert ev.tags["mesh_size"] == mesh.size
+        assert ev.tags["B"] == Bn
+        # and its values are the gathered global diagnostics
+        np.testing.assert_array_equal(
+            np.asarray(ev.values["iterations"]), np.asarray(info.iterations))
+
+    def test_sharded_event_count_via_trace_file(self, tmp_path):
+        """The CI multidevice lane's acceptance criterion, asserted the
+        way an operator would check it: through the JSONL trace."""
+        from repro.distributed.sharded_operators import ShardedOperator
+        from repro.launch.mesh import make_solve_mesh
+
+        rng = np.random.RandomState(1)
+        Bn, d = 16, 5
+        C = jnp.asarray(rng.randn(Bn, d, d)) / np.sqrt(d)
+        A = jnp.einsum("bji,bjk->bik", C, C) + 0.5 * jnp.eye(d)
+        mesh = make_solve_mesh()
+        sh = ShardedOperator(ops.DenseOperator(A, positive_definite=True),
+                             mesh, P("data", None))
+        b = jnp.asarray(rng.randn(Bn, d))
+        path = tmp_path / "sharded.jsonl"
+        with obs.observe(enabled=True, trace_path=path):
+            x = ls.solve(sh, b, method="sharded_cg", tol=1e-10)
+            jax.block_until_ready(x)
+            obs.current_tracer().flush()
+            records = report.load_trace(path)
+        solves = [r for r in records
+                  if r["type"] == "event" and r["kind"] == "solve"]
+        assert len(solves) == 1
+        assert solves[0]["tags"]["mesh_size"] == mesh.size

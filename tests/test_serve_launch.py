@@ -1,0 +1,79 @@
+"""Subprocess smoke test for ``repro.launch.serve --solve-service``.
+
+Runs the real CLI end to end in a child process (its own scheduler
+thread, observability switch, tracer and registry — nothing shared with
+the test process) and checks the operator-facing contract: clean exit, a
+well-formed Prometheus exposition on stdout, and a JSONL trace that the
+report tooling can load and summarize.
+"""
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _run_serve(tmp_path, *extra):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    cmd = [sys.executable, "-m", "repro.launch.serve", "--solve-service",
+           "--requests", "8", "--dim", "8", *extra]
+    return subprocess.run(cmd, capture_output=True, text=True, env=env,
+                          timeout=300, cwd=tmp_path)
+
+
+def test_solve_service_cli_smoke(tmp_path):
+    trace = tmp_path / "trace.jsonl"
+    proc = _run_serve(tmp_path, "--trace", str(trace))
+    assert proc.returncode == 0, proc.stderr
+    out = proc.stdout
+
+    # both traffic waves ran, and the warm wave saw the cache
+    assert "[serve] cold:" in out
+    assert "[serve] warm:" in out
+    assert "hit_rate=" in out
+
+    # well-formed Prometheus exposition: typed counters with the expected
+    # request accounting (8 requests x 2 waves) and histogram series
+    assert "# TYPE repro_service_requests_total counter" in out
+    assert "repro_service_requests_total 16" in out
+    assert "# TYPE repro_service_solve_seconds histogram" in out
+    assert 'repro_service_solve_seconds_bucket{le="+Inf"}' in out
+    assert "repro_service_solve_seconds_count" in out
+    assert "# TYPE repro_service_cache_hits gauge" in out
+
+    # the trace is valid JSONL with request lifecycles and solve events
+    assert f"[serve] trace: {trace}" in out
+    records = [json.loads(line) for line in
+               trace.read_text().splitlines() if line.strip()]
+    assert records, "trace file is empty"
+    spans = [r for r in records if r["type"] == "span"]
+    requests = [s for s in spans if s["name"] == "request"]
+    assert len(requests) == 16
+    ids = {s["id"] for s in requests}
+    for seg in ("admission", "queue", "solve", "delivery"):
+        segs = [s for s in spans if s["name"] == seg]
+        assert len(segs) == 16
+        assert all(s["parent"] in ids for s in segs)
+    for s in spans:
+        assert s["dur"] >= 0.0
+    events = [r for r in records if r["type"] == "event"]
+    assert sum(1 for e in events if e["kind"] == "cache_miss") == 8
+    assert sum(1 for e in events if e["kind"] == "cache_hit") == 8
+
+    # the report tooling loads and summarizes the same file
+    from repro.observability import report
+    summary = report.summarize(report.load_trace(trace))
+    assert summary["spans"]["request"]["count"] == 16
+    assert summary["events"]["cache_hit"] == 8
+    assert summary["iterations_histogram"]
+
+
+def test_solve_service_cli_without_trace(tmp_path):
+    proc = _run_serve(tmp_path)
+    assert proc.returncode == 0, proc.stderr
+    assert "[serve] prometheus exposition:" in proc.stdout
+    assert "repro_service_requests_total 16" in proc.stdout
+    assert "[serve] trace:" not in proc.stdout
